@@ -1,0 +1,45 @@
+"""Benchmark 3 — cohort vs flat gradient exchange (the paper's effect, TPU).
+
+Two sources:
+* the asymmetry cost model (`repro.core.asymmetry`) — DCN bytes/chip for the
+  flat (naive "everyone crosses the fabric") vs cohort schedule, per arch;
+* measured dry-run JSONs when present (results/): DCN wire bytes of the
+  multi-pod train cells, which lower the cohort schedule.
+"""
+
+import glob
+import json
+import os
+
+from repro.core.asymmetry import TPUv5e, cohort_vs_flat_dcn_bytes
+
+
+def run(report):
+    hw = TPUv5e()
+    for arch, grad_gb in (
+        ("llama3-8b", 16.1),          # bf16 grads
+        ("deepseek-v3-671b", 1343.0),
+    ):
+        r = cohort_vs_flat_dcn_bytes(grad_gb * 1e9, pods=2, chips_per_pod=256)
+        flat_s = r["flat_dcn_bytes_per_chip"] / hw.dcn_bw_per_chip
+        coh_s = r["cohort_dcn_bytes_per_chip"] / hw.dcn_bw_per_chip
+        report(
+            f"collectives/{arch}_flat_dcn_s", flat_s * 1e6,
+            f"model: flat all-reduce spans DCN ({r['flat_dcn_bytes_per_chip'] / 1e9:.2f} GB/chip)",
+        )
+        report(
+            f"collectives/{arch}_cohort_dcn_s", coh_s * 1e6,
+            f"model: fragments only ({r['cohort_dcn_bytes_per_chip'] / 1e9:.3f} GB/chip, "
+            f"{r['reduction']:.0f}x less)",
+        )
+    # measured (if the dry-run has been run)
+    for path in sorted(glob.glob("results/*train_4k__2x16x16__sync.json")):
+        rec = json.load(open(path))
+        if "skipped" in rec:
+            continue
+        dcn = rec["parsed"]["dcn_wire_bytes_per_chip"]
+        report(
+            f"collectives/measured_dcn_{rec['arch']}",
+            dcn / hw.dcn_bw_per_chip * 1e6,
+            f"dry-run multi-pod cohort: {dcn / 1e9:.2f} GB/chip over DCN",
+        )

@@ -1,0 +1,47 @@
+"""Benchmark 5 — Pallas kernels (interpret mode): correctness deltas + block
+shape sweep. Wall times on CPU interpret mode are NOT TPU estimates; the
+derived column carries the VMEM working-set math that sizes the tiles.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def run(report):
+    B, T, H, K, d = 1, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, T, H, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, T, K, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, K, d), jnp.float32)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    for qb, kb in ((64, 64), (128, 128), (64, 256)):
+        t0 = time.perf_counter()
+        out = ops.flash_attention(q, k, v, True, 0, qb, kb, None)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        err = float(jnp.max(jnp.abs(out - expect)))
+        vmem_kb = (qb * d + kb * d + qb * kb + qb * d) * 4 / 1024
+        report(
+            f"kernel_bench/flash_qb{qb}_kb{kb}", dt * 1e6,
+            f"err={err:.1e} vmem_working_set={vmem_kb:.0f}KiB "
+            f"(v5e VMEM 16MiB)",
+        )
+
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 512, 256))) * 0.6 + 0.3
+    b = jax.random.normal(ks[1], (2, 512, 256)) * 0.1
+    h0 = jnp.zeros((2, 256))
+    expect = ref.rglru_scan_ref(a, b, h0)
+    for tb in (128, 256):
+        t0 = time.perf_counter()
+        from repro.kernels.rglru_scan import rglru_scan_fwd
+
+        out = rglru_scan_fwd(a, b, h0, t_block=tb, w_block=256, interpret=True)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        err = float(jnp.max(jnp.abs(out - expect)))
+        report(f"kernel_bench/rglru_tb{tb}", dt * 1e6,
+               f"err={err:.1e} vmem={3 * tb * 256 * 4 / 1024:.0f}KiB")

@@ -1,0 +1,87 @@
+"""Benchmark 2 — throughput & fairness: ALock vs naive-rCAS vs RPC vs filter.
+
+Remote operations carry an injected latency (RDMA is ~10× local access,
+paper §1), so the comparison reflects the asymmetry the design targets.
+Reported: critical sections/second and a Jain fairness index over per-thread
+acquisition counts.
+"""
+
+import random
+import threading
+import time
+
+from repro.core import (
+    ALock,
+    AsymmetricMemory,
+    FilterLock,
+    NaiveRCASLock,
+    RPCLock,
+    make_scheduler,
+)
+
+REMOTE_DELAY = 20e-6  # 20 µs per remote op
+
+
+def _latency_sched(rng):
+    base = make_scheduler(rng, 0.05)
+    return base
+
+
+class _DelayMem(AsymmetricMemory):
+    def rread(self, p, reg):
+        time.sleep(REMOTE_DELAY)
+        return super().rread(p, reg)
+
+    def rwrite(self, p, reg, value):
+        time.sleep(REMOTE_DELAY)
+        super().rwrite(p, reg, value)
+
+    def rcas(self, p, reg, expected, swap):
+        time.sleep(REMOTE_DELAY)
+        return super().rcas(p, reg, expected, swap)
+
+
+def _bench(kind, nodes, seconds=1.0, seed=0):
+    rng = random.Random(seed)
+    mem = _DelayMem(3, sched=_latency_sched(rng))
+    procs = [mem.spawn(n) for n in nodes]
+    if kind == "alock":
+        lock = ALock(mem, 0, init_budget=4)
+    elif kind == "naive":
+        lock = NaiveRCASLock(mem, 0)
+    elif kind == "rpc":
+        lock = RPCLock(mem, 0)
+    elif kind == "filter":
+        lock = FilterLock(mem, 0, [p.pid for p in procs])
+    counts = [0] * len(procs)
+    stop = threading.Event()
+
+    def worker(i):
+        p = procs[i]
+        while not stop.is_set():
+            lock.lock(p)
+            counts[i] += 1
+            lock.unlock(p)
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(len(procs))]
+    t0 = time.time()
+    for t in ts:
+        t.start()
+    time.sleep(seconds)
+    stop.set()
+    for t in ts:
+        t.join()
+    dt = time.time() - t0
+    if kind == "rpc":
+        lock.shutdown()
+    total = sum(counts)
+    jain = (total ** 2) / (len(counts) * sum(c * c for c in counts)) if total else 0
+    return total / dt, jain
+
+
+def run(report):
+    nodes = [0, 0, 0, 1, 1, 2]  # 3 local, 3 remote
+    for kind in ("alock", "naive", "rpc", "filter"):
+        thr, jain = _bench(kind, nodes, seconds=0.8)
+        report(f"lock_compare/{kind}_cs_per_sec", 1e6 / max(thr, 1e-9),
+               f"throughput={thr:.0f}/s jain_fairness={jain:.3f}")

@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV.  Modules:
+
+  lock_ops      — RDMA-op cost claims (paper §3.1)         [the paper's table]
+  lock_compare  — throughput/fairness vs naive/RPC/filter  (paper §1, §3, §4)
+  collectives   — cohort vs flat DCN traffic               (TPU adaptation)
+  step_bench    — end-to-end step times (CPU, smoke configs)
+  kernel_bench  — Pallas kernels: tiles + correctness
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    rows = []
+
+    def report(name, us_per_call, derived=""):
+        rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.3f},{derived}")
+
+    from . import collectives, kernel_bench, lock_compare, lock_ops, step_bench
+
+    failures = []
+    for mod in (lock_ops, lock_compare, collectives, step_bench, kernel_bench):
+        try:
+            mod.run(report)
+        except Exception:
+            traceback.print_exc()
+            failures.append(mod.__name__)
+    if failures:
+        print(f"BENCHMARK FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+    print(f"# {len(rows)} benchmark rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""The paper's primitive in action: an asymmetric lock service coordinating
+checkpoint writers across simulated hosts.
+
+Four hosts run training shards; host 0 owns the checkpoint store (the
+"local class" — zero fabric operations), hosts 1-3 are remote.  Every epoch
+each host tries to become the writer; the ALock + election guarantee exactly
+one writer with the per-class optimal cost the paper proves.
+
+    PYTHONPATH=src python examples/lock_service.py
+"""
+
+import threading
+import time
+
+from repro.coord import CoordinationService
+
+
+def main():
+    svc = CoordinationService(num_hosts=4, init_budget=3)
+    results = {}
+    lock_stats = {}
+
+    def host(h):
+        p = svc.host_process(h)
+        wins = []
+        for epoch in range(1, 6):
+            # simulate a training epoch
+            time.sleep(0.01 * (1 + h % 2))
+            if svc.elect("ckpt-writer", p, epoch=epoch, home_host=0):
+                wins.append(epoch)
+                time.sleep(0.005)  # "write the checkpoint"
+        results[h] = wins
+        lock_stats[h] = (p.counts.rdma_ops, p.counts.local_ops)
+
+    ts = [threading.Thread(target=host, args=(h,)) for h in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+
+    print("epoch winners per host:", results)
+    all_wins = sorted(w for ws in results.values() for w in ws)
+    assert all_wins == [1, 2, 3, 4, 5], "exactly one writer per epoch"
+    print("\nper-host fabric cost (RDMA ops, local ops):")
+    for h in range(4):
+        r, l = lock_stats[h]
+        cls = "LOCAL " if h == 0 else "remote"
+        print(f"  host {h} [{cls}]: rdma={r:4d} local={l:4d}")
+    assert lock_stats[0][0] == 0, "local host must never touch the fabric"
+    print("\nOK: one writer/epoch; the store-owning host used 0 RDMA ops.")
+
+
+if __name__ == "__main__":
+    main()

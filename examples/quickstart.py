@@ -1,0 +1,38 @@
+"""Quickstart: train a small LM for 30 steps and watch the loss fall.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch llama3.2-1b]
+
+Uses the reduced ("smoke") config of any assigned architecture; runs on one
+CPU device.  The same `train` entry point drives the production meshes.
+"""
+
+import argparse
+
+from repro.configs import RunConfig, ShapeConfig
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+
+    out = train(
+        args.arch,
+        smoke=True,
+        steps=args.steps,
+        shape=ShapeConfig("quickstart", seq_len=64, global_batch=8, kind="train"),
+        run=RunConfig(
+            learning_rate=1e-3, warmup_steps=5, total_steps=args.steps,
+            checkpoint_every=10 ** 9, checkpoint_dir="/tmp/repro_quickstart",
+        ),
+        log_every=5,
+    )
+    losses = [h["loss"] for h in out["history"]]
+    print(f"\nquickstart: loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({'LEARNING' if losses[-1] < losses[0] else 'NOT LEARNING'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""End-to-end driver: train a ~100M-parameter llama-family model for a few
+hundred steps with checkpointing + resume (deliverable (b)'s e2e driver).
+
+    PYTHONPATH=src python examples/train_lm.py              # ~100M, 200 steps
+    PYTHONPATH=src python examples/train_lm.py --tiny       # CI-scale
+    PYTHONPATH=src python examples/train_lm.py --resume     # restart demo
+
+The ~100M config is the llama3.2-1b family at reduced width/depth (same
+block structure, GQA ratio and tied embeddings).  On one CPU device this is
+minutes/step at the full setting — use --tiny for a fast demonstration; the
+flag changes scale only, not code paths.
+"""
+
+import argparse
+
+from repro.configs import RunConfig, ShapeConfig, get_config
+from repro.launch.train import train
+from repro.models import Model, param_count
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    if args.tiny:
+        overrides = dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                         d_ff=128, vocab_size=512)
+        steps = args.steps or 30
+        shape = ShapeConfig("e2e", seq_len=64, global_batch=8, kind="train")
+    else:
+        # ~100M params: 12L, d=768, untouched llama3.2 structure otherwise.
+        overrides = dict(num_layers=12, d_model=768, num_heads=12,
+                         num_kv_heads=4, d_ff=2048, vocab_size=32768)
+        steps = args.steps or 200
+        shape = ShapeConfig("e2e", seq_len=256, global_batch=16, kind="train")
+
+    import repro.configs.llama32_1b as base
+
+    cfg = base.CONFIG.with_overrides(**overrides)
+    n = param_count(Model(cfg).specs())
+    print(f"[train_lm] model: {n / 1e6:.1f}M params, {steps} steps")
+
+    # register a transient arch the driver can look up
+    import repro.configs as configs
+
+    configs._MODULES["_train_lm"] = "llama32_1b"
+    orig_get = configs.get_config
+
+    def patched(arch, smoke=False):
+        if arch == "_train_lm":
+            return cfg
+        return orig_get(arch, smoke)
+
+    configs.get_config = patched
+    import repro.launch.train as train_mod
+
+    train_mod.get_config = patched
+
+    out = train(
+        "_train_lm",
+        smoke=False,
+        steps=steps,
+        shape=shape,
+        run=RunConfig(
+            learning_rate=6e-4, warmup_steps=max(10, steps // 20),
+            total_steps=steps, checkpoint_every=max(10, steps // 4),
+            checkpoint_dir=args.ckpt_dir,
+        ),
+        resume=args.resume,
+        log_every=max(1, steps // 20),
+    )
+    losses = [h["loss"] for h in out["history"]]
+    print(f"[train_lm] loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    assert losses[-1] < losses[0], "training failed to reduce loss"
+
+
+if __name__ == "__main__":
+    main()

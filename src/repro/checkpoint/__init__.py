@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing with ALock-elected writers."""
+
+from .ckpt import CheckpointManager, load_checkpoint, save_checkpoint  # noqa: F401

@@ -1,0 +1,3 @@
+"""Host-level coordination built on the paper's ALock (control plane)."""
+
+from .service import Barrier, CoordinationService  # noqa: F401

@@ -1,0 +1,107 @@
+"""Coordination service: named asymmetric locks for the training control plane.
+
+This is where the paper's primitive earns its keep inside the framework.  A
+multi-host training job has exactly the asymmetry the paper models: one host
+*owns* a given coordination record (the checkpoint manifest, the membership
+epoch — "local" class, fast access), every other host reaches it over the
+fabric ("remote" class).  Using ALock means the owning host's control loop
+never pays a fabric round-trip, remote hosts pay a small bounded number of
+one-sided ops, and the budget guarantees neither class starves the other —
+precisely the paper's design goals, applied to checkpoint-writer election and
+elastic-membership barriers.
+
+Hosts are simulated by threads over :class:`repro.core.AsymmetricMemory`; on a
+real deployment the same algorithm runs over RDMA verbs (the memory API is the
+paper's register model).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Optional
+
+from repro.core import ALock, AsymmetricMemory, Process
+
+
+class CoordinationService:
+    """Named ALocks + election + barriers over one asymmetric memory."""
+
+    def __init__(self, num_hosts: int, init_budget: int = 4, sched=None):
+        self.num_hosts = num_hosts
+        self.mem = AsymmetricMemory(num_hosts, sched=sched)
+        self._locks: Dict[str, ALock] = {}
+        self._claims: Dict[str, object] = {}
+        self._init_budget = init_budget
+        self._guard = threading.Lock()
+
+    def host_process(self, host: int) -> Process:
+        """One coordination process per host (call once per host thread)."""
+        return self.mem.spawn(host)
+
+    def lock(self, name: str, home_host: int = 0) -> ALock:
+        with self._guard:
+            lk = self._locks.get(name)
+            if lk is None:
+                lk = ALock(
+                    self.mem, home_host, self._init_budget, name=f"svc.{name}"
+                )
+                self._locks[name] = lk
+            assert lk.home_node == home_host, f"lock {name} homed elsewhere"
+            return lk
+
+    # ------------------------------------------------------------- election
+    def elect(self, name: str, p: Process, epoch: int, home_host: int = 0) -> bool:
+        """First-past-the-post election for ``epoch`` (e.g. checkpoint writer).
+
+        Exactly one caller per epoch returns True.  The claim register lives on
+        ``home_host``; the ALock around it gives each class its cost-optimal
+        path per the paper.
+        """
+        lk = self.lock(name, home_host)
+        key = f"svc.{name}.claim"
+        with self._guard:
+            reg = self._claims.get(key)
+            if reg is None:
+                reg = self.mem.alloc(home_host, key, -1)
+                self._claims[key] = reg
+        with lk.guard(p):
+            cur = self.mem.auto_read(p, reg)
+            if cur < epoch:
+                self.mem.auto_write(p, reg, epoch)
+                return True
+            return False
+
+
+class Barrier:
+    """Sense-reversing barrier whose count register is guarded by an ALock.
+
+    Used for elastic-membership epochs: all surviving hosts must arrive before
+    the job re-meshes.  The count update runs in an ALock critical section
+    (read-modify-write of a shared record under operation asymmetry — the
+    exact situation where a naive mixed CAS would be unsound, Table 1).
+    """
+
+    def __init__(self, svc: CoordinationService, name: str, parties: int, home_host: int = 0):
+        self.svc = svc
+        self.parties = parties
+        self.lock = svc.lock(f"{name}.bar", home_host)
+        self.count = svc.mem.alloc(home_host, f"{name}.count", 0)
+        self.generation = svc.mem.alloc(home_host, f"{name}.gen", 0)
+
+    def wait(self, p: Process, timeout: float = 30.0) -> int:
+        mem = self.svc.mem
+        with self.lock.guard(p):
+            gen = mem.auto_read(p, self.generation)
+            n = mem.auto_read(p, self.count) + 1
+            if n == self.parties:
+                mem.auto_write(p, self.count, 0)
+                mem.auto_write(p, self.generation, gen + 1)
+                return gen
+            mem.auto_write(p, self.count, n)
+        deadline = time.monotonic() + timeout
+        while mem.auto_read(p, self.generation) == gen:
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"barrier timeout (gen {gen}, {n}/{self.parties})")
+            time.sleep(0)
+        return gen

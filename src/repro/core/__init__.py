@@ -1,0 +1,50 @@
+"""Core library: the paper's asymmetric mutual exclusion, faithfully, plus its
+TPU-fabric adaptation (cohort-scheduled collectives and budgeted sync).
+
+Control plane (simulated RDMA, host-level):
+    AsymmetricMemory, Process, OpCounts — operation-asymmetric registers
+    ALock                              — the paper's primitive (Alg. 1 + 2)
+    NaiveRCASLock / RPCLock / FilterLock — the paper's comparison points
+    modelcheck.check                    — explicit-state check of the PlusCal spec
+
+Data plane (JAX, multi-pod):
+    cohort_all_reduce / flat_all_reduce — hierarchical vs flat schedules
+    SyncConfig, pod_sync_grads, pod_average_params, wrap_step_with_pod_sync
+    TPUv5e and the asymmetry cost model
+"""
+
+from .memory import (  # noqa: F401
+    NULLPTR,
+    AsymmetricMemory,
+    OpCounts,
+    OperationNotEnabled,
+    Process,
+    Register,
+    make_scheduler,
+)
+from .mcs import BudgetedMCSLock  # noqa: F401
+from .peterson import ModifiedPetersonLock  # noqa: F401
+from .alock import (  # noqa: F401
+    ALock,
+    BrokenMixedCASLock,
+    FilterLock,
+    NaiveRCASLock,
+    RPCLock,
+)
+from .asymmetry import (  # noqa: F401
+    TPUv5e,
+    all_gather_wire_bytes,
+    all_to_all_wire_bytes,
+    allreduce_wire_bytes,
+    cohort_vs_flat_dcn_bytes,
+    reduce_scatter_wire_bytes,
+)
+from .cohort import (  # noqa: F401
+    SyncConfig,
+    cohort_all_reduce,
+    flat_all_reduce,
+    pod_average_params,
+    pod_sync_grads,
+    wrap_step_with_pod_sync,
+)
+from . import modelcheck  # noqa: F401

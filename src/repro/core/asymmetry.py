@@ -1,0 +1,88 @@
+"""Operation-asymmetry cost model for the TPU fabric (paper §2 → TPU).
+
+The paper's local/remote asymmetry maps onto the TPU interconnect hierarchy:
+intra-pod ICI (the "local" class — fast, wraparound torus) vs inter-pod DCN
+(the "remote" class — roughly an order of magnitude slower per chip, exactly
+the local:RDMA cost ratio the paper cites for RDMA vs local memory access).
+
+These constants and formulas feed the roofline analysis (launch/roofline.py)
+and the napkin math recorded in EXPERIMENTS.md §Perf.  Collective cost uses
+the standard bandwidth-optimal algorithm factors:
+
+* all-reduce over axis of size ``a``: ``2 (a-1)/a × bytes`` on the wire
+* reduce-scatter / all-gather:        ``(a-1)/a × bytes``
+* all-to-all:                          ``(a-1)/a × bytes`` (each chip keeps 1/a)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TPUv5e:
+    """Per-chip hardware constants (the assignment's grading targets)."""
+
+    peak_flops_bf16: float = 197e12     # FLOP/s
+    hbm_bw: float = 819e9               # B/s
+    ici_bw_per_link: float = 50e9       # B/s per ICI link (~unidirectional)
+    ici_links_per_axis: int = 1         # links usable per mesh axis direction
+    dcn_bw_per_chip: float = 6.25e9     # B/s per chip across pods (~ICI/8)
+    hbm_bytes: float = 16e9             # HBM capacity
+
+    # ------------------------------------------------------------- rooflines
+    def compute_time(self, flops: float, chips: int = 1) -> float:
+        return flops / (chips * self.peak_flops_bf16)
+
+    def memory_time(self, bytes_: float, chips: int = 1) -> float:
+        return bytes_ / (chips * self.hbm_bw)
+
+    def collective_time(self, wire_bytes_per_chip: float, *, inter_pod: bool = False) -> float:
+        """Time for ``wire_bytes_per_chip`` already adjusted by algo factors."""
+        bw = self.dcn_bw_per_chip if inter_pod else (
+            self.ici_bw_per_link * self.ici_links_per_axis
+        )
+        return wire_bytes_per_chip / bw
+
+
+def allreduce_wire_bytes(payload_bytes: float, axis: int) -> float:
+    """Per-chip wire bytes for a bandwidth-optimal all-reduce (RS+AG)."""
+    return 2.0 * (axis - 1) / axis * payload_bytes
+
+
+def reduce_scatter_wire_bytes(payload_bytes: float, axis: int) -> float:
+    return (axis - 1) / axis * payload_bytes
+
+
+def all_gather_wire_bytes(payload_bytes: float, axis: int) -> float:
+    """payload_bytes = the *gathered* (full) size; each chip holds 1/axis."""
+    return (axis - 1) / axis * payload_bytes
+
+
+def all_to_all_wire_bytes(payload_bytes: float, axis: int) -> float:
+    return (axis - 1) / axis * payload_bytes
+
+
+def cohort_vs_flat_dcn_bytes(
+    grad_bytes: float, pods: int, chips_per_pod: int
+) -> dict:
+    """Napkin math for the paper's headline effect, TPU-adapted.
+
+    Flat all-reduce over ``pods × chips_per_pod`` chips treats DCN and ICI
+    uniformly: every chip's full gradient participates in a ring spanning the
+    DCN, so the slow fabric carries ``2 (n-1)/n × grad_bytes`` per chip.
+
+    The cohort schedule (this framework): intra-pod reduce-scatter elects each
+    chip "leader" of a ``1/chips_per_pod`` fragment; only fragments cross the
+    DCN (all-reduce over the pod axis); an intra-pod all-gather redistributes.
+    DCN traffic per chip drops by ``chips_per_pod``× — the analogue of the
+    paper's local processes never touching the RNIC.
+    """
+    n = pods * chips_per_pod
+    flat_dcn = allreduce_wire_bytes(grad_bytes, n)  # worst-case: ring over DCN
+    cohort_dcn = allreduce_wire_bytes(grad_bytes / chips_per_pod, pods)
+    return {
+        "flat_dcn_bytes_per_chip": flat_dcn,
+        "cohort_dcn_bytes_per_chip": cohort_dcn,
+        "reduction": flat_dcn / cohort_dcn,
+    }

@@ -1,0 +1,242 @@
+"""Cohort-scheduled collectives — the paper's technique on the TPU fabric.
+
+The paper synchronises two asymmetric classes by (1) electing a leader inside
+each class with a mechanism optimal for that class, (2) running a minimal
+2-party protocol between leaders, and (3) bounding consecutive same-class
+hand-offs with a *budget*.  On a multi-pod TPU mesh the classes are the two
+fabrics — intra-pod ICI ("local") and inter-pod DCN ("remote") — and the
+technique becomes a hierarchical gradient-exchange schedule:
+
+1. **cohort election** — intra-pod reduce-scatter: each chip becomes leader
+   ("queue head") of a ``1/|data|`` fragment of the gradient;
+2. **global protocol** — the per-fragment exchange over the ``pod`` axis only
+   (2 pods ⇔ Peterson's two parties); only leaders touch the slow fabric,
+   and only with their fragment;
+3. **hand-off** — intra-pod all-gather redistributes the reduced fragment
+   (the MCS lock pass: a local write, never a remote one);
+4. **budget** — ``sync_budget`` local steps between DCN exchanges
+   (``budget=1`` ⇔ exact synchronous DP; ``budget>1`` ⇔ bounded-staleness
+   local sync, the fairness guarantee that the slow fabric is served at
+   least every ``budget`` steps and stragglers stall the world at most that
+   often).
+
+Two integration points:
+
+* :func:`cohort_all_reduce` — the standalone bucketed primitive (fully manual
+  ``shard_map``), numerically equal to a flat ``psum`` over both axes; used by
+  the collectives benchmark and tests.
+* :func:`pod_sync` / :class:`BudgetedSync` — the trainer integration, called
+  inside a ``shard_map`` whose only *manual* axis is ``pod`` (data/model axes
+  stay under GSPMD, which implements the intra-pod reduce-scatter/all-gather
+  as part of FSDP); supports int8 error-feedback compression so the DCN hop
+  carries a quarter of the bytes (paper analogy: minimise *remote* operations,
+  never touch local ones).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+# --------------------------------------------------------------------------
+# Standalone primitive: bucketed cohort all-reduce (fully manual shard_map)
+# --------------------------------------------------------------------------
+def _flatten_bucket(tree) -> Tuple[jnp.ndarray, Any, Sequence[Tuple[Tuple[int, ...], Any]]]:
+    """Flatten a pytree into one fp32 bucket (DDP-style) for one fused RS/AG."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [(l.shape, l.dtype) for l in leaves]
+    flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves])
+    return flat, treedef, shapes
+
+
+def _unflatten_bucket(flat, treedef, shapes):
+    out, off = [], 0
+    for shape, dtype in shapes:
+        n = int(np.prod(shape)) if shape else 1
+        out.append(flat[off : off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def _cohort_body(flat: jnp.ndarray, cohort_axis: str, global_axis: str) -> jnp.ndarray:
+    """RS(cohort) → AR(global, fragment) → AG(cohort). Shapes: [n] → [n]."""
+    frag = lax.psum_scatter(flat, cohort_axis, scatter_dimension=0, tiled=True)
+    frag = lax.psum(frag, global_axis)          # leaders' 2-party exchange
+    return lax.all_gather(frag, cohort_axis, axis=0, tiled=True)
+
+
+def cohort_all_reduce(
+    tree,
+    mesh: Mesh,
+    cohort_axis: str = "data",
+    global_axis: str = "pod",
+    other_axes: Sequence[str] = (),
+):
+    """Hierarchical all-reduce of a (replicated) pytree over cohort+global axes.
+
+    Numerically equivalent to ``psum(tree, (cohort_axis, global_axis))`` but
+    with the explicit 3-phase schedule above.  ``other_axes`` are mesh axes the
+    values are replicated over (e.g. "model"); the reduction does not touch
+    them.  The bucket is zero-padded to a multiple of the cohort size.
+    """
+    cohort = mesh.shape[cohort_axis]
+
+    def body(tree_in):
+        flat, treedef, shapes = _flatten_bucket(tree_in)
+        pad = (-flat.shape[0]) % cohort
+        flat = jnp.pad(flat, (0, pad))
+        red = _cohort_body(flat, cohort_axis, global_axis)
+        red = red[: red.shape[0] - pad] if pad else red
+        return _unflatten_bucket(red, treedef, shapes)
+
+    # All mesh axes manual: the body is a pure collective schedule and the
+    # value is replicated over every axis it does not reduce.
+    spec = P()  # replicated in; replicated out (a true all-reduce)
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(spec,),
+        out_specs=spec,
+        axis_names=frozenset(mesh.axis_names),
+        check_vma=False,
+    )
+    return fn(tree)
+
+
+def flat_all_reduce(tree, mesh: Mesh, axes: Sequence[str] = ("pod", "data")):
+    """The paper-baseline: one flat psum spanning both fabrics (the analogue
+    of every process hammering the global word with rCAS)."""
+    fn = jax.shard_map(
+        lambda t: jax.tree.map(lambda x: lax.psum(x, tuple(axes)), t),
+        mesh=mesh,
+        in_specs=(P(),),
+        out_specs=P(),
+        axis_names=frozenset(mesh.axis_names),
+        check_vma=False,
+    )
+    return fn(tree)
+
+
+# --------------------------------------------------------------------------
+# Trainer integration: pod-axis sync with budget + compression
+# --------------------------------------------------------------------------
+class SyncConfig(NamedTuple):
+    """How the trainer crosses the slow fabric.
+
+    mode:
+      "none"     — single-pod / no pod axis: no-op.
+      "sync"     — exact: psum gradients over the pod axis every step (the
+                   cohort schedule emerges from FSDP sharding + this psum
+                   acting on data-sharded fragments).
+      "local"    — budgeted: gradients stay intra-pod; parameters are
+                   pod-averaged every ``budget`` steps (bounded staleness,
+                   straggler mitigation; exactness is traded for DCN quiet).
+    compress_int8: apply int8 error-feedback compression to the DCN payload.
+    budget: local steps between DCN syncs (must be ≥ 1).
+    """
+
+    mode: str = "sync"
+    budget: int = 1
+    compress_int8: bool = False
+    pod_axis: str = "pod"
+
+
+def _ef_quantize(x: jnp.ndarray, err: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """int8 quantisation with error feedback. Returns (q, scale, new_err)."""
+    y = x + err
+    scale = jnp.maximum(jnp.max(jnp.abs(y)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(y / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(x.dtype) * scale.astype(x.dtype)
+    return q, scale, y - deq
+
+
+def _pod_mean_int8_ef(x: jnp.ndarray, err: jnp.ndarray, axis_name: str):
+    """Pod-mean of ``x`` where the wire carries int8 + one fp32 scale.
+
+    all_gather of the quantised payload (P·n int8 bytes on the wire instead of
+    2(P-1)/P·4n for an fp32 psum — 4× less for P=2) then a local dequant-sum.
+    """
+    q, scale, new_err = _ef_quantize(x, err)
+    qs = lax.all_gather(q, axis_name, axis=0)          # [P, ...] int8
+    ss = lax.all_gather(scale, axis_name, axis=0)      # [P]
+    npods = qs.shape[0]
+    deq = (qs.astype(x.dtype) * ss.reshape((npods,) + (1,) * x.ndim).astype(x.dtype))
+    return jnp.sum(deq, axis=0) / npods, new_err
+
+
+def pod_sync_grads(grads, cfg: SyncConfig, ef_state=None):
+    """Cross-pod gradient exchange (call inside a manual-``pod`` shard_map).
+
+    Returns (synced_grads, new_ef_state).  Gradients are *averaged* over the
+    pod axis.  With ``compress_int8`` the DCN hop carries int8 payloads with
+    per-leaf error-feedback residuals (``ef_state``).
+    """
+    if cfg.mode != "sync":
+        return grads, ef_state
+    if not cfg.compress_int8:
+        return jax.tree.map(lambda g: lax.pmean(g, cfg.pod_axis), grads), ef_state
+    if ef_state is None:
+        ef_state = jax.tree.map(jnp.zeros_like, grads)
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e, _ = jax.tree.flatten(ef_state)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        m, ne = _pod_mean_int8_ef(g, e, cfg.pod_axis)
+        out_g.append(m)
+        out_e.append(ne)
+    return jax.tree.unflatten(tdef, out_g), jax.tree.unflatten(tdef, out_e)
+
+
+def pod_average_params(params, cfg: SyncConfig, step: jnp.ndarray):
+    """Budgeted parameter averaging ("local" mode): every ``budget`` steps the
+    pods reconcile (the paper's ``pReacquire`` — the slow fabric is served on
+    a bound, never starved)."""
+    if cfg.mode != "local":
+        return params
+    do_sync = (step % cfg.budget) == (cfg.budget - 1)
+
+    def avg(p):
+        return jax.tree.map(lambda x: lax.pmean(x, cfg.pod_axis), p)
+
+    return lax.cond(do_sync, avg, lambda p: p, params)
+
+
+def wrap_step_with_pod_sync(
+    step_fn: Callable,
+    mesh: Mesh,
+    cfg: SyncConfig,
+    batch_spec,
+    state_pod_spec=P(),
+):
+    """Lift a single-pod train step to the multi-pod mesh.
+
+    ``step_fn(state, batch) -> (state, metrics)`` is written for the
+    (data, model) axes under GSPMD.  This wrapper shard_maps it with ``pod``
+    as the only manual axis: the batch splits across pods, gradients/params
+    cross the DCN only through :func:`pod_sync_grads` /
+    :func:`pod_average_params` calls that ``step_fn`` performs via the
+    injected ``cfg``.  Metrics are pod-averaged.
+    """
+    if cfg.pod_axis not in mesh.shape:
+        return step_fn  # single-pod: nothing to lift
+
+    def lifted(state, batch):
+        new_state, metrics = step_fn(state, batch)
+        metrics = jax.tree.map(lambda m: lax.pmean(m, cfg.pod_axis), metrics)
+        return new_state, metrics
+
+    return jax.shard_map(
+        lifted,
+        mesh=mesh,
+        in_specs=(state_pod_spec, batch_spec),
+        out_specs=(state_pod_spec, P()),
+        axis_names=frozenset({cfg.pod_axis}),
+        check_vma=False,
+    )

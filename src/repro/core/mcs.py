@@ -1,0 +1,157 @@
+"""Budgeted MCS queue lock (paper Algorithm 2).
+
+One instance per *class* (local / remote).  The queue tail register lives on
+the lock's home node and **doubles as the Peterson "interested" flag** for its
+class (the paper's ``cohort[2]`` array).  Each process owns a remotely
+accessible descriptor ``{budget, next}`` residing in its *own* node's memory
+partition, so after enqueueing a process spins **locally** — the paper's key
+property that removes remote spinning and its network traffic.
+
+Operation costs (verified by ``benchmarks/lock_ops.py``):
+
+* lone remote acquire:   1 rCAS
+* queued remote acquire: 1 rCAS + 1 rWrite (link), then local spinning only
+* remote release:        ≤ 1 rCAS + 1 rWrite
+* any local-class call:  0 RDMA operations (auto-dispatch resolves every
+  access to the local class's registers as a machine-local op)
+
+The ``budget`` (Dice et al.'s lock-cohorting bound) caps consecutive same-class
+hand-offs: a process handed a budget of 0 must call ``p_reacquire`` on the
+global (Peterson) lock before entering, yielding to the other class if it is
+waiting — this is what makes the combined primitive fair.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+from .memory import NULLPTR, AsymmetricMemory, Process, Register
+
+
+class _Descriptor:
+    """Remotely-accessible MCS descriptor: two registers on the owner's node."""
+
+    __slots__ = ("budget", "next")
+
+    def __init__(self, budget: Register, nxt: Register):
+        self.budget = budget
+        self.next = nxt
+
+
+def _spin_wait() -> None:
+    # Release the GIL so the holder can make progress; models local spinning.
+    time.sleep(0)
+
+
+class BudgetedMCSLock:
+    """Paper Algorithm 2 — budgeted MCS queue lock over asymmetric memory.
+
+    ``p_reacquire`` is the hook into the enclosing modified Peterson's lock
+    (Algorithm 1 line 12); it is injected by :class:`repro.core.alock.ALock`
+    after construction to break the circular dependency, mirroring how the
+    paper embeds the cohort lock *inside* the global lock.
+    """
+
+    def __init__(
+        self,
+        mem: AsymmetricMemory,
+        tail: Register,
+        init_budget: int,
+        name: str,
+    ):
+        if init_budget <= 0:
+            raise ValueError("InitialBudget must be > 0 (PlusCal ASSUME)")
+        self.mem = mem
+        self.tail = tail  # == cohort[cid]: non-null ⇔ class is "interested"
+        self.init_budget = init_budget
+        self.name = name
+        self.p_reacquire: Optional[Callable[[Process], None]] = None
+        self._descs: Dict[int, _Descriptor] = {}
+        self._desc_guard = __import__("threading").Lock()
+
+    # ------------------------------------------------------------ descriptors
+    def _desc(self, p: Process) -> _Descriptor:
+        """The calling process's own descriptor (allocated on its node)."""
+        d = self._descs.get(p.pid)
+        if d is None:
+            with self._desc_guard:
+                d = self._descs.get(p.pid)
+                if d is None:
+                    prefix = f"{self.name}.desc.p{p.pid}"
+                    d = _Descriptor(
+                        budget=self.mem.alloc(p.node, f"{prefix}.budget", -1),
+                        nxt=self.mem.alloc(p.node, f"{prefix}.next", NULLPTR),
+                    )
+                    self._descs[p.pid] = d
+        return d
+
+    def _desc_of(self, handle: Any) -> _Descriptor:
+        """Dereference a descriptor handle found in shared memory."""
+        return self._descs[handle]
+
+    # -------------------------------------------------------------------- API
+    def q_lock(self, p: Process) -> bool:
+        """Acquire the cohort lock.
+
+        Returns ``True`` iff the queue was empty at the outset — the caller is
+        the class *leader* and must engage the global Peterson protocol
+        (Algorithm 1 line 5).  ``False`` means the global lock was passed to
+        us by a cohort member (possibly after a budget-forced reacquire).
+        """
+        mem = self.mem
+        d = self._desc(p)
+        # PlusCal c1: descriptor := [budget |-> -1, next |-> 0].  Setting
+        # budget=-1 *before* publishing the descriptor avoids a lost hand-off
+        # (Algorithm 2 writes -1 after the CAS but before linking; equivalent
+        # because the predecessor cannot find us until the link rWrite).
+        mem.auto_write(p, d.budget, -1)
+        mem.auto_write(p, d.next, NULLPTR)
+
+        # Swap ourselves into the tail (RDMA offers CAS, not swap ⇒ CAS loop;
+        # Algorithm 2 lines 3-7, "curr updated on rCAS").
+        curr: Any = NULLPTR
+        while True:
+            observed = mem.auto_cas(p, self.tail, expected=curr, swap=p.pid)
+            if observed == curr:
+                break
+            curr = observed
+
+        if curr is NULLPTR:
+            # Queue was empty: we are the leader (PlusCal c8).
+            mem.auto_write(p, d.budget, self.init_budget)
+            return True
+
+        # Link behind the predecessor, then spin on OUR OWN descriptor — a
+        # machine-local read; no remote spinning (Algorithm 2 lines 8-10).
+        pred = self._desc_of(curr)
+        mem.auto_write(p, pred.next, p.pid)
+        while mem.auto_read(p, d.budget) == -1:
+            _spin_wait()
+
+        if mem.auto_read(p, d.budget) == 0:
+            # Budget exhausted: yield the global lock to the other class
+            # before entering (Algorithm 2 lines 11-13 — the fairness hook).
+            assert self.p_reacquire is not None, "cohort lock not wired to ALock"
+            self.p_reacquire(p)
+            mem.auto_write(p, d.budget, self.init_budget)
+        return False
+
+    def q_unlock(self, p: Process) -> None:
+        """Release: pass to the successor with a decremented budget, or CAS
+        the tail back to null (which also releases the Peterson flag)."""
+        mem = self.mem
+        d = self._desc(p)
+        if mem.auto_read(p, d.next) is NULLPTR:
+            if mem.auto_cas(p, self.tail, expected=p.pid, swap=NULLPTR) == p.pid:
+                return  # queue drained; cohort flag now unset ⇒ global released
+            # Someone is mid-enqueue: wait for the link (Algorithm 2 line 17).
+            while mem.auto_read(p, d.next) is NULLPTR:
+                _spin_wait()
+        nxt = self._desc_of(mem.auto_read(p, d.next))
+        handoff = mem.auto_read(p, d.budget) - 1
+        mem.auto_write(p, nxt.budget, handoff)  # pass the lock
+
+    def q_is_locked(self, p: Process) -> bool:
+        """Peterson "interested" test for this class (Algorithm 2 line 20)."""
+        return self.mem.auto_read(p, self.tail) is not NULLPTR

@@ -1,0 +1,258 @@
+"""Simulated RDMA shared-memory with *operation asymmetry* (paper §2, Table 1).
+
+The paper models an RDMA system as nodes ``N``, processes ``P`` and a shared
+memory ``M`` partitioned among nodes into atomic 8-byte registers.  A process
+is *local* to a register iff it resides on the register's node.  Each class of
+access supports ``{read, write, cas}``; atomicity *between* the classes follows
+Table 1 of the paper:
+
+==============  ======  ======  =====
+local \\ remote  rRead   rWrite  rRMW
+==============  ======  ======  =====
+Read            atomic  atomic  atomic
+Write           atomic  atomic  NOT
+RMW             atomic  atomic  NOT
+==============  ======  ======  =====
+
+i.e. a remote RMW (``rCAS``) executed by the RNIC appears to the *local*
+memory subsystem as an unordered read-then-write, so it can lose updates
+against a concurrent local ``CAS``/``Write``.
+
+This module reproduces those semantics exactly so the lock algorithms built on
+top are exercised under the same hazards they were designed for:
+
+* local RMW holds the register's *machine* lock for the whole read-modify-write
+  (cache-coherence atomicity);
+* remote RMW is serialised against other remote RMWs by a per-node *RNIC*
+  lock, but its read and write phases take the machine lock separately with a
+  preemption point in between — the Table-1 hazard;
+* plain reads/writes (either class) are single-register atomic (8B in a cache
+  line).
+
+The memory also *accounts* every operation per process and class, which is how
+the benchmarks verify the paper's cost claims (local processes: 0 RDMA ops;
+lone remote acquire: 1 rCAS; queued remote acquire: +1 rWrite; unlock: at most
+rCAS + rWrite).
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+NULLPTR = None  # the paper's ``nullptr`` sentinel for pointer-valued registers
+
+
+class OperationNotEnabled(RuntimeError):
+    """Raised when a process uses an operation not enabled for it (paper §2)."""
+
+
+@dataclass
+class OpCounts:
+    """Per-process operation accounting (the unit of the paper's cost claims)."""
+
+    local_read: int = 0
+    local_write: int = 0
+    local_cas: int = 0
+    remote_read: int = 0
+    remote_write: int = 0
+    remote_cas: int = 0
+
+    @property
+    def rdma_ops(self) -> int:
+        return self.remote_read + self.remote_write + self.remote_cas
+
+    @property
+    def local_ops(self) -> int:
+        return self.local_read + self.local_write + self.local_cas
+
+    def snapshot(self) -> "OpCounts":
+        return OpCounts(**vars(self))
+
+    def delta(self, since: "OpCounts") -> "OpCounts":
+        return OpCounts(**{k: getattr(self, k) - getattr(since, k) for k in vars(self)})
+
+    def __add__(self, other: "OpCounts") -> "OpCounts":
+        return OpCounts(**{k: getattr(self, k) + getattr(other, k) for k in vars(self)})
+
+
+class Register:
+    """An atomic 8-byte register residing in one node's memory partition."""
+
+    __slots__ = ("name", "node", "_value", "_lock")
+
+    def __init__(self, name: str, node: int, value: Any):
+        self.name = name
+        self.node = node
+        self._value = value
+        # The "machine" lock: models cache-coherence atomicity on the owning
+        # node.  Local RMW holds it across the full read-modify-write.
+        self._lock = threading.Lock()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Register({self.name}@n{self.node}={self._value!r})"
+
+
+@dataclass
+class Process:
+    """A process ``p_i^j`` — node id, process id and its operation counters."""
+
+    pid: int
+    node: int
+    counts: OpCounts = field(default_factory=OpCounts)
+
+    def is_local_to(self, reg: Register) -> bool:
+        return self.node == reg.node
+
+
+class AsymmetricMemory:
+    """RDMA-accessible shared memory ``M`` partitioned among nodes.
+
+    ``sched`` is an optional preemption hook invoked at every operation
+    boundary (and *inside* the non-atomic window of ``rcas``); the stress tests
+    install a randomised yield to explore interleavings.
+    """
+
+    def __init__(self, num_nodes: int, sched: Optional[Callable[[], None]] = None):
+        self.num_nodes = num_nodes
+        self._registers: Dict[str, Register] = {}
+        self._rnic_locks = [threading.Lock() for _ in range(num_nodes)]
+        self._sched = sched or (lambda: None)
+        self._pid_counter = itertools.count()
+        self._reg_guard = threading.Lock()
+
+    # ------------------------------------------------------------------ setup
+    def spawn(self, node: int) -> Process:
+        if not (0 <= node < self.num_nodes):
+            raise ValueError(f"node {node} out of range")
+        return Process(pid=next(self._pid_counter), node=node)
+
+    def alloc(self, node: int, name: str, value: Any = NULLPTR) -> Register:
+        if not (0 <= node < self.num_nodes):
+            raise ValueError(f"node {node} out of range")
+        with self._reg_guard:
+            if name in self._registers:
+                raise ValueError(f"register {name!r} already allocated")
+            reg = Register(name, node, value)
+            self._registers[name] = reg
+            return reg
+
+    # -------------------------------------------------------------- local ops
+    def read(self, p: Process, reg: Register) -> Any:
+        self._require_local(p, reg, "Read")
+        self._sched()
+        with reg._lock:
+            v = reg._value
+        p.counts.local_read += 1
+        return v
+
+    def write(self, p: Process, reg: Register, value: Any) -> None:
+        self._require_local(p, reg, "Write")
+        self._sched()
+        with reg._lock:
+            reg._value = value
+        p.counts.local_write += 1
+
+    def cas(self, p: Process, reg: Register, expected: Any, swap: Any) -> Any:
+        """Local CAS: atomic read-modify-write under the machine lock."""
+        self._require_local(p, reg, "CAS")
+        self._sched()
+        with reg._lock:
+            observed = reg._value
+            if observed == expected:
+                reg._value = swap
+        p.counts.local_cas += 1
+        return observed
+
+    # ------------------------------------------------------------- remote ops
+    def rread(self, p: Process, reg: Register) -> Any:
+        self._sched()
+        with reg._lock:  # 8B remote read is atomic w.r.t. local ops (Table 1)
+            v = reg._value
+        p.counts.remote_read += 1
+        return v
+
+    def rwrite(self, p: Process, reg: Register, value: Any) -> None:
+        self._sched()
+        with reg._lock:  # 8B remote write is atomic w.r.t. local read/write
+            reg._value = value
+        p.counts.remote_write += 1
+
+    def rcas(self, p: Process, reg: Register, expected: Any, swap: Any) -> Any:
+        """Remote CAS, executed by the target node's RNIC.
+
+        Serialised against *other remote RMWs* by the RNIC lock, but its read
+        and write phases acquire the machine lock separately with a
+        preemption point in between — i.e. **not** atomic w.r.t. local
+        ``CAS``/``Write`` (the Table-1 hazard: to a local process an ``rCAS``
+        appears as a Read then a Write).
+        """
+        self._sched()
+        with self._rnic_locks[reg.node]:
+            with reg._lock:
+                observed = reg._value
+            # RNIC compare happens outside the machine's coherence domain: a
+            # local CAS/Write can slip in right here.  The tagged hook lets
+            # tests interleave this window deterministically.
+            try:
+                self._sched("rcas_window")
+            except TypeError:
+                self._sched()
+            if observed == expected:
+                with reg._lock:
+                    reg._value = swap
+        p.counts.remote_cas += 1
+        return observed
+
+    # ------------------------------------------------------ dispatch helpers
+    def auto_read(self, p: Process, reg: Register) -> Any:
+        """Read with the cheapest *enabled* operation (paper §2 locality)."""
+        return self.read(p, reg) if p.is_local_to(reg) else self.rread(p, reg)
+
+    def auto_write(self, p: Process, reg: Register, value: Any) -> None:
+        if p.is_local_to(reg):
+            self.write(p, reg, value)
+        else:
+            self.rwrite(p, reg, value)
+
+    def auto_cas(self, p: Process, reg: Register, expected: Any, swap: Any) -> Any:
+        if p.is_local_to(reg):
+            return self.cas(p, reg, expected, swap)
+        return self.rcas(p, reg, expected, swap)
+
+    def fence(self, p: Process) -> None:
+        """RDMA + local memory fence.
+
+        The per-op locking above already yields sequentially-consistent
+        register operations (every op is an acquire/release pair on the
+        machine lock), matching the paper's assumption that programmers insert
+        the required fences; this is the explicit no-op hook for symmetry.
+        """
+        self._sched()
+
+    # --------------------------------------------------------------- internal
+    def _require_local(self, p: Process, reg: Register, op: str) -> None:
+        if not p.is_local_to(reg):
+            raise OperationNotEnabled(
+                f"process p{p.pid}@n{p.node} attempted local {op} on remote "
+                f"register {reg.name!r}@n{reg.node}; remote processes are "
+                "constrained to remote accesses (operation asymmetry, paper §2)"
+            )
+
+
+def make_scheduler(rng, p_yield: float = 0.3) -> Callable[[], None]:
+    """A randomised preemption hook for stress tests.
+
+    With probability ``p_yield`` the calling thread sleeps 0 seconds, which
+    releases the GIL and lets the OS scheduler pick another runnable thread —
+    cheap, wall-clock-free interleaving diversity.
+    """
+    import time
+
+    def sched() -> None:
+        if rng.random() < p_yield:
+            time.sleep(0)
+
+    return sched

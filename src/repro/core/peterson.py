@@ -1,0 +1,60 @@
+"""Modified Peterson's lock (paper Algorithm 1).
+
+A two-party starvation-free mutual-exclusion protocol between the *local*
+class (cid 0) and the *remote* class (cid 1), built only from read/write
+registers — the greatest common denominator under operation asymmetry, since
+local and remote RMW are not mutually atomic (Table 1).
+
+Differences from textbook Peterson:
+
+* the "interested" flags ARE the embedded cohort locks' tail registers
+  (``cohort[id].qIsLocked()`` replaces ``flag[other]``) — acquiring the cohort
+  lock *is* the announcement of interest;
+* ``p_reacquire`` (Algorithm 1 line 12) releases-and-reacquires by setting
+  ``victim := self`` and re-waiting, used by the budget mechanism to bound
+  consecutive same-class hand-offs (fairness).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+from .memory import AsymmetricMemory, Process, Register
+from .mcs import BudgetedMCSLock
+
+
+class ModifiedPetersonLock:
+    """Paper Algorithm 1, parameterised over the two cohort locks."""
+
+    def __init__(
+        self,
+        mem: AsymmetricMemory,
+        victim: Register,
+        cohorts: Sequence[BudgetedMCSLock],
+    ):
+        assert len(cohorts) == 2
+        self.mem = mem
+        self.victim = victim
+        self.cohorts = cohorts
+
+    def acquire(self, p: Process, cid: int) -> None:
+        """Algorithm 1 lines 6-7 (the ``isLeader`` branch of ``pLock``)."""
+        other = 1 - cid
+        self.mem.auto_write(p, self.victim, cid)
+        self.mem.fence(p)
+        while (
+            self.cohorts[other].q_is_locked(p)
+            and self.mem.auto_read(p, self.victim) == cid
+        ):
+            time.sleep(0)
+
+    def reacquire(self, p: Process, cid: int) -> None:
+        """``pReacquire`` (Algorithm 1 lines 12-16): yield then re-wait.
+
+        Setting ``victim := cid`` lets a waiting opposite-class leader through;
+        if none is waiting the caller re-enters immediately.  Identical wait
+        condition to :meth:`acquire` — the paper folds both into one routine in
+        the PlusCal spec (``AcquireGlobal``).
+        """
+        self.acquire(p, cid)

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the perf-critical hot spots (+ interpret-mode CPU
+validation). See flash_attention.py / rglru_scan.py headers for tiling."""
+
+from . import ops, ref  # noqa: F401

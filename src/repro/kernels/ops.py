@@ -1,0 +1,78 @@
+"""Jit'd public wrappers for the Pallas kernels, with autodiff.
+
+``flash_attention`` and ``rglru_scan`` run the Pallas forward kernel and use
+a recompute-based backward (``jax.custom_vjp`` around the jnp oracle's vjp) —
+the standard flash trade: no O(T²) residuals, backward recomputes tiles.
+
+On this CPU container kernels execute in ``interpret=True`` mode; on TPU set
+``REPRO_PALLAS_INTERPRET=0`` (or pass ``interpret=False``) to compile with
+Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_fwd
+from .rglru_scan import rglru_scan_fwd
+
+
+def _default_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7)
+)
+def flash_attention(
+    q, k, v, causal: bool = True, window: int = 0,
+    q_block: int = 512, k_block: int = 1024, scale: Optional[float] = None,
+):
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window,
+        q_block=q_block, k_block=k_block, scale=scale,
+        interpret=_default_interpret(),
+    )
+
+
+def _fa_fwd(q, k, v, causal, window, q_block, k_block, scale):
+    out = flash_attention(q, k, v, causal, window, q_block, k_block, scale)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, q_block, k_block, scale, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.flash_attention_ref(
+            q_, k_, v_, causal=causal, window=window, scale=scale
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+@jax.custom_vjp
+def rglru_scan(a, b, h0):
+    return rglru_scan_fwd(a, b, h0, interpret=_default_interpret())
+
+
+def _rg_fwd(a, b, h0):
+    return rglru_scan(a, b, h0), (a, b, h0)
+
+
+def _rg_bwd(res, g):
+    a, b, h0 = res
+    _, vjp = jax.vjp(ref.rglru_scan_ref, a, b, h0)
+    return vjp(g)
+
+
+rglru_scan.defvjp(_rg_fwd, _rg_bwd)

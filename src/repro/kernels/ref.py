@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels (quadratic / sequential forms)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q, k, v, *, causal: bool = True, window: int = 0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Quadratic softmax attention with GQA expansion. Same contract as the
+    kernel: q [B,Tq,H,dk], k/v [B,Tk,K,d*] → [B,Tq,H,dv]."""
+    B, Tq, H, dk = q.shape
+    _, Tk, K, dv = v.shape
+    G = H // K
+    if K != H:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    scale = scale if scale is not None else 1.0 / math.sqrt(dk)
+    s = jnp.einsum("bqhd,blhd->bhql", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Tq)
+    k_pos = jnp.arange(Tk)
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhql,blhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(v.dtype)
+
+
+def rglru_scan_ref(a, b, h0) -> jnp.ndarray:
+    """Sequential linear recurrence h_t = a_t h_{t-1} + b_t. [B,T,W] fp32."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)

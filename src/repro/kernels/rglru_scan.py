@@ -1,0 +1,91 @@
+"""RG-LRU linear-recurrence kernel (Pallas TPU), time-blocked.
+
+Computes ``h_t = a_t * h_{t-1} + b_t`` over [B, T, W] in fp32.  Tiling:
+
+* grid ``(B, nW, nT)`` — the time dimension is innermost and *sequential*
+  ("arbitrary"): the carry ``h`` lives in VMEM scratch across time blocks;
+* each invocation processes a ``[tb, wb]`` tile: the within-block scan is a
+  log-depth associative scan on registers/VMEM (the same
+  ``(a2·a1, a2·b1 + b2)`` combinator as the XLA path), then the incoming
+  carry is folded in with a cumulative-product rescale:
+  ``h_t_full = h_t_local + cumprod(a)[t] * h_in``;
+* wb defaults to 512 lanes (multiple of 128), tb to 256 — working set
+  ≈ 3 · tb · wb · 4 B ≈ 1.5 MB of VMEM.
+
+This is the TPU adaptation of the paper's "per-class optimal mechanism":
+the recurrence is local math on fast memory; nothing crosses the fabric.
+Validated in interpret mode against ``kernels/ref.py`` (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, h_scr, *, nt: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_scr[...] = h0_ref[0, :][None, :] * 0.0 + h0_ref[0, :][None, :]
+
+    a = a_ref[0]                                # [tb, wb]
+    b = b_ref[0]
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, h_loc = jax.lax.associative_scan(combine, (a, b), axis=0)
+    h_in = h_scr[...]                           # [1, wb]
+    h_full = h_loc + a_cum * h_in
+    o_ref[0] = h_full.astype(o_ref.dtype)
+    h_scr[...] = h_full[-1:, :]
+
+
+def rglru_scan_fwd(
+    a: jnp.ndarray,     # [B, T, W] fp32 decay
+    b: jnp.ndarray,     # [B, T, W] fp32 input
+    h0: jnp.ndarray,    # [B, W] fp32 initial state
+    *,
+    t_block: int = 256,
+    w_block: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, T, W = a.shape
+    tb = min(t_block, T)
+    wb = min(w_block, W)
+    pt = (-T) % tb
+    pw = (-W) % wb
+    if pt or pw:
+        # pad decays with 1s? padding a with 0 and b with 0 keeps h constant
+        # only if padded a=1; pad time with a=1,b=0 and width with anything.
+        a = jnp.pad(a, ((0, 0), (0, pt), (0, pw)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pt), (0, pw)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pw)))
+    nt = a.shape[1] // tb
+    nw = a.shape[2] // wb
+
+    out = pl.pallas_call(
+        functools.partial(_rglru_kernel, nt=nt),
+        grid=(B, nw, nt),
+        in_specs=[
+            pl.BlockSpec((1, tb, wb), lambda bi, wi, ti: (bi, ti, wi)),
+            pl.BlockSpec((1, tb, wb), lambda bi, wi, ti: (bi, ti, wi)),
+            pl.BlockSpec((1, wb), lambda bi, wi, ti: (bi, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, tb, wb), lambda bi, wi, ti: (bi, ti, wi)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, wb), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b, h0)
+    return out[:, :T, :W]

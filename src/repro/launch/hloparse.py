@@ -1,0 +1,428 @@
+"""Trip-count-aware analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body **once**, but our models
+scan over layers (and the online-softmax attention scans over KV blocks), so
+FLOPs/bytes/collective counts must be multiplied by loop trip counts.  This
+module parses ``compiled.as_text()`` into a computation graph and walks it
+with multipliers:
+
+* **flops** — ``dot`` ops: ``2 × |result| × contraction`` (operand shapes
+  resolved through a per-computation symbol table); recursed into fusions,
+  calls, conditionals (×1) and whiles (×trip count, parsed from the loop
+  condition's comparison constant).
+* **hbm bytes** — fusion-boundary traffic: for every non-control instruction
+  at computation scope, output bytes + operand bytes (fusions count their
+  boundary only — the "perfectly fused kernels" model of HBM traffic).
+* **collectives** — kind, wire bytes/chip (bandwidth-optimal algorithm
+  factors), group size, and whether any group crosses the pod boundary
+  (device id // pod_size differs) — the ICI vs DCN split for the roofline.
+
+Validated against ``cost_analysis`` on loop-free graphs and against hand
+counts on scanned graphs (tests/test_hloparse.py).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_OPCODE_RE = re.compile(r"^((?:\([^)]*\)|[\w\[\]{},.: ])*?)\s*([\w\-]+)\(")
+
+_CONTROL_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "copy", "after-all", "partition-id", "replica-id",
+    "iota", "get-dimension-size",
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shapes_of(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    return sum(
+        _DTYPE_BYTES[dt] * int(np.prod(shape)) if shape else _DTYPE_BYTES[dt]
+        for dt, shape in _shapes_of(type_str)
+    )
+
+
+@dataclass
+class Collective:
+    kind: str
+    result_bytes: int
+    group_size: int
+    crosses_pod: bool
+    count: float = 1.0  # multiplied by loop trip counts
+    # CPU XLA rewrites bf16 dots to f32, so matmul partial-sums get reduced
+    # pre-cast; TPU reduces them in bf16. f32 collectives tagged dot_general
+    # count at half width in the tpu-normalized wire bytes.
+    f32_dot_artifact: bool = False
+
+    def wire_bytes_per_chip(self) -> float:
+        n, b = self.group_size, self.result_bytes
+        if n <= 1:
+            return 0.0
+        if self.kind == "all-reduce":
+            return 2.0 * (n - 1) / n * b
+        if self.kind == "all-gather":
+            return (n - 1) / n * b            # result is the gathered buffer
+        if self.kind == "reduce-scatter":
+            return (n - 1) * b                # result is the shard
+        if self.kind == "all-to-all":
+            return (n - 1) / n * b
+        if self.kind == "collective-permute":
+            return float(b)
+        return 0.0
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    type_str: str
+    operands: List[str]
+    raw: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> type str
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = ""
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and (line.startswith("%") or line.startswith("ENTRY")):
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, rest = mi.group(1), mi.group(2)
+        mo = _OPCODE_RE.match(rest)
+        if not mo:
+            continue
+        type_str, opcode = mo.group(1).strip(), mo.group(2)
+        # operands: %names inside the first (...) after the opcode
+        paren = rest[mo.end() - 1 :]
+        depth, end = 0, 0
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = re.findall(r"%([\w.\-]+)", paren[: end + 1])
+        inst = Instr(name, opcode, type_str, operands, rest)
+        cur.instrs.append(inst)
+        cur.symbols[name] = type_str
+    return comps, entry
+
+
+def _attr(raw: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=\{([^}]*)\}", raw)
+    return m.group(1) if m else None
+
+
+def _called(raw: str) -> List[str]:
+    out = []
+    for key in ("calls", "body", "to_apply"):
+        m = re.search(key + r"=%([\w.\-]+)", raw)
+        if m:
+            out.append(m.group(1))
+    m = re.search(r"branch_computations=\{([^}]*)\}", raw)
+    if m:
+        out.extend(re.findall(r"%([\w.\-]+)", m.group(1)))
+    return out
+
+
+def _trip_count(cond: Computation) -> int:
+    consts = [int(c) for c in re.findall(r"constant\((\d+)\)", "\n".join(
+        i.raw for i in cond.instrs))]
+    return max(consts) if consts else 1
+
+
+def _parse_groups(raw: str, num_devices: int) -> List[List[int]]:
+    m = re.search(r"replica_groups=\{\{(.*?)\}\}", raw)
+    if m:
+        return [
+            [int(x) for x in g.split(",") if x.strip()]
+            for g in m.group(1).split("},{")
+        ]
+    m = re.search(
+        r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?", raw
+    )
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        base = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(p) for p in m.group(4).split(",")]
+            base = base.transpose(perm)
+        return base.reshape(g, s).tolist()
+    # collective-permute: source_target_pairs
+    if "source_target_pairs" in raw:
+        seg = raw.split("source_target_pairs=", 1)[1]
+        pairs = re.findall(r"\{(\d+),(\d+)\}", seg)
+        return [[int(a), int(b)] for a, b in pairs]
+    return []
+
+
+@dataclass
+class HLOStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    ici_bytes: float = 0.0       # per-chip wire bytes (TPU-normalized)
+    dcn_bytes: float = 0.0
+    ici_bytes_raw: float = 0.0   # as measured on the CPU-backend HLO
+    dcn_bytes_raw: float = 0.0
+    collectives: List[Collective] = field(default_factory=list)
+
+    def add_collective(self, c: Collective):
+        self.collectives.append(c)
+        wire = c.wire_bytes_per_chip() * c.count
+        norm = wire * (0.5 if c.f32_dot_artifact else 1.0)
+        if c.crosses_pod:
+            self.dcn_bytes += norm
+            self.dcn_bytes_raw += wire
+        else:
+            self.ici_bytes += norm
+            self.ici_bytes_raw += wire
+
+    def top_collectives(self, k: int = 8) -> List[dict]:
+        """Largest collectives by total wire bytes (hillclimb targets)."""
+        agg: Dict[tuple, dict] = {}
+        for c in self.collectives:
+            key = (c.kind, c.result_bytes, c.group_size, c.crosses_pod)
+            a = agg.setdefault(
+                key,
+                {"kind": c.kind, "result_bytes": c.result_bytes,
+                 "group_size": c.group_size, "crosses_pod": c.crosses_pod,
+                 "count": 0.0, "wire_bytes": 0.0},
+            )
+            a["count"] += c.count
+            a["wire_bytes"] += c.wire_bytes_per_chip() * c.count
+        return sorted(agg.values(), key=lambda a: -a["wire_bytes"])[:k]
+
+
+def _dot_flops(inst: Instr, comp: Computation) -> float:
+    shapes = _shapes_of(inst.type_str)
+    if not shapes:
+        return 0.0
+    result_elems = int(np.prod(shapes[0][1])) if shapes[0][1] else 1
+    lhs_type = comp.symbols.get(inst.operands[0]) if inst.operands else None
+    contract = 1
+    cdims = _attr(inst.raw, "lhs_contracting_dims")
+    if lhs_type and cdims is not None:
+        lhs_shapes = _shapes_of(lhs_type)
+        if lhs_shapes:
+            lhs_shape = lhs_shapes[0][1]
+            for d in cdims.split(","):
+                d = d.strip()
+                if d:
+                    contract *= lhs_shape[int(d)]
+    return 2.0 * result_elems * contract
+
+
+def analyze(text: str, *, num_devices: int, pod_size: int) -> HLOStats:
+    comps, entry = _parse_computations(text)
+    stats = HLOStats()
+    fusion_comps = set()
+    for c in comps.values():
+        for i in c.instrs:
+            if i.opcode == "fusion":
+                fusion_comps.update(_called(i.raw))
+
+    def crosses(groups: List[List[int]]) -> bool:
+        for g in groups:
+            pods = {d // pod_size for d in g}
+            if len(pods) > 1:
+                return True
+        return False
+
+    visited_flops: Dict[str, float] = {}
+
+    def comp_flops(name: str) -> float:
+        """FLOPs of one execution of computation `name` (incl. nested)."""
+        if name in visited_flops:
+            return visited_flops[name]
+        comp = comps.get(name)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        for inst in comp.instrs:
+            if inst.opcode in ("dot", "convolution"):
+                total += _dot_flops(inst, comp)
+            elif inst.opcode == "while":
+                body = re.search(r"body=%([\w.\-]+)", inst.raw)
+                cond = re.search(r"condition=%([\w.\-]+)", inst.raw)
+                trips = _trip_count(comps[cond.group(1)]) if cond else 1
+                if body:
+                    total += trips * comp_flops(body.group(1))
+            elif inst.opcode in ("fusion", "call", "conditional", "custom-call"):
+                for sub in _called(inst.raw):
+                    total += comp_flops(sub)
+        visited_flops[name] = total
+        return total
+
+    def walk_bytes_colls(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for inst in comp.instrs:
+            if inst.opcode == "while":
+                body = re.search(r"body=%([\w.\-]+)", inst.raw)
+                cond = re.search(r"condition=%([\w.\-]+)", inst.raw)
+                trips = _trip_count(comps[cond.group(1)]) if cond else 1
+                if body:
+                    walk_bytes_colls(body.group(1), mult * trips)
+                continue
+            if inst.opcode in ("call", "conditional"):
+                for sub in _called(inst.raw):
+                    walk_bytes_colls(sub, mult)
+                continue
+            base = inst.opcode.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES and "-done" not in inst.opcode:
+                groups = _parse_groups(inst.raw, num_devices)
+                gsize = len(groups[0]) if groups else num_devices
+                is_f32_dot = (
+                    "f32[" in inst.type_str
+                    and "dot_general" in inst.raw
+                    and base in ("all-reduce", "reduce-scatter")
+                )
+                stats.add_collective(
+                    Collective(
+                        kind=base,
+                        result_bytes=_bytes_of(inst.type_str),
+                        group_size=gsize if base != "collective-permute" else 2,
+                        crosses_pod=crosses(groups),
+                        count=mult,
+                        f32_dot_artifact=is_f32_dot,
+                    )
+                )
+                continue
+            if inst.opcode in _CONTROL_OPS:
+                continue
+            # fusion-boundary HBM traffic, with in-place/slice corrections:
+            # XLA aliases dynamic-update-slice (scan stacking) in place, and
+            # slices/gathers only touch the moved bytes — counting their full
+            # operands would overcount by the stacked-buffer size × trips.
+            out_b = _bytes_of(inst.type_str)
+            if inst.opcode in ("dynamic-slice", "slice", "gather"):
+                stats.hbm_bytes += mult * 2 * out_b
+                continue
+            if inst.opcode == "dynamic-update-slice":
+                upd = (
+                    _bytes_of(comp.symbols[inst.operands[1]])
+                    if len(inst.operands) > 1 and inst.operands[1] in comp.symbols
+                    else 0
+                )
+                stats.hbm_bytes += mult * 2 * upd
+                continue
+            if inst.opcode == "scatter":
+                upd = (
+                    _bytes_of(comp.symbols[inst.operands[2]])
+                    if len(inst.operands) > 2 and inst.operands[2] in comp.symbols
+                    else out_b
+                )
+                stats.hbm_bytes += mult * 3 * upd
+                continue
+            if inst.opcode == "fusion":
+                called = _called(inst.raw)
+                sub = comps.get(called[0]) if called else None
+                root_dus = bool(
+                    sub and sub.instrs
+                    and sub.instrs[-1].opcode == "dynamic-update-slice"
+                )
+                if root_dus:
+                    # in-place stacking fusion: write the update only
+                    small = sum(
+                        _bytes_of(comp.symbols[o]) for o in inst.operands[1:]
+                        if o in comp.symbols
+                    )
+                    stats.hbm_bytes += mult * 2 * small
+                    continue
+                # Operands consumed only through dynamic-slice inside the
+                # fusion (scan xs slicing) touch slice bytes, not the full
+                # stacked buffer — without this, a T-step scan over stacked
+                # inputs overcounts by T×.
+                sliced_params = {}
+                if sub is not None:
+                    param_of = {}
+                    for si in sub.instrs:
+                        if si.opcode == "parameter":
+                            m = re.search(r"parameter\((\d+)\)", si.raw)
+                            if m:
+                                param_of[si.name] = int(m.group(1))
+                    used_other = set()
+                    for si in sub.instrs:
+                        for o in si.operands:
+                            if o in param_of:
+                                if si.opcode == "dynamic-slice" and si.operands[0] == o:
+                                    sliced_params.setdefault(
+                                        param_of[o], 0
+                                    )
+                                    sliced_params[param_of[o]] += _bytes_of(
+                                        si.type_str
+                                    )
+                                else:
+                                    used_other.add(param_of[o])
+                    for idx in used_other:
+                        sliced_params.pop(idx, None)
+                out_b_f = _bytes_of(inst.type_str)
+                in_b_f = 0
+                for i_op, o in enumerate(inst.operands):
+                    if o not in comp.symbols:
+                        continue
+                    if i_op in sliced_params:
+                        in_b_f += sliced_params[i_op]
+                    else:
+                        in_b_f += _bytes_of(comp.symbols[o])
+                stats.hbm_bytes += mult * (out_b_f + in_b_f)
+                continue
+            in_b = sum(
+                _bytes_of(comp.symbols[o]) for o in inst.operands
+                if o in comp.symbols
+            )
+            stats.hbm_bytes += mult * (out_b + in_b)
+
+    stats.flops = comp_flops(entry)
+    walk_bytes_colls(entry, 1.0)
+    return stats

@@ -1,0 +1,13 @@
+"""Model zoo: one Model class, ten architectures via block patterns."""
+
+from .transformer import Model, layer_plan  # noqa: F401
+from .io import input_specs  # noqa: F401
+from .specs import (  # noqa: F401
+    ParamSpec,
+    init_params,
+    param_bytes,
+    param_count,
+    pspec_tree,
+    shape_dtype_tree,
+    sharding_tree,
+)

@@ -1,0 +1,72 @@
+"""Model input construction: ShapeDtypeStruct stand-ins (dry-run) and
+concrete synthetic batches (tests/examples) from the same declaration.
+
+``[audio]``/``[vlm]`` modality frontends are STUBS per the assignment:
+``input_specs`` supplies precomputed frame/patch embeddings at d_model.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+
+def _mk(concrete: bool, rng, shape, dtype, kind: str, vocab: int = 0):
+    if not concrete:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if kind == "tokens":
+        return jax.random.randint(rng, shape, 0, vocab, dtype=dtype)
+    if kind == "embeds":
+        return (0.02 * jax.random.normal(rng, shape)).astype(dtype)
+    raise ValueError(kind)
+
+
+def input_specs(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    *,
+    concrete: bool = False,
+    rng: Optional[jax.Array] = None,
+    dtype=jnp.bfloat16,
+) -> Dict[str, Any]:
+    """Inputs for the given cell.
+
+    train:   {tokens/embeds, labels[, embeds for vlm]}
+    prefill: {tokens/embeds[, embeds]}
+    decode:  {tokens} — the cache is built separately from Model.cache().
+    """
+    B, T = shape.global_batch, shape.seq_len
+    if rng is None and concrete:
+        rng = jax.random.PRNGKey(0)
+    rngs = jax.random.split(rng, 4) if concrete else [None] * 4
+
+    if shape.kind == "decode":
+        return {"tokens": _mk(concrete, rngs[0], (B, 1), jnp.int32, "tokens",
+                              cfg.vocab_size)}
+
+    batch: Dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        batch["embeds"] = _mk(concrete, rngs[0], (B, T, cfg.d_model), dtype, "embeds")
+    elif cfg.frontend == "vision":
+        n_txt = T - cfg.frontend_tokens
+        batch["embeds"] = _mk(
+            concrete, rngs[0], (B, cfg.frontend_tokens, cfg.d_model), dtype, "embeds"
+        )
+        batch["tokens"] = _mk(concrete, rngs[1], (B, n_txt), jnp.int32, "tokens",
+                              cfg.vocab_size)
+    else:
+        batch["tokens"] = _mk(concrete, rngs[1], (B, T), jnp.int32, "tokens",
+                              cfg.vocab_size)
+
+    if shape.kind == "train":
+        if cfg.frontend == "vision":
+            n_lbl = T - cfg.frontend_tokens
+        else:
+            n_lbl = T
+        batch["labels"] = _mk(concrete, rngs[2], (B, n_lbl), jnp.int32, "tokens",
+                              cfg.vocab_size)
+    return batch

@@ -1,0 +1,166 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block: x → {linear branch → causal depthwise conv(4) → RG-LRU}, gated by a
+parallel GeLU branch, then an output projection.  The RG-LRU is a gated
+*linear* recurrence
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+which is associative, so training/prefill uses ``jax.lax.associative_scan``
+(log-depth — the TPU-native answer to the paper's "per-class optimal
+mechanism"), and decode is a one-step state update.  This is what makes the
+``long_500k`` cell tractable: state is O(1) in sequence length.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RGLRUConfig
+from .layers import ashard
+from .specs import ParamSpec
+
+
+def rglru_block_spec(cfg: ModelConfig, dtype=jnp.bfloat16) -> Dict:
+    g: RGLRUConfig = cfg.rglru
+    D = cfg.d_model
+    W = g.width or D
+    return {
+        "w_x": ParamSpec((D, W), ("embed", "mlp"), dtype=dtype),
+        "w_gate": ParamSpec((D, W), ("embed", "mlp"), dtype=dtype),
+        "conv_w": ParamSpec((g.conv_width, W), (None, "mlp"), init="normal",
+                            scale=0.1, dtype=dtype),
+        "conv_b": ParamSpec((W,), ("mlp",), init="zeros", dtype=dtype),
+        "w_a": ParamSpec((W, W), ("mlp", None), dtype=dtype),
+        "b_a": ParamSpec((W,), (None,), init="zeros", dtype=dtype),
+        "w_i": ParamSpec((W, W), ("mlp", None), dtype=dtype),
+        "b_i": ParamSpec((W,), (None,), init="zeros", dtype=dtype),
+        "lam": ParamSpec((W,), (None,), init="ones", dtype=jnp.float32),
+        "w_out": ParamSpec((W, D), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray        # [B, W] recurrent state (fp32)
+    conv: jnp.ndarray     # [B, conv_width-1, W] trailing inputs
+
+
+def rglru_state_spec(cfg: ModelConfig, batch: int) -> RGLRUState:
+    g = cfg.rglru
+    W = g.width or cfg.d_model
+    return RGLRUState(
+        h=jax.ShapeDtypeStruct((batch, W), jnp.float32),
+        conv=jax.ShapeDtypeStruct((batch, g.conv_width - 1, W), jnp.float32),
+    )
+
+
+def _causal_conv(p, x: jnp.ndarray, conv_width: int) -> jnp.ndarray:
+    """Depthwise causal conv via shifted adds. x: [B, T, W]."""
+    out = x * p["conv_w"][conv_width - 1]
+    for i in range(1, conv_width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * p["conv_w"][conv_width - 1 - i]
+    return out + p["conv_b"]
+
+
+def _gates(p, x: jnp.ndarray, c: float):
+    r = jax.nn.sigmoid((x @ p["w_a"]).astype(jnp.float32) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["w_i"]).astype(jnp.float32) + p["b_i"].astype(jnp.float32))
+    log_a = -c * jax.nn.softplus(p["lam"]) * r      # [B, T, W] fp32
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * x.astype(jnp.float32)
+
+
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t h_{t-1} + b_t via associative scan. a, b: [B, T, W] fp32."""
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(p, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Training forward (zero initial state). x: [B, T, D] → [B, T, D]."""
+    y, _ = rglru_block_with_state(p, x, cfg, None)
+    return y
+
+
+def rglru_block_with_state(
+    p, x: jnp.ndarray, cfg: ModelConfig, state: RGLRUState | None
+) -> Tuple[jnp.ndarray, RGLRUState]:
+    g = cfg.rglru
+    B, T, D = x.shape
+    W = g.width or D
+    z = ashard(x @ p["w_x"], ("batch", None, "mlp"))
+    gate = jax.nn.gelu(ashard(x @ p["w_gate"], ("batch", None, "mlp")))
+    if state is not None:
+        hist = jnp.concatenate([state.conv.astype(z.dtype), z], axis=1)
+        zc = _causal_conv(p, hist, g.conv_width)[:, g.conv_width - 1 :]
+        h0 = state.h
+    else:
+        zc = _causal_conv(p, z, g.conv_width)
+        h0 = jnp.zeros((B, W), jnp.float32)
+    a, b = _gates(p, zc, g.c)
+    h = rglru_scan(a, b, h0)
+    out = (h.astype(x.dtype) * gate) @ p["w_out"]
+    tail = jnp.concatenate([state.conv.astype(z.dtype), z], axis=1)[:, -(g.conv_width - 1):] \
+        if state is not None else _tail_pad(z, g.conv_width - 1)
+    new_state = RGLRUState(h=h[:, -1], conv=tail.astype(jnp.float32))
+    return ashard(out, ("batch", None, "embed")), new_state
+
+
+def _tail_pad(z: jnp.ndarray, n: int) -> jnp.ndarray:
+    T = z.shape[1]
+    if T >= n:
+        return z[:, T - n :]
+    return jnp.pad(z, ((0, 0), (n - T, 0), (0, 0)))
+
+
+def rglru_decode(p, x: jnp.ndarray, cfg: ModelConfig, state: RGLRUState):
+    """One-token step. x: [B, 1, D] → ([B, 1, D], new state)."""
+    g = cfg.rglru
+    z = x @ p["w_x"]                                    # [B, 1, W]
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    hist = jnp.concatenate([state.conv.astype(z.dtype), z], axis=1)  # [B, cw, W]
+    zc = jnp.einsum("btw,tw->bw", hist, p["conv_w"]) + p["conv_b"]
+    zc = zc[:, None, :]
+    a, b = _gates(p, zc, g.c)
+    h = a[:, 0] * state.h + b[:, 0]
+    out = (h[:, None].astype(x.dtype) * gate) @ p["w_out"]
+    new_state = RGLRUState(h=h, conv=hist[:, 1:].astype(jnp.float32))
+    return ashard(out, ("batch", None, "embed")), new_state
+
+
+def rglru_reference(p, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Sequential-scan oracle for tests (identical math, lax.scan over T)."""
+    g = cfg.rglru
+    B, T, D = x.shape
+    z = x @ p["w_x"]
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    zc = _causal_conv(p, z, g.conv_width)
+    a, b = _gates(p, zc, g.c)
+    W = g.width or D
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(
+        step, jnp.zeros((B, W), jnp.float32),
+        (a.swapaxes(0, 1), b.swapaxes(0, 1)),
+    )
+    h = hs.swapaxes(0, 1)
+    return (h.astype(x.dtype) * gate) @ p["w_out"]

@@ -1,0 +1,125 @@
+"""Declarative parameter specs with logical sharding axes.
+
+Every model in the zoo declares its parameters as a pytree of
+:class:`ParamSpec` — shape, logical axis names, and an initializer.  From the
+same declaration we derive:
+
+* materialized parameters (``init_params``),
+* ``jax.ShapeDtypeStruct`` stand-ins for the dry-run (no allocation),
+* ``NamedSharding`` trees via logical→mesh rules (``repro/sharding``).
+
+This is what lets ``launch/dryrun.py`` lower a 671B-parameter model on a CPU
+host: shapes and shardings come from the declaration, not from tracing a real
+init.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """One parameter: shape + logical axes + init recipe."""
+
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]  # one logical name (or None) per dim
+    init: str = "fan_in"                # fan_in | normal | zeros | ones | embed
+    scale: float = 1.0
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], specs):
+    return jax.tree.map(fn, specs, is_leaf=is_spec)
+
+
+def init_params(specs, rng: jax.Array):
+    """Materialize parameters from a spec tree (CPU-scale configs only)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    rngs = jax.random.split(rng, len(leaves))
+
+    def one(spec: ParamSpec, key):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, spec.dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, spec.dtype)
+        if spec.init == "normal":
+            return (spec.scale * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+        if spec.init == "embed":
+            return (spec.scale * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+        if spec.init == "fan_in":
+            # Contraction dim is the second-to-last for >=2D (d_in, d_out)
+            # weights and stacked (layers/experts, d_in, d_out) weights.
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            std = spec.scale / math.sqrt(max(fan_in, 1))
+            return (std * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+        raise ValueError(f"unknown init {spec.init}")
+
+    return jax.tree.unflatten(treedef, [one(s, k) for s, k in zip(leaves, rngs)])
+
+
+def shape_dtype_tree(specs):
+    """ShapeDtypeStruct stand-ins — the dry-run's parameter 'allocation'."""
+    return tree_map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs)
+
+
+def logical_to_pspec(logical: Sequence[Optional[str]], rules: Dict[str, Optional[str]]) -> P:
+    """Map logical axis names to mesh axes via rules; unknown names error."""
+    out = []
+    for name in logical:
+        if name is None:
+            out.append(None)
+        else:
+            if name not in rules:
+                raise KeyError(f"no sharding rule for logical axis {name!r}")
+            out.append(rules[name])
+    # Trailing Nones are dropped by PartitionSpec semantics anyway.
+    return P(*out)
+
+
+def sharding_tree(specs, mesh: Mesh, rules: Dict[str, Optional[str]]):
+    return tree_map_specs(
+        lambda s: NamedSharding(mesh, logical_to_pspec(s.logical, rules)), specs
+    )
+
+
+def pspec_tree(specs, rules: Dict[str, Optional[str]]):
+    return tree_map_specs(lambda s: logical_to_pspec(s.logical, rules), specs)
+
+
+def param_count(specs) -> int:
+    leaves, _ = jax.tree.flatten(specs, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def param_bytes(specs) -> int:
+    leaves, _ = jax.tree.flatten(specs, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) * jnp.dtype(s.dtype).itemsize for s in leaves))
+
+
+def stack_layer_specs(spec_tree, num_layers: int, axis_name: Optional[str] = "layers"):
+    """Add a leading stacked-layers dim to every spec (for scan-over-layers)."""
+    return tree_map_specs(
+        lambda s: ParamSpec(
+            shape=(num_layers, *s.shape),
+            logical=(axis_name, *s.logical),
+            init=s.init,
+            scale=s.scale,
+            dtype=s.dtype,
+        ),
+        spec_tree,
+    )

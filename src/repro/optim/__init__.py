@@ -1,0 +1,4 @@
+"""Optimizer substrate: AdamW + schedules + clipping (pure JAX, no optax)."""
+
+from .adamw import AdamWState, adamw_init, adamw_update, global_norm  # noqa: F401
+from .schedule import cosine_schedule  # noqa: F401

@@ -1,0 +1,10 @@
+"""Logical-axis → mesh-axis sharding rules (DP/FSDP/TP/EP/SP)."""
+
+from .rules import (  # noqa: F401
+    ACT_RULES,
+    PARAM_RULES,
+    batch_pspec,
+    cache_pspecs,
+    param_pspecs,
+    param_shardings,
+)

@@ -1,0 +1,76 @@
+"""HLO analysis: trip counts, dot flops, collective classification."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hloparse import analyze
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_loopfree_dot_flops_match_cost_analysis():
+    def g(x, w):
+        for _ in range(4):
+            x = jnp.tanh(x @ w)
+        return x
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.bfloat16)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.bfloat16)
+    co = _compile(g, x, w)
+    st = analyze(co.as_text(), num_devices=1, pod_size=256)
+    expect = 4 * 2 * 64 * 128 * 128
+    assert st.flops == expect
+    # XLA's number includes elementwise flops; dots must dominate
+    assert st.flops <= co.cost_analysis()["flops"] <= st.flops * 1.1
+
+
+def test_scan_trip_count_multiplies_flops():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.bfloat16)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.bfloat16)
+    st = analyze(_compile(f, x, w).as_text(), num_devices=1, pod_size=256)
+    assert st.flops == 7 * 2 * 64 * 128 * 128
+
+
+def test_nested_scan_trip_counts():
+    def f(x, w):
+        def inner(c, _):
+            return jnp.tanh(c @ w), None
+
+        def outer(c, _):
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    st = analyze(_compile(f, x, w).as_text(), num_devices=1, pod_size=256)
+    assert st.flops == 15 * 2 * 32 * 32 * 32
+
+
+def test_dus_inplace_not_overcounted():
+    """Scan stacking (dynamic-update-slice into a big buffer) must count the
+    update bytes, not the whole buffer, per iteration."""
+    def f(x):
+        def body(c, _):
+            return c + 1.0, c  # stacks [100, 1024] outputs
+
+        _, ys = jax.lax.scan(body, x, None, length=100)
+        return ys
+
+    x = jax.ShapeDtypeStruct((1024,), jnp.float32)
+    st = analyze(_compile(f, x).as_text(), num_devices=1, pod_size=256)
+    full_buffer = 100 * 1024 * 4
+    # naive counting would charge ~100 × full_buffer ≈ 41 MB; in-place model
+    # must stay within a few × the buffer size.
+    assert st.hbm_bytes < 6 * full_buffer, st.hbm_bytes

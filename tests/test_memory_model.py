@@ -1,0 +1,113 @@
+"""Paper §2 / Table 1: operation-asymmetry semantics of the simulated fabric."""
+
+import random
+import threading
+
+import pytest
+
+from repro.core import (
+    AsymmetricMemory,
+    BrokenMixedCASLock,
+    NULLPTR,
+    OperationNotEnabled,
+    make_scheduler,
+)
+
+
+def test_locality_enforced():
+    mem = AsymmetricMemory(2)
+    reg = mem.alloc(0, "r")
+    local = mem.spawn(0)
+    remote = mem.spawn(1)
+    mem.write(local, reg, 7)
+    assert mem.read(local, reg) == 7
+    with pytest.raises(OperationNotEnabled):
+        mem.read(remote, reg)
+    with pytest.raises(OperationNotEnabled):
+        mem.write(remote, reg, 1)
+    with pytest.raises(OperationNotEnabled):
+        mem.cas(remote, reg, 7, 1)
+
+
+def test_remote_ops_enabled_for_all_including_loopback():
+    """Remote accesses are enabled for every process (RDMA loopback)."""
+    mem = AsymmetricMemory(2)
+    reg = mem.alloc(0, "r", 0)
+    local = mem.spawn(0)
+    assert mem.rcas(local, reg, 0, 5) == 0
+    assert mem.rread(local, reg) == 5
+    mem.rwrite(local, reg, 9)
+    assert mem.read(local, reg) == 9
+    assert local.counts.rdma_ops == 3
+
+
+def test_op_accounting():
+    mem = AsymmetricMemory(2)
+    reg = mem.alloc(0, "r", 0)
+    p = mem.spawn(1)
+    snap = p.counts.snapshot()
+    mem.rread(p, reg)
+    mem.rwrite(p, reg, 1)
+    mem.rcas(p, reg, 1, 2)
+    d = p.counts.delta(snap)
+    assert (d.remote_read, d.remote_write, d.remote_cas) == (1, 1, 1)
+    assert d.local_ops == 0
+
+
+def test_rcas_not_atomic_with_local_cas():
+    """Table 1: remote RMW is NOT atomic w.r.t. local RMW — a mixed-CAS lock
+    admits two holders (lost update). Deterministic interleaving: the rCAS
+    is held inside its read→write window while a local CAS takes the lock;
+    the rCAS's stale compare then succeeds anyway — exactly the hazard the
+    paper's design eliminates."""
+    window_open = threading.Event()
+    local_done = threading.Event()
+
+    def sched(*tags):
+        if "rcas_window" in tags:
+            window_open.set()
+            assert local_done.wait(5), "local CAS never ran"
+
+    mem = AsymmetricMemory(2, sched=sched)
+    lock = BrokenMixedCASLock(mem, home_node=0)
+    remote = mem.spawn(1)
+    local = mem.spawn(0)
+    state = []
+
+    def remote_thread():
+        lock.lock(remote)          # rCAS blocks inside its window
+        state.append("remote_in_cs")
+
+    t = threading.Thread(target=remote_thread)
+    t.start()
+    assert window_open.wait(5)
+    # Local process takes the lock with an atomic machine CAS while the
+    # RNIC compare is in flight.
+    lock.lock(local)
+    state.append("local_in_cs")
+    local_done.set()
+    t.join(timeout=5)
+    assert state == ["local_in_cs", "remote_in_cs"], state
+    # both "hold" the lock simultaneously: mutual exclusion violated.
+
+
+def test_rcas_serialized_against_rcas():
+    """Remote RMWs ARE mutually atomic (RNIC serialisation): an all-rCAS
+    counter increment loses no updates."""
+    mem = AsymmetricMemory(3, sched=make_scheduler(random.Random(1), 0.3))
+    reg = mem.alloc(0, "ctr", 0)
+
+    def worker(node, iters=100):
+        p = mem.spawn(node)
+        for _ in range(iters):
+            while True:
+                cur = mem.rread(p, reg)
+                if mem.rcas(p, reg, cur, cur + 1) == cur:
+                    break
+
+    ts = [threading.Thread(target=worker, args=(n,)) for n in (0, 1, 2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert mem.read(mem.spawn(0), reg) == 300

@@ -1,0 +1,34 @@
+"""Explicit-state model check of the PlusCal spec (paper Appendix A)."""
+
+import pytest
+
+from repro.core.modelcheck import check
+
+
+@pytest.mark.parametrize("np_,b", [(2, 1), (2, 2), (3, 1), (3, 2)])
+def test_paper_spec_holds(np_, b):
+    r = check(num_procs=np_, init_budget=b)
+    assert r.mutual_exclusion, r.violations
+    assert r.deadlock_free, r.violations
+    assert r.starvation_free, r.violations
+    assert r.num_states > 100
+
+
+def test_state_space_is_exhaustive_and_stable():
+    # Exact state counts pin the transition system against silent edits.
+    assert check(2, 1).num_states == check(2, 2).num_states == 692
+
+
+def test_seeded_bug_skip_global_breaks_mutual_exclusion():
+    r = check(num_procs=2, init_budget=1, variant="skip_global")
+    assert not r.mutual_exclusion
+    assert "mutual_exclusion" in r.violations
+
+
+def test_seeded_bug_no_decrement_starves():
+    """Without the budget decrement the same class passes the lock forever:
+    the checker must find a fair cycle where the other class waits."""
+    r = check(num_procs=3, init_budget=1, variant="no_decrement")
+    assert r.mutual_exclusion          # safety still holds
+    assert not r.starvation_free       # liveness broken
+    assert "starvation" in r.violations

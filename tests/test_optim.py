@@ -1,0 +1,55 @@
+"""AdamW math, clipping, schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw_init, adamw_update, cosine_schedule, global_norm
+
+
+def test_adamw_matches_hand_math():
+    p = {"w": jnp.array([1.0, -2.0])}
+    g = {"w": jnp.array([0.5, 0.5])}
+    st = adamw_init(p)
+    lr, b1, b2, eps, wd = 0.1, 0.9, 0.95, 1e-8, 0.0
+    newp, newst, _ = adamw_update(p, g, st, lr, b1=b1, b2=b2, eps=eps,
+                                  weight_decay=wd, grad_clip=0.0)
+    m = (1 - b1) * np.array([0.5, 0.5])
+    v = (1 - b2) * np.array([0.25, 0.25])
+    mhat = m / (1 - b1)
+    vhat = v / (1 - b2)
+    expect = np.array([1.0, -2.0]) - lr * mhat / (np.sqrt(vhat) + eps)
+    np.testing.assert_allclose(np.asarray(newp["w"]), expect, rtol=1e-6)
+    assert int(newst.step) == 1
+
+
+def test_weight_decay_decoupled_and_matrix_only():
+    p = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    g = jax.tree.map(jnp.zeros_like, p)
+    st = adamw_init(p)
+    newp, _, _ = adamw_update(p, g, st, lr=0.5, weight_decay=0.1, grad_clip=0.0)
+    np.testing.assert_allclose(np.asarray(newp["w"]), 0.95 * np.ones((2, 2)),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(newp["b"]), np.ones((2,)), rtol=1e-6)
+
+
+def test_grad_clipping_scales_update():
+    p = {"w": jnp.zeros((3,))}
+    g = {"w": jnp.array([30.0, 40.0, 0.0])}  # norm 50
+    st = adamw_init(p)
+    _, _, m = adamw_update(p, g, st, lr=0.1, grad_clip=1.0)
+    np.testing.assert_allclose(float(m["grad_norm"]), 50.0, rtol=1e-6)
+
+
+def test_global_norm():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    assert float(global_norm(t)) == 5.0
+
+
+def test_cosine_schedule_shape():
+    lrs = [float(cosine_schedule(s, peak_lr=1.0, warmup=10, total=100))
+           for s in range(100)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[10] - 1.0) < 0.06          # warmup peak
+    assert lrs[99] < 0.2                       # decayed
+    assert min(lrs[10:]) >= 0.1 - 1e-6         # floor

@@ -1,0 +1,162 @@
+"""Benchmark 6 — sharded lock table: throughput scaling and fairness.
+
+Sweeps hosts × shards × contention over the simulated fabric (remote ops carry
+the same injected ~20 µs latency as ``lock_compare``) and reports, per config:
+
+* aggregate lease acquisitions/second across all client threads,
+* a Jain fairness index over per-client acquisition counts,
+* per-class RDMA ops per acquisition from the table's own telemetry —
+  verifying the tentpole claim that **home-shard clients issue zero simulated
+  RDMA ops** (every host is the paper's local class for its shard slice).
+
+``shards=1`` is the pre-sharding baseline (one ALock service fronting the
+whole keyspace, host 0 privileged); larger shard counts spread the privilege
+so aggregate throughput scales and fairness across hosts improves.
+
+Workloads:
+
+* ``home``    — each client only touches keys homed on its own host (the
+  placement-aware layout a sharded KV store would use);
+* ``uniform`` — every client draws keys uniformly (placement-oblivious).
+"""
+
+import random
+import threading
+import time
+
+from repro.core import AsymmetricMemory, OpCounts, make_scheduler
+from repro.coord import ShardedLockTable
+from repro.coord.table import LOCAL, REMOTE
+
+REMOTE_DELAY = 20e-6  # 20 µs per remote op, paper §1's ~10× asymmetry
+KEYS_PER_HOST = 8
+TTL = 60.0
+
+
+class _DelayMem(AsymmetricMemory):
+    def rread(self, p, reg):
+        time.sleep(REMOTE_DELAY)
+        return super().rread(p, reg)
+
+    def rwrite(self, p, reg, value):
+        time.sleep(REMOTE_DELAY)
+        super().rwrite(p, reg, value)
+
+    def rcas(self, p, reg, expected, swap):
+        time.sleep(REMOTE_DELAY)
+        return super().rcas(p, reg, expected, swap)
+
+
+def _jain(xs):
+    xs = [x for x in xs if x >= 0]
+    total = sum(xs)
+    if total == 0:
+        return 0.0
+    return total * total / (len(xs) * sum(x * x for x in xs))
+
+
+def _keys_by_home(table, num_hosts):
+    """KEYS_PER_HOST keys per host, found by stable-hash placement.
+
+    With fewer shards than hosts (the ``shards=1`` baseline) some hosts own
+    no shard at all; they fall back to keys homed elsewhere — which is
+    exactly the baseline's cost story: locality is impossible for them.
+    """
+    per_host = {h: [] for h in range(num_hosts)}
+    pool = []
+    for i in range(20_000):
+        if all(len(v) >= KEYS_PER_HOST for v in per_host.values()):
+            break
+        k = f"record/{i}"
+        pool.append(k)
+        h = table.home_of(k)
+        if len(per_host[h]) < KEYS_PER_HOST:
+            per_host[h].append(k)
+    for h in range(num_hosts):
+        j = 0
+        while len(per_host[h]) < KEYS_PER_HOST:
+            per_host[h].append(pool[(h * KEYS_PER_HOST + j) % len(pool)])
+            j += 1
+    return per_host
+
+
+def _bench(num_hosts, num_shards, workload, seconds=0.4, seed=0):
+    rng = random.Random(seed)
+    mem = _DelayMem(num_hosts, sched=make_scheduler(rng, 0.05))
+    table = ShardedLockTable(mem, num_shards=num_shards)
+    per_host = _keys_by_home(table, num_hosts)
+    all_keys = [k for ks in per_host.values() for k in ks]
+
+    counts = []
+    stop = threading.Event()
+
+    def client(host, idx):
+        p = mem.spawn(host)
+        r = random.Random(seed * 1000 + idx)
+        keys = per_host[host] if workload == "home" else all_keys
+        n = 0
+        while not stop.is_set():
+            lease = table.try_acquire(p, r.choice(keys), TTL)
+            if lease is not None:
+                n += 1
+                table.release(p, lease)
+        counts[idx] = n
+
+    threads = []
+    for h in range(num_hosts):
+        for _ in range(2):  # two client threads per host
+            idx = len(counts)
+            counts.append(0)
+            threads.append(threading.Thread(target=client, args=(h, idx)))
+    for t in threads:
+        t.start()
+    time.sleep(seconds)
+    stop.set()
+    for t in threads:
+        t.join()
+
+    total = sum(counts)
+    totals = table.class_totals()
+    grants = max(sum(r["grants"] for r in table.telemetry()), 1)
+    return {
+        "throughput": total / seconds,
+        "jain": _jain(counts),
+        "local_rdma": totals[LOCAL].rdma_ops,
+        "remote_rdma_per_acq": totals[REMOTE].rdma_ops / grants,
+    }
+
+
+def run(report):
+    num_hosts = 4
+    for workload in ("home", "uniform"):
+        base = None
+        for shards in (1, 4, 16):
+            r = _bench(num_hosts, shards, workload)
+            assert r["local_rdma"] == 0, (
+                f"home-shard clients paid RDMA ops: {r['local_rdma']}"
+            )
+            if shards == 1:
+                base = r["throughput"]
+            speedup = r["throughput"] / max(base, 1e-9)
+            report(
+                f"lock_table/{workload}/hosts{num_hosts}/shards{shards}",
+                1e6 / max(r["throughput"], 1e-9),  # µs per acquisition
+                f"thru={r['throughput']:.0f}/s x{speedup:.2f} "
+                f"jain={r['jain']:.3f} "
+                f"rRDMA/acq={r['remote_rdma_per_acq']:.2f} localRDMA=0",
+            )
+
+
+def main():
+    rows = []
+
+    def report(name, us, derived=""):
+        rows.append(name)
+        print(f"{name},{us:.3f},{derived}")
+
+    run(report)
+    print(f"# {len(rows)} lock-table rows")
+
+
+if __name__ == "__main__":
+    main()

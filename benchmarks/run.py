@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
 
   lock_ops      — RDMA-op cost claims (paper §3.1)         [the paper's table]
   lock_compare  — throughput/fairness vs naive/RPC/filter  (paper §1, §3, §4)
+  lock_table_bench — sharded table: throughput scaling + fairness vs 1 shard
   collectives   — cohort vs flat DCN traffic               (TPU adaptation)
   step_bench    — end-to-end step times (CPU, smoke configs)
   kernel_bench  — Pallas kernels: tiles + correctness
@@ -20,10 +21,12 @@ def main() -> None:
         rows.append((name, us_per_call, derived))
         print(f"{name},{us_per_call:.3f},{derived}")
 
-    from . import collectives, kernel_bench, lock_compare, lock_ops, step_bench
+    from . import (collectives, kernel_bench, lock_compare, lock_ops,
+                   lock_table_bench, step_bench)
 
     failures = []
-    for mod in (lock_ops, lock_compare, collectives, step_bench, kernel_bench):
+    for mod in (lock_ops, lock_compare, lock_table_bench, collectives,
+                step_bench, kernel_bench):
         try:
             mod.run(report)
         except Exception:

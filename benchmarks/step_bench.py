@@ -10,6 +10,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.compat import set_mesh
 from repro.configs import RunConfig, ShapeConfig, get_config
 from repro.launch.mesh import make_mesh
 from repro.launch.steps import (
@@ -50,7 +51,7 @@ def run(report):
         model = Model(cfg)
         shape = ShapeConfig("bench", seq_len=128, global_batch=4, kind="train")
         run_cfg = RunConfig(total_steps=10)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             step, _, state_sh, batch_sh = build_train_step(
                 model, run_cfg, mesh, shape
             )
@@ -67,7 +68,7 @@ def run(report):
     # decode step
     cfg = get_config("llama3.2-1b", smoke=True)
     model = Model(cfg)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         pshape = ShapeConfig("bench", seq_len=32, global_batch=4, kind="prefill")
         prefill, _, (psh, bsh, csh) = build_prefill_step(model, mesh, pshape, 64)
         dshape = ShapeConfig("bench", seq_len=64, global_batch=4, kind="decode")

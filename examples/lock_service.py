@@ -1,53 +1,129 @@
-"""The paper's primitive in action: an asymmetric lock service coordinating
-checkpoint writers across simulated hosts.
+"""The sharded lock table in action: checkpoint-writer leases with fencing.
 
-Four hosts run training shards; host 0 owns the checkpoint store (the
-"local class" — zero fabric operations), hosts 1-3 are remote.  Every epoch
-each host tries to become the writer; the ALock + election guarantee exactly
-one writer with the per-class optimal cost the paper proves.
+Four hosts run training shards over one sharded asymmetric lock table — each
+host is the zero-fabric "local class" for its shard of the keyspace.  Every
+epoch the hosts race for the writer lease; the holder writes the checkpoint
+with its fencing token.  At epoch 3 the winning writer *crashes* while
+holding the lease: the lease expires instead of wedging the table, a new
+writer is granted a larger fencing token, and the store rejects the zombie's
+late write.  A batched multi-key acquire then updates several manifest
+entries atomically, in the table's deadlock-free global key order.
 
     PYTHONPATH=src python examples/lock_service.py
 """
 
 import threading
 import time
+import traceback
 
 from repro.coord import CoordinationService
 
+EPOCHS = 5
+CRASH_EPOCH = 3
+TTL = 0.15  # writer lease TTL: a crashed writer delays the job at most this
+
+
+class CheckpointStore:
+    """A fenced store: rejects writes whose token is older than the best seen
+    (how a real block store survives a zombie writer, Lamport/Burrows style)."""
+
+    def __init__(self):
+        self.best_token = {}  # per checkpoint object: tokens are per-key
+        self.writes = []
+        self.rejected = []
+        self._mu = threading.Lock()
+
+    def write(self, epoch, host, token):
+        with self._mu:
+            if token < self.best_token.get(epoch, -1):
+                self.rejected.append((epoch, host, token))
+                return False
+            self.best_token[epoch] = token
+            self.writes.append((epoch, host, token))
+            return True
+
 
 def main():
-    svc = CoordinationService(num_hosts=4, init_budget=3)
-    results = {}
-    lock_stats = {}
+    svc = CoordinationService(num_hosts=4, init_budget=3, num_shards=8)
+    store = CheckpointStore()
+    gate = threading.Barrier(4)  # epoch alignment between simulated hosts
+    zombie = {}
+    failures = []
+
+    def gate_wait():
+        # Timeout so a dead peer breaks the barrier (BrokenBarrierError in
+        # the survivors) instead of hanging the demo forever.
+        gate.wait(timeout=15)
 
     def host(h):
         p = svc.host_process(h)
-        wins = []
-        for epoch in range(1, 6):
-            # simulate a training epoch
-            time.sleep(0.01 * (1 + h % 2))
-            if svc.elect("ckpt-writer", p, epoch=epoch, home_host=0):
-                wins.append(epoch)
-                time.sleep(0.005)  # "write the checkpoint"
-        results[h] = wins
-        lock_stats[h] = (p.counts.rdma_ops, p.counts.local_ops)
+        for epoch in range(1, EPOCHS + 1):
+            gate_wait()
+            lease = svc.try_acquire(p, f"ckpt-writer/{epoch}", ttl=TTL)
+            if lease is not None:
+                if epoch == CRASH_EPOCH and not zombie:
+                    # Crash while holding the lease: no release, write later.
+                    zombie[epoch] = (h, lease)
+                else:
+                    assert store.write(epoch, h, lease.token)
+            gate_wait()
+            if epoch == CRASH_EPOCH and zombie.get(epoch, (None,))[0] == h:
+                # The rest of the fleet waits out the TTL, re-elects, and a
+                # new writer (larger fencing token) covers the epoch...
+                time.sleep(TTL)
+            gate_wait()
+            if epoch == CRASH_EPOCH:
+                zh, zlease = zombie[epoch]
+                if h != zh:
+                    retry = svc.try_acquire(p, f"ckpt-writer/{epoch}", ttl=TTL)
+                    if retry is not None:
+                        store.write(epoch, h, retry.token)
+                elif h == zh:
+                    time.sleep(TTL / 2)  # stay dead while others re-elect
+            gate_wait()
+            if epoch == CRASH_EPOCH and zombie.get(epoch, (None,))[0] == h:
+                # ...and the zombie's late write must bounce off the fence.
+                zh, zlease = zombie[epoch]
+                assert not store.write(epoch, zh, zlease.token), "fencing failed"
 
-    ts = [threading.Thread(target=host, args=(h,)) for h in range(4)]
+        # Batched manifest update: every host updates its own 3 entries in
+        # one all-or-nothing multi-key acquisition (deadlock-free order).
+        keys = [f"manifest/host{h}/part{i}" for i in range(3)] + ["manifest/epoch"]
+        leases = svc.acquire_batch(p, keys, ttl=5.0, timeout=30.0)
+        assert svc.release_batch(p, leases) == len(leases)
+
+    def run_host(h):
+        try:
+            host(h)
+        except Exception:  # surface instead of hanging peers at the barrier
+            failures.append((h, traceback.format_exc()))
+            gate.abort()
+
+    ts = [threading.Thread(target=run_host, args=(h,)) for h in range(4)]
     for t in ts:
         t.start()
     for t in ts:
         t.join()
+    assert not failures, "host thread failed:\n" + "\n".join(tb for _, tb in failures)
 
-    print("epoch winners per host:", results)
-    all_wins = sorted(w for ws in results.values() for w in ws)
-    assert all_wins == [1, 2, 3, 4, 5], "exactly one writer per epoch"
-    print("\nper-host fabric cost (RDMA ops, local ops):")
-    for h in range(4):
-        r, l = lock_stats[h]
-        cls = "LOCAL " if h == 0 else "remote"
-        print(f"  host {h} [{cls}]: rdma={r:4d} local={l:4d}")
-    assert lock_stats[0][0] == 0, "local host must never touch the fabric"
-    print("\nOK: one writer/epoch; the store-owning host used 0 RDMA ops.")
+    print("fenced checkpoint writes (epoch, host, token):")
+    for row in store.writes:
+        print("   ", row)
+    print("rejected zombie writes:", store.rejected)
+    epochs_written = sorted({e for e, _, _ in store.writes})
+    assert epochs_written == list(range(1, EPOCHS + 1)), epochs_written
+    assert store.rejected, "the crashed writer's stale token was not exercised"
+
+    print("\nper-shard telemetry (home host is the zero-RDMA local class):")
+    print(f"  {'shard':>5} {'home':>4} {'keys':>4} {'grants':>6} "
+          f"{'local rdma':>10} {'remote rdma':>11}")
+    for row in svc.telemetry():
+        print(f"  {row['shard']:>5} {row['home_host']:>4} {row['keys']:>4} "
+              f"{row['grants']:>6} {row['local'].rdma_ops:>10} "
+              f"{row['remote'].rdma_ops:>11}")
+        assert row["local"].rdma_ops == 0, "local class must never touch the fabric"
+    print("\nOK: one fenced writer per epoch; a crashed holder's lease expired "
+          "instead of wedging the shard; local classes used 0 RDMA ops.")
 
 
 if __name__ == "__main__":

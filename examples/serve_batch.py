@@ -17,11 +17,13 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--admission-slots", type=int, default=4)
     args = ap.parse_args()
 
     out = serve(
         args.arch, smoke=True, batch=args.batch,
         prompt_len=args.prompt_len, gen_len=args.gen,
+        admission_slots=args.admission_slots,
     )
     toks = out["tokens"]
     print(f"[serve_batch] generated {toks.shape[0]} sequences x "
@@ -31,6 +33,11 @@ def main():
           f"{out['throughput_tok_s']:.0f} tok/s")
     for i, row in enumerate(toks[: min(4, len(toks))]):
         print(f"  seq{i}: {np.array2string(row[:12])}...")
+    if "admission" in out:
+        adm = out["admission"]
+        print(f"[serve_batch] admitted via {adm['slot_key']} "
+              f"(fence token {adm['fence_token']}); "
+              f"lock-table RDMA ops on the serving host: {adm['local_rdma_ops']}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,124 @@
+"""Version-portability shims for the jax mesh/shard_map API surface.
+
+The codebase is written against the modern mesh-context API — ``jax.set_mesh``
+as a context manager, ``jax.shard_map`` with ``axis_names``/``check_vma``,
+``jax.sharding.get_abstract_mesh`` and ``AxisType``-tagged meshes.  Older jax
+releases (0.4.x, which the pinned CI environment may ship) spell these
+``Mesh.__enter__``, ``jax.experimental.shard_map.shard_map(..., auto=...,
+check_rep=...)`` and have no abstract-mesh accessor at all.
+
+Everything in the repo imports the four names below from here, so the version
+difference lives in exactly one module:
+
+* :func:`make_mesh`       — ``jax.make_mesh`` with/without ``axis_types``
+* :func:`set_mesh`        — context manager installing the active mesh
+* :func:`get_abstract_mesh` — the mesh installed by :func:`set_mesh`
+* :func:`shard_map`       — keyword-compatible with the modern ``jax.shard_map``
+
+On modern jax these are thin pass-throughs; on 0.4.x the active mesh is
+tracked in a thread-local (tracing happens on the calling thread, so the
+fallback agrees with jax's own scoping) and ``axis_names`` is translated to
+the old API's complementary ``auto`` set.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Sequence
+
+import jax
+
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+_HAS_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+_HAS_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+
+_tls = threading.local()
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              devices: Optional[Sequence] = None) -> "jax.sharding.Mesh":
+    """``jax.make_mesh`` that tolerates jax versions without ``axis_types``."""
+    if devices is None:
+        n = 1
+        for s in shape:
+            n *= s
+        devices = jax.devices()[:n]
+    if _HAS_AXIS_TYPE:
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+            devices=devices,
+        )
+    return jax.make_mesh(tuple(shape), tuple(axes), devices=devices)
+
+
+if _HAS_SET_MESH:
+
+    def set_mesh(mesh):
+        """Install ``mesh`` as the ambient mesh (modern jax pass-through)."""
+        return jax.set_mesh(mesh)
+
+else:
+
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        """Install ``mesh`` via the legacy ``with mesh:`` resource context."""
+        prev = getattr(_tls, "mesh", None)
+        _tls.mesh = mesh
+        try:
+            with mesh:
+                yield mesh
+        finally:
+            _tls.mesh = prev
+
+
+def get_abstract_mesh():
+    """The mesh installed by :func:`set_mesh` (or ``None`` outside one).
+
+    Keyed off ``_HAS_SET_MESH``, not the accessor's own existence: on jax
+    versions that grew ``get_abstract_mesh`` before ``set_mesh``, our
+    fallback ``set_mesh`` records the mesh in the thread-local, and asking
+    jax instead would return an empty mesh that disagrees with it.
+    """
+    if _HAS_SET_MESH and _HAS_ABSTRACT_MESH:
+        return jax.sharding.get_abstract_mesh()
+    return getattr(_tls, "mesh", None)
+
+
+def shard_map(f, *, mesh=None, in_specs, out_specs,
+              axis_names: Optional[frozenset] = None, check_vma: bool = False):
+    """Keyword-compatible ``jax.shard_map`` across jax versions.
+
+    ``axis_names`` is the set of *manual* axes (modern spelling); on old jax
+    it is translated to the complementary ``auto`` set.  ``mesh=None`` uses
+    the mesh installed by :func:`set_mesh`.
+    """
+    if _HAS_SHARD_MAP:
+        kwargs: dict = dict(in_specs=in_specs, out_specs=out_specs,
+                            check_vma=check_vma)
+        if mesh is None and not _HAS_SET_MESH:
+            # Modern shard_map but legacy mesh scoping: jax's own ambient
+            # mesh is unset, so supply the one our set_mesh() tracked.
+            mesh = get_abstract_mesh()
+        if mesh is not None:
+            kwargs["mesh"] = mesh
+        if axis_names is not None:
+            kwargs["axis_names"] = frozenset(axis_names)
+        return jax.shard_map(f, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    m = mesh if mesh is not None else get_abstract_mesh()
+    if m is None:
+        raise RuntimeError(
+            "shard_map without an explicit mesh requires an active set_mesh() "
+            "context (legacy-jax fallback tracks the mesh there)"
+        )
+    manual = frozenset(axis_names) if axis_names is not None else frozenset(m.axis_names)
+    auto = frozenset(m.axis_names) - manual
+    return _legacy_shard_map(
+        f, mesh=m, in_specs=in_specs, out_specs=out_specs,
+        check_rep=bool(check_vma), auto=auto,
+    )

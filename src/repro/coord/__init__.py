@@ -1,3 +1,9 @@
-"""Host-level coordination built on the paper's ALock (control plane)."""
+"""Host-level coordination built on the paper's ALock (control plane).
+
+``ShardedLockTable`` spreads lock shards over every host so the paper's
+per-class cost optimality covers the whole keyspace; ``CoordinationService``
+wraps it together with named locks, elections and barriers.
+"""
 
 from .service import Barrier, CoordinationService  # noqa: F401
+from .table import Lease, LockShard, ShardedLockTable, stable_key_hash  # noqa: F401

@@ -1,4 +1,5 @@
-"""Coordination service: named asymmetric locks for the training control plane.
+"""Coordination service: the sharded asymmetric lock table plus the named
+locks, elections and barriers the training control plane is built from.
 
 This is where the paper's primitive earns its keep inside the framework.  A
 multi-host training job has exactly the asymmetry the paper models: one host
@@ -10,6 +11,20 @@ one-sided ops, and the budget guarantees neither class starves the other —
 precisely the paper's design goals, applied to checkpoint-writer election and
 elastic-membership barriers.
 
+Two tiers of API:
+
+* **Lock table** (:class:`~repro.coord.table.ShardedLockTable`, delegated via
+  ``try_acquire`` / ``acquire`` / ``acquire_batch`` / ``release`` / ``renew``
+  / ``telemetry``): the scalable path.  The keyspace is sharded over all
+  hosts so *every* host is the zero-RDMA local class for its slice, leases
+  expire so a crashed holder cannot wedge a shard, and fencing tokens let
+  downstream stores reject a dead holder's stale writes.
+* **Named locks** (``lock`` / ``elect`` / :class:`Barrier`): small fixed sets
+  of control-plane records pinned to an explicit home host — the original
+  one-record-per-lock shape, kept for the handful of singleton records
+  (membership epoch, barrier generations) where explicit placement beats
+  hashed placement.
+
 Hosts are simulated by threads over :class:`repro.core.AsymmetricMemory`; on a
 real deployment the same algorithm runs over RDMA verbs (the memory API is the
 paper's register model).
@@ -19,17 +34,30 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence
 
-from repro.core import ALock, AsymmetricMemory, Process
+from repro.core import ALock, AsymmetricMemory, OpCounts, Process
+
+from .table import Lease, ShardedLockTable
 
 
 class CoordinationService:
-    """Named ALocks + election + barriers over one asymmetric memory."""
+    """Sharded lock table + named ALocks + election + barriers."""
 
-    def __init__(self, num_hosts: int, init_budget: int = 4, sched=None):
+    def __init__(
+        self,
+        num_hosts: int,
+        init_budget: int = 4,
+        num_shards: Optional[int] = None,
+        sched=None,
+        clock=None,
+    ):
         self.num_hosts = num_hosts
         self.mem = AsymmetricMemory(num_hosts, sched=sched)
+        self.table = ShardedLockTable(
+            self.mem, num_shards=num_shards, init_budget=init_budget,
+            clock=clock, name="svc.table",
+        )
         self._locks: Dict[str, ALock] = {}
         self._claims: Dict[str, object] = {}
         self._init_budget = init_budget
@@ -39,7 +67,43 @@ class CoordinationService:
         """One coordination process per host (call once per host thread)."""
         return self.mem.spawn(host)
 
+    # ------------------------------------------------------------ lock table
+    def shard_of(self, key: str) -> int:
+        return self.table.shard_of(key)
+
+    def home_of(self, key: str) -> int:
+        return self.table.home_of(key)
+
+    def try_acquire(self, p: Process, key: str, ttl: float) -> Optional[Lease]:
+        return self.table.try_acquire(p, key, ttl)
+
+    def acquire(self, p: Process, key: str, ttl: float,
+                timeout: Optional[float] = None) -> Lease:
+        return self.table.acquire(p, key, ttl, timeout=timeout)
+
+    def acquire_batch(self, p: Process, keys: Sequence[str], ttl: float,
+                      timeout: Optional[float] = None) -> List[Lease]:
+        return self.table.acquire_batch(p, keys, ttl, timeout=timeout)
+
+    def release(self, p: Process, lease: Lease) -> bool:
+        return self.table.release(p, lease)
+
+    def release_batch(self, p: Process, leases: Sequence[Lease]) -> int:
+        return self.table.release_batch(p, leases)
+
+    def renew(self, p: Process, lease: Lease,
+              ttl: Optional[float] = None) -> Optional[Lease]:
+        return self.table.renew(p, lease, ttl)
+
+    def telemetry(self) -> List[Dict]:
+        return self.table.telemetry()
+
+    def class_totals(self) -> Dict[int, OpCounts]:
+        return self.table.class_totals()
+
+    # ------------------------------------------------------------ named locks
     def lock(self, name: str, home_host: int = 0) -> ALock:
+        """A singleton control-plane lock pinned to an explicit home host."""
         with self._guard:
             lk = self._locks.get(name)
             if lk is None:

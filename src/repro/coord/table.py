@@ -1,0 +1,312 @@
+"""Sharded asymmetric lock table: the paper's per-class cost optimality,
+applied to a whole keyspace instead of one record.
+
+A single :class:`~repro.core.ALock` makes exactly one host the privileged
+"local" class; everyone else pays fabric operations.  That is the right shape
+for one hot record, but a control plane serving millions of keys wants the
+privilege *spread out*: partition the keyspace into ``num_shards`` shards,
+home shard ``s`` on host ``s % num_hosts`` (a stable hash, so placement never
+depends on interpreter state), and guard each shard's lease metadata with its
+own ALock.  Every host is then the zero-RDMA local class for its slice of the
+keyspace, and the paper's cost claims hold *per shard*: a client transacting
+on keys homed on its own host issues **zero** simulated RDMA operations, and
+a remote client pays the ALock's bounded budget.
+
+Layered on the shard locks is a **lease table** (the long-lived exclusion):
+
+* ``try_acquire(p, key, ttl)`` grants a :class:`Lease` with a monotonically
+  increasing **fencing token** per key.  The shard's ALock is held only for
+  the short metadata transaction — the lease itself is what excludes other
+  clients, so a crashed holder can never wedge the shard: its lease expires
+  after ``ttl`` and the next grant carries a larger token, which downstream
+  resources use to reject the crashed holder's stale writes.
+* ``acquire_batch(p, keys, ttl)`` takes multiple leases in the **global key
+  order** ``(shard_of(key), key)``.  All batched clients walk the same total
+  order, so no cycle of waiters can form — deadlock freedom without a
+  detector (see ``docs/lock-table.md``).
+
+Telemetry: every table operation snapshots the calling process's
+:class:`~repro.core.OpCounts` and accumulates the delta into the target
+shard's per-class (LOCAL/REMOTE) totals, so benchmarks and the serving layer
+can verify the zero-RDMA home path without instrumenting clients.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core import ALock, AsymmetricMemory, OpCounts, Process
+
+LOCAL, REMOTE = 0, 1
+
+_NO_HOLDER = -1
+
+
+def stable_key_hash(key: str) -> int:
+    """A process-stable 64-bit hash (Python's ``hash`` is salted per run)."""
+    return int.from_bytes(
+        hashlib.blake2b(key.encode("utf-8"), digest_size=8).digest(), "big"
+    )
+
+
+@dataclass(frozen=True)
+class Lease:
+    """A granted lease: the unit of long-lived exclusion.
+
+    ``token`` is the fencing token — strictly increasing per key across
+    grants, so any resource that records the largest token it has seen can
+    reject writes from a holder whose lease has expired and been re-granted.
+    """
+
+    key: str
+    shard: int
+    holder_pid: int
+    token: int
+    expires_at: float
+    ttl: float
+
+
+class _KeyState:
+    """Per-key lease registers, allocated on the shard's home node.
+
+    All three registers are read/written only inside the shard ALock's
+    critical section, so plain (asymmetry-dispatched) reads and writes
+    suffice — no mixed RMW, hence no Table-1 hazard.
+    """
+
+    __slots__ = ("holder", "expires", "fence")
+
+    def __init__(self, mem: AsymmetricMemory, node: int, name: str):
+        self.holder = mem.alloc(node, f"{name}.holder", _NO_HOLDER)
+        self.expires = mem.alloc(node, f"{name}.expires", 0.0)
+        self.fence = mem.alloc(node, f"{name}.fence", 0)
+
+
+class LockShard:
+    """One shard: an ALock guarding the lease metadata of its keys."""
+
+    def __init__(self, mem: AsymmetricMemory, index: int, home_host: int,
+                 init_budget: int, name: str):
+        self.index = index
+        self.home_host = home_host
+        self.alock = ALock(mem, home_host, init_budget, name=f"{name}.s{index}")
+        self.keys: Dict[str, _KeyState] = {}
+        # Meta-level accounting (not part of the simulated protocol).
+        self.stats = {LOCAL: OpCounts(), REMOTE: OpCounts()}
+        self.grants = 0
+        self.rejects = 0
+        self.expirations = 0
+        self._meta = threading.Lock()
+
+
+class ShardedLockTable:
+    """N lock shards spread over the hosts of one asymmetric memory."""
+
+    def __init__(
+        self,
+        mem: AsymmetricMemory,
+        num_shards: Optional[int] = None,
+        init_budget: int = 4,
+        clock: Optional[Callable[[], float]] = None,
+        name: str = "table",
+    ):
+        self.mem = mem
+        self.num_hosts = mem.num_nodes
+        self.num_shards = num_shards or 2 * self.num_hosts
+        if self.num_shards <= 0:
+            raise ValueError("num_shards must be > 0")
+        self.clock = clock or time.monotonic
+        self.name = name
+        self.shards = [
+            LockShard(mem, s, s % self.num_hosts, init_budget, name)
+            for s in range(self.num_shards)
+        ]
+
+    # ---------------------------------------------------------- placement
+    def shard_of(self, key: str) -> int:
+        """Stable hash placement: same key → same shard, in every process."""
+        return stable_key_hash(key) % self.num_shards
+
+    def home_of(self, key: str) -> int:
+        """The host that is the zero-RDMA local class for ``key``."""
+        return self.shards[self.shard_of(key)].home_host
+
+    def _key_state(self, shard: LockShard, key: str) -> _KeyState:
+        st = shard.keys.get(key)
+        if st is None:
+            with shard._meta:
+                st = shard.keys.get(key)
+                if st is None:
+                    st = _KeyState(
+                        self.mem, shard.home_host,
+                        f"{self.name}.s{shard.index}.k{stable_key_hash(key):016x}",
+                    )
+                    shard.keys[key] = st
+        return st
+
+    # ---------------------------------------------------------- accounting
+    def _account(self, shard: LockShard, p: Process, snap: OpCounts) -> None:
+        d = p.counts.delta(snap)
+        cls = LOCAL if p.node == shard.home_host else REMOTE
+        with shard._meta:
+            shard.stats[cls] = shard.stats[cls] + d
+
+    # --------------------------------------------------------------- leases
+    def try_acquire(self, p: Process, key: str, ttl: float) -> Optional[Lease]:
+        """One lease-table transaction; non-blocking.
+
+        Grants iff the key is free or its current lease has expired; a fresh
+        grant always carries a larger fencing token.  Returns ``None`` while
+        a live lease exists — *including* the caller's own (non-reentrant: a
+        holder extends via :meth:`renew`; silently superseding would let one
+        process posing as several clients steal its own slots).
+        """
+        if ttl <= 0:
+            raise ValueError("ttl must be > 0")
+        shard = self.shards[self.shard_of(key)]
+        st = self._key_state(shard, key)
+        snap = p.counts.snapshot()
+        try:
+            with shard.alock.guard(p):
+                now = self.clock()
+                holder = self.mem.auto_read(p, st.holder)
+                expires = self.mem.auto_read(p, st.expires)
+                expired = holder != _NO_HOLDER and now >= expires
+                if holder != _NO_HOLDER and not expired:
+                    with shard._meta:
+                        shard.rejects += 1
+                    return None
+                token = self.mem.auto_read(p, st.fence) + 1
+                self.mem.auto_write(p, st.fence, token)
+                self.mem.auto_write(p, st.holder, p.pid)
+                self.mem.auto_write(p, st.expires, now + ttl)
+                with shard._meta:
+                    shard.grants += 1
+                    if expired:
+                        shard.expirations += 1
+                return Lease(key, shard.index, p.pid, token, now + ttl, ttl)
+        finally:
+            self._account(shard, p, snap)
+
+    def acquire(self, p: Process, key: str, ttl: float,
+                timeout: Optional[float] = None,
+                poll: float = 0.0005) -> Lease:
+        """Blocking acquire: retry ``try_acquire`` until granted or timeout.
+
+        ``poll`` backs off between attempts — every retry is a full shard
+        ALock transaction (remote ops for remote clients), so spinning at
+        full rate would burn a core *and* inflate the REMOTE-class telemetry
+        with retry traffic.
+        """
+        deadline = None if timeout is None else self.clock() + timeout
+        while True:
+            lease = self.try_acquire(p, key, ttl)
+            if lease is not None:
+                return lease
+            if deadline is not None and self.clock() > deadline:
+                raise TimeoutError(f"lease on {key!r} not granted in {timeout}s")
+            time.sleep(poll)
+
+    def renew(self, p: Process, lease: Lease, ttl: Optional[float] = None) -> Optional[Lease]:
+        """Extend a still-valid lease; ``None`` if it was lost (fencing)."""
+        ttl = ttl if ttl is not None else lease.ttl
+        shard = self.shards[lease.shard]
+        st = self._key_state(shard, lease.key)
+        snap = p.counts.snapshot()
+        try:
+            with shard.alock.guard(p):
+                now = self.clock()
+                if (
+                    self.mem.auto_read(p, st.holder) != lease.holder_pid
+                    or self.mem.auto_read(p, st.fence) != lease.token
+                    or now >= self.mem.auto_read(p, st.expires)
+                ):
+                    return None
+                self.mem.auto_write(p, st.expires, now + ttl)
+                return Lease(lease.key, lease.shard, lease.holder_pid,
+                             lease.token, now + ttl, ttl)
+        finally:
+            self._account(shard, p, snap)
+
+    def release(self, p: Process, lease: Lease) -> bool:
+        """Release iff the lease is still the current grant (token match)."""
+        shard = self.shards[lease.shard]
+        st = self._key_state(shard, lease.key)
+        snap = p.counts.snapshot()
+        try:
+            with shard.alock.guard(p):
+                if (
+                    self.mem.auto_read(p, st.holder) != lease.holder_pid
+                    or self.mem.auto_read(p, st.fence) != lease.token
+                ):
+                    return False  # stale: expired and re-granted elsewhere
+                self.mem.auto_write(p, st.holder, _NO_HOLDER)
+                self.mem.auto_write(p, st.expires, 0.0)
+                return True
+        finally:
+            self._account(shard, p, snap)
+
+    # --------------------------------------------------------------- batches
+    def batch_order(self, keys: Iterable[str]) -> List[str]:
+        """The deadlock-avoidance total order: ``(shard_of(key), key)``."""
+        return sorted(set(keys), key=lambda k: (self.shard_of(k), k))
+
+    def acquire_batch(self, p: Process, keys: Sequence[str], ttl: float,
+                      timeout: Optional[float] = None) -> List[Lease]:
+        """Acquire every key (deduplicated) in the global key order.
+
+        All-or-nothing: ``timeout`` bounds the *whole batch*; on expiry,
+        already-granted leases are released and ``TimeoutError`` is raised.
+        Because every batched client acquires in the same total order, a
+        cycle of waiters cannot form.
+        """
+        ordered = self.batch_order(keys)
+        deadline = None if timeout is None else self.clock() + timeout
+        held: List[Lease] = []
+        try:
+            for key in ordered:
+                remaining = (
+                    None if deadline is None
+                    else max(deadline - self.clock(), 0.0)
+                )
+                held.append(self.acquire(p, key, ttl, timeout=remaining))
+        except TimeoutError:
+            for lease in held:
+                self.release(p, lease)
+            raise
+        return held
+
+    def release_batch(self, p: Process, leases: Sequence[Lease]) -> int:
+        """Release a batch (any order); returns how many were still current."""
+        return sum(1 for lease in leases if self.release(p, lease))
+
+    # ------------------------------------------------------------- telemetry
+    def telemetry(self) -> List[Dict]:
+        """Per-shard snapshot: placement, grant counters, per-class OpCounts."""
+        out = []
+        for shard in self.shards:
+            with shard._meta:
+                out.append({
+                    "shard": shard.index,
+                    "home_host": shard.home_host,
+                    "keys": len(shard.keys),
+                    "grants": shard.grants,
+                    "rejects": shard.rejects,
+                    "expirations": shard.expirations,
+                    "local": shard.stats[LOCAL].snapshot(),
+                    "remote": shard.stats[REMOTE].snapshot(),
+                })
+        return out
+
+    def class_totals(self) -> Dict[int, OpCounts]:
+        """Aggregate per-class OpCounts across all shards."""
+        totals = {LOCAL: OpCounts(), REMOTE: OpCounts()}
+        for shard in self.shards:
+            with shard._meta:
+                for cls in (LOCAL, REMOTE):
+                    totals[cls] = totals[cls] + shard.stats[cls]
+        return totals

@@ -36,6 +36,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed CompilerParams (new) <- TPUCompilerParams (jax 0.4.x)
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 _NEG_INF = -1e30
 
 
@@ -137,7 +140,7 @@ def flash_attention_fwd(
             pltpu.VMEM((qb, 1), jnp.float32),
             pltpu.VMEM((qb, dv), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

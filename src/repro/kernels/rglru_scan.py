@@ -26,6 +26,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed CompilerParams (new) <- TPUCompilerParams (jax 0.4.x)
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, h_scr, *, nt: int):
     ti = pl.program_id(2)
@@ -83,7 +86,7 @@ def rglru_scan_fwd(
         out_specs=pl.BlockSpec((1, tb, wb), lambda bi, wi, ti: (bi, ti, wi)),
         out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
         scratch_shapes=[pltpu.VMEM((1, wb), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

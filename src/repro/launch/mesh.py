@@ -10,7 +10,9 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from ..compat import make_mesh as _compat_make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False,
@@ -29,19 +31,10 @@ def make_production_mesh(*, multi_pod: bool = False,
             "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count"
             "=512 before importing jax"
         )
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes), devices=devices
-    )
+    return _compat_make_mesh(shape, axes, devices=devices)
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str],
               devices: Optional[Sequence] = None) -> Mesh:
     """Arbitrary mesh for tests/examples (CPU-scale)."""
-    n = 1
-    for s in shape:
-        n *= s
-    devices = devices if devices is not None else jax.devices()[:n]
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(AxisType.Auto,) * len(axes), devices=devices,
-    )
+    return _compat_make_mesh(shape, axes, devices=devices)

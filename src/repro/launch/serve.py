@@ -5,11 +5,21 @@ tests); ``main`` is the CLI.  Batching model: requests accumulate into fixed
 batches (continuous batching is approximated by slot reuse at the example
 level; the step functions themselves are batch-static, which is what the
 decode dry-run cells lower).
+
+Request-batch **admission** is a lock-table client
+(:class:`BatchAdmission`): each concurrent batch slot is a lease in the
+sharded asymmetric lock table, so admission control inherits the table's
+guarantees — a crashed batch worker's slot expires after its TTL instead of
+throttling the server forever, the fencing token identifies the admission for
+downstream accounting, and the serving host (the table's local class) pays
+zero simulated RDMA operations on its own admission path.  Off by default
+(``admission_slots=0``) so library users and tests keep the bare fast path.
 """
 
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 from typing import Dict, Optional
 
@@ -17,11 +27,83 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import set_mesh
 from ..configs import ShapeConfig, get_config
+from ..coord import CoordinationService
 from ..data import SyntheticLMDataset
 from ..models import Model, input_specs
 from .mesh import make_mesh
 from .steps import build_decode_step, build_prefill_step
+
+
+class BatchAdmission:
+    """Admission control for request batches, as a lock-table client.
+
+    Each of ``num_slots`` concurrent batch slots is a key in the sharded lock
+    table; admitting a batch means taking a lease on a free slot.  The TTL is
+    the worst-case batch walltime: a worker that dies mid-batch stops renewing
+    and its slot re-opens at expiry, so capacity can never leak away.  The
+    lease's fencing token travels with the batch for downstream accounting
+    (e.g. a KV-cache pool can reject a zombie batch's writes).
+    """
+
+    def __init__(self, num_slots: int = 4, ttl: float = 30.0,
+                 svc: Optional[CoordinationService] = None):
+        if num_slots <= 0:
+            raise ValueError("num_slots must be > 0")
+        # Single-host table by default: the serving host is the local class
+        # for every shard, so admissions cost zero simulated RDMA ops.
+        self.svc = svc or CoordinationService(num_hosts=1, num_shards=num_slots)
+        self.num_slots = num_slots
+        self.ttl = ttl
+        self._tls = threading.local()
+
+    def _proc(self):
+        # One coordination Process per server thread: the MCS queue keys its
+        # descriptors by pid, so sharing one pid across threads would corrupt
+        # the shard ALocks (service.host_process: "call once per host thread").
+        p = getattr(self._tls, "p", None)
+        if p is None:
+            p = self._tls.p = self.svc.host_process(0)
+        return p
+
+    def admit(self, timeout: Optional[float] = None):
+        """Take a lease on any free slot (round-robin scan, then block)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            for s in range(self.num_slots):
+                lease = self.svc.try_acquire(self._proc(), f"serve/slot{s}",
+                                             self.ttl)
+                if lease is not None:
+                    return lease
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError(f"no admission slot free in {timeout}s")
+            time.sleep(0.002)  # back off: a full scan found no free slot
+
+    def keepalive(self, lease):
+        """Renew mid-batch (call between prefill and decode, or per chunk)."""
+        renewed = self.svc.renew(self._proc(), lease)
+        if renewed is None:
+            raise RuntimeError(
+                f"admission lease on {lease.key} lost (token {lease.token}); "
+                "the batch overran its TTL and the slot was re-granted"
+            )
+        return renewed
+
+    def complete(self, lease) -> bool:
+        return self.svc.release(self._proc(), lease)
+
+    def stats(self) -> Dict:
+        totals = self.svc.class_totals()
+        rows = self.svc.telemetry()
+        return {
+            "slots": self.num_slots,
+            "grants": sum(r["grants"] for r in rows),
+            "rejects": sum(r["rejects"] for r in rows),
+            "expirations": sum(r["expirations"] for r in rows),
+            "local_rdma_ops": totals[0].rdma_ops,
+            "local_ops": totals[0].local_ops,
+        }
 
 
 def serve(
@@ -35,17 +117,26 @@ def serve(
     mesh_axes=("data", "model"),
     greedy: bool = True,
     seed: int = 0,
+    admission_slots: int = 0,
+    admission_ttl: float = 30.0,
+    admission: Optional[BatchAdmission] = None,
 ) -> Dict:
     cfg = get_config(arch, smoke=smoke)
     if not cfg.causal:
         raise ValueError(f"{arch} is encoder-only: no decode path")
+    # A caller-supplied BatchAdmission is the real gate (shared across serve()
+    # calls / server threads, bounding their concurrency); admission_slots
+    # alone builds a private table, useful for the telemetry but never
+    # contended by anyone else.
+    if admission is None and admission_slots > 0:
+        admission = BatchAdmission(num_slots=admission_slots, ttl=admission_ttl)
     mesh = make_mesh(mesh_shape, mesh_axes)
     model = Model(cfg)
     max_len = prompt_len + gen_len
     pshape = ShapeConfig("serve", seq_len=prompt_len, global_batch=batch,
                          kind="prefill")
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         prefill_fn, _, (param_sh, batch_sh, cache_sh) = build_prefill_step(
             model, mesh, pshape, max_len
         )
@@ -58,32 +149,58 @@ def serve(
                               rng=jax.random.PRNGKey(seed + 1))
         prompts = jax.device_put(prompts, batch_sh)
 
-        t0 = time.time()
-        logits, caches = prefill_fn(params, prompts)
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        prefill_s = time.time() - t0
+        # Admit only now: model build is per-call setup, and the slot TTL
+        # must budget batch *execution*, not JIT compilation (a compile
+        # outlasting the TTL would expire a healthy batch's lease and let the
+        # slot be double-granted).  The first prefill call still compiles, so
+        # warm it before taking the slot when the jitted fn supports AOT.
+        if admission:
+            try:
+                prefill_fn.lower(params, prompts).compile()
+            except (AttributeError, TypeError):
+                pass  # not a jitted callable: compile lands inside the lease
+        slot = admission.admit(timeout=admission_ttl) if admission else None
+        try:
+            t0 = time.time()
+            logits, caches = prefill_fn(params, prompts)
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            prefill_s = time.time() - t0
+            if admission:
+                slot = admission.keepalive(slot)  # prefill done; extend
 
-        generated = [np.asarray(tok)]
-        t1 = time.time()
-        for _ in range(gen_len - 1):
-            logits, caches = decode_fn(params, caches, tok)
-            if greedy:
-                tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-            else:
-                tok = jax.random.categorical(
-                    jax.random.PRNGKey(int(time.time() * 1e6) % 2**31),
-                    logits[:, -1],
-                )[:, None].astype(jnp.int32)
-            generated.append(np.asarray(tok))
-        decode_s = time.time() - t1
+            generated = [np.asarray(tok)]
+            t1 = time.time()
+            for step in range(gen_len - 1):
+                logits, caches = decode_fn(params, caches, tok)
+                if greedy:
+                    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+                else:
+                    tok = jax.random.categorical(
+                        jax.random.PRNGKey(int(time.time() * 1e6) % 2**31),
+                        logits[:, -1],
+                    )[:, None].astype(jnp.int32)
+                generated.append(np.asarray(tok))
+                if admission and step % 8 == 7:
+                    slot = admission.keepalive(slot)  # TTL covers ~8 steps
+            decode_s = time.time() - t1
+        finally:
+            # Release on *every* exit: an exception mid-batch must not hold
+            # the slot hostage for the rest of its TTL.
+            if admission:
+                admission.complete(slot)
 
     tokens = np.concatenate(generated, axis=1)
-    return {
+    out = {
         "tokens": tokens,
         "prefill_seconds": prefill_s,
         "decode_seconds_per_token": decode_s / max(gen_len - 1, 1),
         "throughput_tok_s": tokens.size / max(decode_s + prefill_s, 1e-9),
     }
+    if admission:
+        out["admission"] = dict(
+            admission.stats(), slot_key=slot.key, fence_token=slot.token,
+        )
+    return out
 
 
 def main():
@@ -92,14 +209,18 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--admission-slots", type=int, default=0,
+                    help="admit the batch through the sharded lock table")
     args = ap.parse_args()
     out = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-                gen_len=args.gen)
+                gen_len=args.gen, admission_slots=args.admission_slots)
     print(f"[serve] generated {out['tokens'].shape} tokens; "
           f"prefill {out['prefill_seconds']:.2f}s, "
           f"{out['decode_seconds_per_token'] * 1e3:.1f} ms/token, "
           f"{out['throughput_tok_s']:.1f} tok/s")
     print("[serve] first sequence:", out["tokens"][0][:16])
+    if "admission" in out:
+        print("[serve] admission:", out["admission"])
 
 
 if __name__ == "__main__":

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from ..configs.base import ModelConfig, RunConfig, ShapeConfig
 from ..models import Model
 from ..models.layers import activation_rules
@@ -74,12 +75,16 @@ def _int8_pod_mean(grads_p, ef_p, mesh: Mesh):
             jax.tree.unflatten(tdef, [o[1] for o in outs]),
         )
 
-    fn = jax.shard_map(
+    # Fully manual: the body is collectives-only (pod all-gather + elementwise
+    # quantize), and inputs are replicated over data/model, so claiming every
+    # axis is equivalent — and partial-manual islands trip XLA partitioner
+    # bugs on older jax (same reason as the MoE island, see models/moe.py).
+    fn = shard_map(
         exchange,
         mesh=mesh,
         in_specs=(P("pod"), P("pod")),
         out_specs=(P(), P("pod")),
-        axis_names=frozenset({"pod"}),
+        axis_names=frozenset(mesh.axis_names),
         check_vma=False,
     )
     return fn(grads_p, ef_p)

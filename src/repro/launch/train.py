@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint import CheckpointManager, load_checkpoint
+from ..compat import set_mesh
 from ..configs import RunConfig, SHAPES, ShapeConfig, get_config
 from ..coord import CoordinationService
 from ..data import SyntheticLMDataset, make_batch_iterator
@@ -56,7 +57,7 @@ def train(
         run.checkpoint_dir, every=run.checkpoint_every, svc=svc, host=0
     )
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         step_fn, state_shapes, state_sh, batch_sh = build_train_step(
             model, run, mesh, shape
         )

@@ -21,12 +21,12 @@ def test_cohort_all_reduce_equals_flat(multidevice):
     out = multidevice(
         """
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh, set_mesh
 from repro.core import cohort_all_reduce, flat_all_reduce
-mesh = jax.make_mesh((2,2,2), ('pod','data','model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh = make_mesh((2,2,2), ('pod','data','model'))
 tree = {'w': jnp.arange(24, dtype=jnp.float32).reshape(4,6),
         'b': jnp.ones((3,))*0.5}
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     a = cohort_all_reduce(tree, mesh)
     b = flat_all_reduce(tree, mesh)
 for k in tree:
@@ -47,18 +47,19 @@ def test_int8_error_feedback_converges(multidevice):
         """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh, set_mesh, shard_map
 from repro.core.cohort import pod_sync_grads, SyncConfig
-mesh = jax.make_mesh((2,2,2), ('pod','data','model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh = make_mesh((2,2,2), ('pod','data','model'))
 cfg = SyncConfig(mode='sync', compress_int8=True)
 def body(g, e):
     return pod_sync_grads(g, cfg, e)
-f = jax.shard_map(body, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
-                  axis_names={'pod'}, check_vma=False)
+# fully manual: collectives-only body; partial-manual trips old-XLA bugs
+f = shard_map(body, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+              axis_names=frozenset(mesh.axis_names), check_vma=False)
 g = {'w': jax.random.normal(jax.random.PRNGKey(0), (8, 16))}
 e = {'w': jnp.zeros((8, 16))}
 total_err = []
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     acc = jnp.zeros((8, 16))
     for i in range(24):
         m, e = jax.jit(f)(g, e)

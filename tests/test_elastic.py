@@ -9,6 +9,7 @@ def test_remesh_restore_preserves_state(multidevice, tmp_path):
     out = multidevice(
         f"""
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import set_mesh
 from repro.configs import get_config, ShapeConfig, RunConfig
 from repro.models import Model, input_specs
 from repro.launch.mesh import make_mesh
@@ -23,7 +24,7 @@ model = Model(cfg)
 
 # Phase 1: train 2 steps on an 8-device (4, 2) mesh, checkpoint.
 mesh_a = make_mesh((4, 2), ('data', 'model'))
-with jax.set_mesh(mesh_a):
+with set_mesh(mesh_a):
     step, shapes, sh_a, bsh_a = build_train_step(model, run, mesh_a, shp)
     state = jax.device_put(init_train_state(model, run, jax.random.PRNGKey(0)), sh_a)
     batch = jax.device_put(input_specs(cfg, shp, concrete=True, dtype=jnp.float32), bsh_a)
@@ -36,7 +37,7 @@ with jax.set_mesh(mesh_a):
 
 # Phase 2: "lose half the fleet" — restore on a (2, 2) mesh and continue.
 mesh_b = make_mesh((2, 2), ('data', 'model'), devices=jax.devices()[:4])
-with jax.set_mesh(mesh_b):
+with set_mesh(mesh_b):
     step_b, shapes_b, sh_b, bsh_b = build_train_step(model, run, mesh_b, shp)
     restored, step_no, _ = load_checkpoint(ckpt_dir, shapes_b, shardings=sh_b)
     batch_b = jax.device_put(input_specs(cfg, shp, concrete=True, dtype=jnp.float32), bsh_b)

@@ -1,0 +1,288 @@
+"""Sharded lock table: placement stability, leases + fencing, batched
+acquisition, and the per-shard mutual-exclusion / cost invariants."""
+
+import random
+import threading
+import time
+
+import pytest
+
+from repro.core import AsymmetricMemory, make_scheduler
+from repro.coord import CoordinationService, ShardedLockTable
+from repro.coord.table import LOCAL, REMOTE
+
+
+class FakeClock:
+    """Deterministic lease clock (leases expire only when we say so)."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+    def ticker(self, dt: float = 1.0):
+        """A thread advancing the clock until stopped — for timeout tests,
+        where a single jump could race the blocked caller's deadline read."""
+        stop = threading.Event()
+
+        def tick():
+            while not stop.is_set():
+                self.advance(dt)
+                time.sleep(0.001)
+
+        t = threading.Thread(target=tick)
+        t.start()
+        return stop, t
+
+
+def make_table(num_hosts=4, num_shards=8, clock=None, sched=None):
+    mem = AsymmetricMemory(num_hosts, sched=sched)
+    return mem, ShardedLockTable(mem, num_shards=num_shards, clock=clock)
+
+
+def key_homed_on(table, host, salt=""):
+    """Find a key whose shard is homed on ``host`` (stable hash ⇒ exists)."""
+    for i in range(10_000):
+        k = f"key{salt}-{i}"
+        if table.home_of(k) == host:
+            return k
+    raise AssertionError(f"no key homed on host {host}")
+
+
+# ---------------------------------------------------------------- placement
+def test_shard_placement_is_stable_across_instances():
+    _, t1 = make_table()
+    _, t2 = make_table()
+    keys = [f"user/{i}/profile" for i in range(200)]
+    assert [t1.shard_of(k) for k in keys] == [t2.shard_of(k) for k in keys]
+    # every shard's home follows the s % num_hosts layout
+    for s, shard in enumerate(t1.shards):
+        assert shard.home_host == s % t1.num_hosts
+
+
+def test_shard_placement_spreads_keys():
+    _, table = make_table(num_hosts=4, num_shards=8)
+    hits = [0] * table.num_shards
+    for i in range(800):
+        hits[table.shard_of(f"record/{i}")] += 1
+    assert all(h > 0 for h in hits), f"empty shard: {hits}"
+    assert max(hits) < 4 * min(hits), f"badly skewed placement: {hits}"
+
+
+# ------------------------------------------------------------------- leases
+def test_lease_expiry_allows_regrant_with_larger_token():
+    clock = FakeClock()
+    mem, table = make_table(clock=clock)
+    p0, p1 = mem.spawn(0), mem.spawn(1)
+
+    lease = table.try_acquire(p0, "manifest", ttl=10.0)
+    assert lease is not None and lease.holder_pid == p0.pid
+    assert table.try_acquire(p1, "manifest", ttl=10.0) is None  # held
+
+    clock.advance(10.0)  # the holder "crashed"; its lease lapses
+    regrant = table.try_acquire(p1, "manifest", ttl=10.0)
+    assert regrant is not None, "expired lease wedged the shard"
+    assert regrant.token > lease.token, "fencing token must increase"
+    # The crashed holder's stale lease can no longer release or renew.
+    assert table.release(p0, lease) is False
+    assert table.renew(p0, lease) is None
+    # The live holder still can.
+    assert table.release(p1, regrant) is True
+
+
+def test_fencing_tokens_strictly_increase_per_key():
+    clock = FakeClock()
+    mem, table = make_table(clock=clock)
+    p = mem.spawn(0)
+    tokens = []
+    for _ in range(10):
+        lease = table.try_acquire(p, "hot-key", ttl=5.0)
+        assert lease is not None
+        tokens.append(lease.token)
+        table.release(p, lease)
+    assert tokens == sorted(tokens) and len(set(tokens)) == len(tokens)
+
+
+def test_acquire_is_not_reentrant_and_renew_extends():
+    clock = FakeClock()
+    mem, table = make_table(clock=clock)
+    p = mem.spawn(2)
+    a = table.try_acquire(p, "k", ttl=5.0)
+    assert a is not None
+    # Non-reentrant: one process posing as several clients must not be able
+    # to steal its own live lease (holders extend via renew instead).
+    assert table.try_acquire(p, "k", ttl=5.0) is None
+    clock.advance(4.0)
+    a2 = table.renew(p, a, ttl=5.0)
+    assert a2 is not None and a2.token == a.token and a2.expires_at == 9.0
+    clock.advance(6.0)
+    assert table.renew(p, a2) is None  # expired: renew must fail
+    # ...but the expired key is re-grantable, with a larger token.
+    b = table.try_acquire(p, "k", ttl=5.0)
+    assert b is not None and b.token > a.token
+
+
+def test_blocking_acquire_times_out():
+    clock = FakeClock()
+    mem, table = make_table(clock=clock)
+    p0, p1 = mem.spawn(0), mem.spawn(1)
+    table.try_acquire(p0, "k", ttl=1e9)  # held essentially forever
+
+    stop, t = clock.ticker()
+    try:
+        with pytest.raises(TimeoutError):
+            table.acquire(p1, "k", ttl=1.0, timeout=10.0)
+    finally:
+        stop.set()
+        t.join()
+
+
+# ----------------------------------------------------------------- batches
+def test_batch_order_is_total_and_deduplicated():
+    _, table = make_table()
+    order = table.batch_order(["b", "a", "b", "c", "a"])
+    assert sorted(order) == ["a", "b", "c"]
+    assert order == table.batch_order(reversed(order))  # order-independent
+
+
+def test_batched_acquire_deadlock_freedom_under_conflicting_orders():
+    """Clients requesting overlapping key sets in *opposite* orders must all
+    complete: the table imposes the global (shard, key) order internally."""
+    mem, table = make_table(num_hosts=3, num_shards=6)
+    keys = [f"row/{i}" for i in range(6)]
+    done = []
+    errors = []
+
+    def client(host, my_keys, rounds=25):
+        p = mem.spawn(host)
+        try:
+            for _ in range(rounds):
+                leases = table.acquire_batch(p, my_keys, ttl=30.0, timeout=20.0)
+                assert len(leases) == len(set(my_keys))
+                assert table.release_batch(p, leases) == len(leases)
+            done.append(host)
+        except Exception as e:  # pragma: no cover - surfaced via assert below
+            errors.append((host, repr(e)))
+
+    ts = [
+        threading.Thread(target=client, args=(0, keys)),
+        threading.Thread(target=client, args=(1, list(reversed(keys)))),
+        threading.Thread(target=client, args=(2, keys[3:] + keys[:3])),
+    ]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=60)
+    assert not errors, errors
+    assert sorted(done) == [0, 1, 2], "batched clients deadlocked"
+
+
+def test_batch_timeout_releases_partial_grants():
+    clock = FakeClock()
+    mem, table = make_table(clock=clock)
+    p0, p1 = mem.spawn(0), mem.spawn(1)
+    keys = ["x", "y"]
+    first, second = table.batch_order(keys)
+    blocker = table.try_acquire(p0, second, ttl=1e9)
+    assert blocker is not None
+
+    stop, t = clock.ticker()
+    try:
+        with pytest.raises(TimeoutError):
+            # ttl far beyond the test: only an explicit rollback frees `first`
+            table.acquire_batch(p1, keys, ttl=1e6, timeout=10.0)
+    finally:
+        stop.set()
+        t.join()
+    # the partial grant on `first` was rolled back, not left to expire
+    assert table.try_acquire(p0, first, ttl=1.0) is not None
+
+
+# ------------------------------------------------- mutual exclusion / cost
+@pytest.mark.parametrize("seed", [0, 1])
+def test_leases_mutually_exclude_per_key_under_stress(seed):
+    rng = random.Random(seed)
+    mem = AsymmetricMemory(3, sched=make_scheduler(rng, 0.15))
+    table = ShardedLockTable(mem, num_shards=4)
+    keys = [f"k{i}" for i in range(3)]
+    state = {k: {"in": 0, "max": 0, "count": 0} for k in keys}
+
+    def worker(host):
+        p = mem.spawn(host)
+        r = random.Random(1000 * seed + host)
+        for _ in range(60):
+            k = r.choice(keys)
+            lease = table.acquire(p, k, ttl=60.0, timeout=30.0)
+            st = state[k]
+            st["in"] += 1
+            st["max"] = max(st["max"], st["in"])
+            st["count"] += 1  # non-atomic on purpose: the lease protects it
+            st["in"] -= 1
+            assert table.release(p, lease)
+
+    ts = [threading.Thread(target=worker, args=(h,)) for h in (0, 0, 1, 1, 2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert all(st["max"] == 1 for st in state.values()), state
+    assert sum(st["count"] for st in state.values()) == 5 * 60
+
+
+def test_home_shard_clients_issue_zero_rdma_ops():
+    """The tentpole claim: a client touching only keys homed on its own host
+    is the paper's local class for those shards — zero fabric operations."""
+    mem, table = make_table(num_hosts=4, num_shards=8)
+    host = 2
+    p = mem.spawn(host)
+    for salt in range(5):
+        k = key_homed_on(table, host, salt=str(salt))
+        lease = table.try_acquire(p, k, ttl=5.0)
+        assert lease is not None
+        assert table.release(p, lease)
+    assert p.counts.rdma_ops == 0, vars(p.counts)
+    assert p.counts.local_ops > 0
+    # ...and the per-shard telemetry agrees: LOCAL class never pays RDMA.
+    for row in table.telemetry():
+        assert row["local"].rdma_ops == 0
+
+
+def test_remote_clients_pay_bounded_rdma_and_telemetry_records_it():
+    mem, table = make_table(num_hosts=2, num_shards=2)
+    k = key_homed_on(table, 0)
+    p = mem.spawn(1)  # remote w.r.t. the key's shard
+    lease = table.try_acquire(p, k, ttl=5.0)
+    assert lease is not None
+    assert 0 < p.counts.rdma_ops <= 12, vars(p.counts)
+    totals = table.class_totals()
+    assert totals[REMOTE].rdma_ops == p.counts.rdma_ops
+    assert totals[LOCAL].rdma_ops == 0
+
+
+# ------------------------------------------------------- service delegation
+def test_service_delegates_to_table_and_keeps_named_locks():
+    clock = FakeClock()
+    svc = CoordinationService(num_hosts=4, num_shards=8, clock=clock)
+    p0, p1 = svc.host_process(0), svc.host_process(1)
+
+    lease = svc.try_acquire(p0, "ckpt/manifest", ttl=5.0)
+    assert lease is not None
+    assert svc.try_acquire(p1, "ckpt/manifest", ttl=5.0) is None
+    assert svc.release(p0, lease)
+
+    batch = svc.acquire_batch(p1, ["a", "b", "c"], ttl=5.0, timeout=5.0)
+    assert len(batch) == 3
+    assert svc.release_batch(p1, batch) == 3
+
+    rows = svc.telemetry()
+    assert len(rows) == 8
+    assert sum(r["grants"] for r in rows) == 4
+    assert svc.home_of("a") == rows[svc.shard_of("a")]["home_host"]
+
+    # legacy named-lock surface still works alongside the table
+    assert svc.elect("writer", p0, epoch=1)
+    assert not svc.elect("writer", p1, epoch=1)

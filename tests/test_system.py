@@ -50,10 +50,10 @@ def test_serving_generates_tokens():
 
 
 def test_moe_arch_trains(tmp_path):
-    run = RunConfig(learning_rate=1e-3, warmup_steps=2, total_steps=12,
+    run = RunConfig(learning_rate=1e-3, warmup_steps=2, total_steps=20,
                     checkpoint_every=1000, checkpoint_dir=str(tmp_path))
     out = train(
-        "deepseek-v2-236b", smoke=True, steps=12,
+        "deepseek-v2-236b", smoke=True, steps=20,
         shape=ShapeConfig("e2e", seq_len=32, global_batch=4, kind="train"),
         run=run, log_every=4,
     )
@@ -69,6 +69,7 @@ def test_sync_equals_flat_on_multipod_mesh(multidevice):
     out = multidevice(
         """
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import set_mesh
 from repro.configs import get_config, ShapeConfig, RunConfig
 from repro.models import Model, input_specs
 from repro.launch.mesh import make_mesh
@@ -81,7 +82,7 @@ for mode in ['flat', 'sync']:
     run = RunConfig(sync_mode=mode, total_steps=10)
     model = Model(cfg)
     shp = ShapeConfig('t', 32, 4, 'train')
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         step, shapes, state_sh, batch_sh = build_train_step(model, run, mesh, shp)
         state = jax.device_put(init_train_state(model, run, jax.random.PRNGKey(0), 2), state_sh)
         batch = jax.device_put(input_specs(cfg, shp, concrete=True, dtype=jnp.float32), batch_sh)
@@ -104,6 +105,7 @@ def test_int8_compressed_sync_close_to_exact(multidevice):
     out = multidevice(
         """
 import jax, jax.numpy as jnp
+from repro.compat import set_mesh
 from repro.configs import get_config, ShapeConfig, RunConfig
 from repro.models import Model, input_specs
 from repro.launch.mesh import make_mesh
@@ -116,7 +118,7 @@ for mode, extra in [('sync', {}), ('sync', {'compress_int8': True})]:
     run = RunConfig(sync_mode=mode, total_steps=10, **extra)
     model = Model(cfg)
     shp = ShapeConfig('t', 32, 4, 'train')
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         step, shapes, state_sh, batch_sh = build_train_step(model, run, mesh, shp)
         state = jax.device_put(init_train_state(model, run, jax.random.PRNGKey(0), 2), state_sh)
         batch = jax.device_put(input_specs(cfg, shp, concrete=True), batch_sh)
@@ -137,6 +139,7 @@ def test_microbatched_grads_match_full_batch(multidevice):
     out = multidevice(
         """
 import jax, jax.numpy as jnp
+from repro.compat import set_mesh
 from repro.configs import get_config, ShapeConfig, RunConfig
 from repro.models import Model, input_specs
 from repro.launch.mesh import make_mesh
@@ -149,7 +152,7 @@ for mb in [1, 4]:
     run = RunConfig(sync_mode='flat', total_steps=10, microbatches=mb)
     model = Model(cfg)
     shp = ShapeConfig('t', 32, 8, 'train')
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         step, shapes, state_sh, batch_sh = build_train_step(model, run, mesh, shp)
         state = jax.device_put(init_train_state(model, run, jax.random.PRNGKey(0)), state_sh)
         batch = jax.device_put(input_specs(cfg, shp, concrete=True, dtype=jnp.float32), batch_sh)

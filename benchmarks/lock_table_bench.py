@@ -1,39 +1,74 @@
-"""Benchmark 6 — sharded lock table: throughput scaling and fairness.
+"""Benchmark 6 — sharded lock table: throughput scaling, fairness, and the
+hot-path fast paths (renewals, shard-grouped batches, doorbell coalescing).
 
-Sweeps hosts × shards × contention over the simulated fabric (remote ops carry
-the same injected ~20 µs latency as ``lock_compare``) and reports, per config:
+Sweeps hosts × shards × workload over the simulated fabric.  Remote *postings*
+carry an injected ~20 µs latency: each individually-posted op rings its own
+doorbell, while a ``post_batch`` of N work requests rings one — so the delay
+model prices doorbells, which is exactly what RDMA WR-list coalescing buys.
 
-* aggregate lease acquisitions/second across all client threads,
-* a Jain fairness index over per-client acquisition counts,
-* per-class RDMA ops per acquisition from the table's own telemetry —
-  verifying the tentpole claim that **home-shard clients issue zero simulated
-  RDMA ops** (every host is the paper's local class for its shard slice).
+Per config the bench reports:
 
-``shards=1`` is the pre-sharding baseline (one ALock service fronting the
-whole keyspace, host 0 privileged); larger shard counts spread the privilege
-so aggregate throughput scales and fairness across hosts improves.
+* aggregate lease operations/second across all client threads,
+* a Jain fairness index over per-client operation counts,
+* per-class RDMA completions and doorbells per operation from the table's own
+  telemetry — verifying that **home-shard clients issue zero simulated RDMA
+  ops** and that local-holder renewals are RDMA-free (remote holders ≤1 rCAS).
 
 Workloads:
 
 * ``home``    — each client only touches keys homed on its own host (the
   placement-aware layout a sharded KV store would use);
-* ``uniform`` — every client draws keys uniformly (placement-oblivious).
+* ``uniform`` — every client draws keys uniformly (placement-oblivious);
+* ``renew``   — renewal-heavy: each client holds one lease on a key homed on
+  its **own** host and keepalives in a loop (the zero-RDMA fast path);
+* ``renew_remote`` — same, but the key is homed on another host (the 1-rCAS
+  fast path);
+* ``batch``   — batch-heavy: each client loops ``acquire_batch`` /
+  ``release_batch`` over its own multi-shard key set (one ALock critical
+  section per shard group, reads/writes doorbell-coalesced).
+
+``BASELINE`` records the pre-optimisation numbers (per-key critical sections,
+per-op doorbells, ALock-guarded renewals) so ``--json`` emits a before/after
+perf trajectory.
 """
 
+import argparse
+import json
 import random
 import threading
 import time
 
-from repro.core import AsymmetricMemory, OpCounts, make_scheduler
+from repro.core import AsymmetricMemory, make_scheduler
 from repro.coord import ShardedLockTable
 from repro.coord.table import LOCAL, REMOTE
 
-REMOTE_DELAY = 20e-6  # 20 µs per remote op, paper §1's ~10× asymmetry
+REMOTE_DELAY = 20e-6  # 20 µs per remote *posting*, paper §1's ~10× asymmetry
 KEYS_PER_HOST = 8
+BATCH_KEYS = 8
 TTL = 60.0
+
+# Pre-PR numbers (same machine, commit 3e028bd: per-key critical sections,
+# one doorbell per op, ALock-guarded renew/release), measured with this
+# file's protocol — median throughput over seeds (0, 1, 2) at 0.7 s per run.
+# Current runs take the median over SEEDS (more seeds, same estimator: the
+# 2-core container occasionally drops a whole run-batch ~40 % low, and the
+# wider median shrugs that off).  The renewal and batch workloads did not
+# exist then — their baseline is the uniform acquire/release path they
+# previously had to ride.
+BASELINE = {
+    "home/shards1": 218.6,
+    "home/shards4": 3341.4,
+    "home/shards16": 4544.3,
+    "uniform/shards1": 238.6,
+    "uniform/shards4": 457.1,
+    "uniform/shards16": 788.6,
+}
+SEEDS = (0, 1, 2, 3, 4)
 
 
 class _DelayMem(AsymmetricMemory):
+    """Inject fabric latency per doorbell: one posting, one ~RTT."""
+
     def rread(self, p, reg):
         time.sleep(REMOTE_DELAY)
         return super().rread(p, reg)
@@ -45,6 +80,10 @@ class _DelayMem(AsymmetricMemory):
     def rcas(self, p, reg, expected, swap):
         time.sleep(REMOTE_DELAY)
         return super().rcas(p, reg, expected, swap)
+
+    def post_batch(self, p, wrs):
+        time.sleep(REMOTE_DELAY)  # one doorbell, regardless of len(wrs)
+        return super().post_batch(p, wrs)
 
 
 def _jain(xs):
@@ -80,6 +119,14 @@ def _keys_by_home(table, num_hosts):
     return per_host
 
 
+def _key_homed_on(table, host, salt):
+    for i in range(50_000):
+        k = f"lease/{salt}/{i}"
+        if table.home_of(k) == host:
+            return k
+    return f"lease/{salt}/0"  # shards < hosts: host owns nothing; any key
+
+
 def _bench(num_hosts, num_shards, workload, seconds=0.4, seed=0):
     rng = random.Random(seed)
     mem = _DelayMem(num_hosts, sched=make_scheduler(rng, 0.05))
@@ -88,10 +135,11 @@ def _bench(num_hosts, num_shards, workload, seconds=0.4, seed=0):
     all_keys = [k for ks in per_host.values() for k in ks]
 
     counts = []
+    procs = []
     stop = threading.Event()
 
-    def client(host, idx):
-        p = mem.spawn(host)
+    def acq_client(host, idx):
+        p = procs[idx]
         r = random.Random(seed * 1000 + idx)
         keys = per_host[host] if workload == "home" else all_keys
         n = 0
@@ -102,12 +150,43 @@ def _bench(num_hosts, num_shards, workload, seconds=0.4, seed=0):
                 table.release(p, lease)
         counts[idx] = n
 
+    renew_keys = {}  # resolved before the clock starts: hashing 50k
+    # candidate keys per client inside the timed window would understate
+    # the shards=1 rows and skew the recorded speedups.
+
+    def renew_client(host, idx):
+        p = procs[idx]
+        lease = table.acquire(p, renew_keys[idx], TTL, timeout=30.0)
+        n = 0
+        while not stop.is_set():
+            lease = table.renew(p, lease)
+            assert lease is not None, "holder lost its own live lease"
+            n += 1
+        counts[idx] = n
+
+    def batch_client(host, idx):
+        p = procs[idx]
+        keys = [f"batch/h{host}/c{idx}/k{i}" for i in range(BATCH_KEYS)]
+        n = 0
+        while not stop.is_set():
+            leases = table.acquire_batch(p, keys, TTL, timeout=30.0)
+            n += len(leases)
+            table.release_batch(p, leases)
+        counts[idx] = n
+
+    target = {"home": acq_client, "uniform": acq_client,
+              "renew": renew_client, "renew_remote": renew_client,
+              "batch": batch_client}[workload]
     threads = []
     for h in range(num_hosts):
         for _ in range(2):  # two client threads per host
             idx = len(counts)
             counts.append(0)
-            threads.append(threading.Thread(target=client, args=(h, idx)))
+            procs.append(mem.spawn(h))
+            if workload in ("renew", "renew_remote"):
+                t = h if workload == "renew" else (h + 1) % num_hosts
+                renew_keys[idx] = _key_homed_on(table, t, salt=f"h{h}c{idx}")
+            threads.append(threading.Thread(target=target, args=(h, idx)))
     for t in threads:
         t.start()
     time.sleep(seconds)
@@ -117,45 +196,140 @@ def _bench(num_hosts, num_shards, workload, seconds=0.4, seed=0):
 
     total = sum(counts)
     totals = table.class_totals()
-    grants = max(sum(r["grants"] for r in table.telemetry()), 1)
+    rows = table.telemetry()
+    grants = max(sum(r["grants"] for r in rows), 1)
+    ops = max(total, 1)  # acquisitions or renewals, per workload
+    assert totals[LOCAL].rdma_ops == 0, (
+        f"{workload}: local-class clients paid RDMA ops: "
+        f"{totals[LOCAL].rdma_ops}"
+    )
+    if workload == "renew":
+        # Renewal-heavy with same-host keys: every renewal must ride the
+        # zero-RDMA local fast path (no shard ALock, no fabric).
+        assert sum(r["fast_renews"] for r in rows) >= total
+    if workload == "renew_remote" and num_shards >= num_hosts:
+        # Remote holders: exactly one rCAS per fast-path renewal (plus the
+        # bounded one-time acquire cost per client thread).
+        assert totals[REMOTE].remote_cas <= total + 16 * 2 * num_hosts
     return {
+        "workload": workload,
+        "shards": num_shards,
         "throughput": total / seconds,
         "jain": _jain(counts),
         "local_rdma": totals[LOCAL].rdma_ops,
-        "remote_rdma_per_acq": totals[REMOTE].rdma_ops / grants,
+        "remote_rdma_per_op": totals[REMOTE].rdma_ops / ops,
+        "remote_doorbells_per_op": totals[REMOTE].remote_doorbell / ops,
+        "remote_cas": totals[REMOTE].remote_cas,
+        "fast_renews": sum(r["fast_renews"] for r in rows),
+        "fast_releases": sum(r["fast_releases"] for r in rows),
+        "grants": grants,
+        "total_ops": total,
     }
 
 
-def run(report):
+def _bench_median(num_hosts, shards, workload, seconds, seeds=SEEDS):
+    """Median-throughput run over ``seeds``.
+
+    Thread scheduling on an oversubscribed box makes single short runs noisy
+    (±30 % run-to-run); the median over a few seeds is what BASELINE was
+    recorded with and what the JSON trajectory stores.
+    """
+    import gc
+    runs = []
+    for s in seeds:
+        gc.collect()  # don't let a prior config's garbage pause this run
+        runs.append(_bench(num_hosts, shards, workload, seconds=seconds, seed=s))
+    runs.sort(key=lambda r: r["throughput"])
+    med = dict(runs[len(runs) // 2])
+    med["throughput_runs"] = [round(r["throughput"], 1) for r in runs]
+    return med
+
+
+BENCH_NAME = "lock_table"
+_LAST = {"results": [], "seconds": None}  # for benchmarks.run --json
+
+
+def json_extra():
+    """Hook for ``benchmarks.run --json``: the before/after trajectory."""
+    return json_payload(_LAST["results"], _LAST["seconds"])
+
+
+def run(report, seconds=0.7, seeds=SEEDS):
+    _LAST["results"] = results = []
+    _LAST["seconds"] = seconds
     num_hosts = 4
-    for workload in ("home", "uniform"):
+    for workload in ("home", "uniform", "renew", "renew_remote", "batch"):
         base = None
         for shards in (1, 4, 16):
-            r = _bench(num_hosts, shards, workload)
-            assert r["local_rdma"] == 0, (
-                f"home-shard clients paid RDMA ops: {r['local_rdma']}"
-            )
+            r = _bench_median(num_hosts, shards, workload, seconds, seeds)
             if shards == 1:
                 base = r["throughput"]
-            speedup = r["throughput"] / max(base, 1e-9)
+            r["speedup_vs_1shard"] = r["throughput"] / max(base, 1e-9)
+            results.append(r)
             report(
                 f"lock_table/{workload}/hosts{num_hosts}/shards{shards}",
-                1e6 / max(r["throughput"], 1e-9),  # µs per acquisition
-                f"thru={r['throughput']:.0f}/s x{speedup:.2f} "
+                1e6 / max(r["throughput"], 1e-9),  # µs per operation
+                f"thru={r['throughput']:.0f}/s x{r['speedup_vs_1shard']:.2f} "
                 f"jain={r['jain']:.3f} "
-                f"rRDMA/acq={r['remote_rdma_per_acq']:.2f} localRDMA=0",
+                f"rRDMA/op={r['remote_rdma_per_op']:.2f} "
+                f"doorbells/op={r['remote_doorbells_per_op']:.2f} "
+                f"fastrenew={r['fast_renews']} localRDMA=0",
             )
+
+
+def json_payload(results, seconds):
+    """The machine-readable perf-trajectory record (BENCH_lock_table.json)."""
+    current = {}
+    for r in results:
+        current[f"{r['workload']}/shards{r['shards']}"] = {
+            k: v for k, v in r.items() if k not in ("workload", "shards")
+        }
+    speedups = {
+        cfg: round(current[cfg]["throughput"] / before, 3)
+        for cfg, before in BASELINE.items()
+        if cfg in current and before > 0
+    }
+    return {
+        "bench": "lock_table",
+        "config": {
+            "hosts": 4,
+            "clients_per_host": 2,
+            "seconds": seconds,
+            "keys_per_host": KEYS_PER_HOST,
+            "batch_keys": BATCH_KEYS,
+            "remote_delay_us": REMOTE_DELAY * 1e6,
+        },
+        "baseline_pre_pr": BASELINE,
+        "current": current,
+        "speedup_vs_baseline": speedups,
+    }
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI (short runs, same assertions)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the before/after results to PATH")
+    args = ap.parse_args()
+    seconds = 0.1 if args.smoke else 0.7
+    seeds = (0,) if args.smoke else SEEDS
+
     rows = []
 
     def report(name, us, derived=""):
         rows.append(name)
         print(f"{name},{us:.3f},{derived}")
 
-    run(report)
+    run(report, seconds=seconds, seeds=seeds)
     print(f"# {len(rows)} lock-table rows")
+    if args.json:
+        payload = json_extra()
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}")
+        for cfg, x in sorted(payload["speedup_vs_baseline"].items()):
+            print(f"#   {cfg}: {x:.2f}x vs pre-PR")
 
 
 if __name__ == "__main__":

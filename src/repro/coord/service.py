@@ -62,6 +62,37 @@ class CoordinationService:
         self._claims: Dict[str, object] = {}
         self._init_budget = init_budget
         self._guard = threading.Lock()
+        # Read-mostly lease cache: (holder pid, key) -> latest Lease.  The
+        # table's renewal/release fast path CASes the expiry register against
+        # the lease's (token, expires_at) witness, so a caller holding a
+        # *stale* lease object (e.g. the one acquire returned, after several
+        # keepalives) would fall off the fast path.  The cache keeps the
+        # freshest witness per holder and substitutes it when the fencing
+        # token matches — repeat holders skip the slow ALock transaction (and
+        # its table lookups) entirely.  Entries are dropped on release or any
+        # failed renew; leases that silently lapse (a crashed holder never
+        # calls back) are swept inside _cache_put once the cache grows past
+        # an amortised threshold, so it cannot leak unboundedly.
+        self._lease_cache: Dict[tuple, Lease] = {}
+        self._cache_sweep_at = self._CACHE_SWEEP
+
+    _CACHE_SWEEP = 1024
+
+    def _cache_put(self, p: Process, lease: Lease) -> None:
+        cache = self._lease_cache
+        if len(cache) >= self._cache_sweep_at:
+            now = self.table.clock()
+            # Keep anything not yet a full TTL past expiry: a just-expired
+            # witness can still serve the slow path's diagnosis.
+            stale = [k for k, l in list(cache.items())
+                     if now >= l.expires_at + l.ttl]
+            for k in stale:
+                cache.pop(k, None)
+            # Amortise: next sweep only after the surviving (live) set could
+            # have doubled, so steady-state puts stay O(1) even with >1024
+            # live leases (a sweep that evicts nothing doesn't rerun per put).
+            self._cache_sweep_at = max(self._CACHE_SWEEP, 2 * len(cache))
+        cache[(p.pid, lease.key)] = lease
 
     def host_process(self, host: int) -> Process:
         """One coordination process per host (call once per host thread)."""
@@ -75,25 +106,60 @@ class CoordinationService:
         return self.table.home_of(key)
 
     def try_acquire(self, p: Process, key: str, ttl: float) -> Optional[Lease]:
-        return self.table.try_acquire(p, key, ttl)
+        lease = self.table.try_acquire(p, key, ttl)
+        if lease is not None:
+            self._cache_put(p, lease)
+        return lease
 
     def acquire(self, p: Process, key: str, ttl: float,
                 timeout: Optional[float] = None) -> Lease:
-        return self.table.acquire(p, key, ttl, timeout=timeout)
+        lease = self.table.acquire(p, key, ttl, timeout=timeout)
+        self._cache_put(p, lease)
+        return lease
 
     def acquire_batch(self, p: Process, keys: Sequence[str], ttl: float,
                       timeout: Optional[float] = None) -> List[Lease]:
-        return self.table.acquire_batch(p, keys, ttl, timeout=timeout)
+        leases = self.table.acquire_batch(p, keys, ttl, timeout=timeout)
+        for lease in leases:
+            self._cache_put(p, lease)
+        return leases
 
     def release(self, p: Process, lease: Lease) -> bool:
+        cached = self._lease_cache.get((p.pid, lease.key))
+        if cached is not None and cached.token == lease.token:
+            # Same grant: evict and release with the freshest witness (keeps
+            # the CAS fast path hot).  A token mismatch is an older grant's
+            # stale object — leave the live grant's cache entry alone.
+            self._lease_cache.pop((p.pid, lease.key), None)
+            lease = cached
         return self.table.release(p, lease)
 
     def release_batch(self, p: Process, leases: Sequence[Lease]) -> int:
-        return self.table.release_batch(p, leases)
+        return sum(1 for lease in leases if self.release(p, lease))
 
     def renew(self, p: Process, lease: Lease,
               ttl: Optional[float] = None) -> Optional[Lease]:
-        return self.table.renew(p, lease, ttl)
+        """Renew via the table's fast path, witness-corrected by the cache.
+
+        A stale lease *object* (same fencing token, older ``expires_at``) is
+        silently upgraded to the cached latest before the CAS, so repeat
+        holders stay on the zero-ALock fast path no matter which of their
+        lease objects they pass in.  A token mismatch is never upgraded —
+        that is a different grant and must fail fencing validation.
+        """
+        cached = self._lease_cache.get((p.pid, lease.key))
+        if (
+            cached is not None
+            and cached.token == lease.token
+            and cached.expires_at > lease.expires_at
+        ):
+            lease = cached
+        renewed = self.table.renew(p, lease, ttl)
+        if renewed is None:
+            self._lease_cache.pop((p.pid, lease.key), None)
+        else:
+            self._cache_put(p, renewed)
+        return renewed
 
     def telemetry(self) -> List[Dict]:
         return self.table.telemetry()

@@ -25,10 +25,26 @@ Layered on the shard locks is a **lease table** (the long-lived exclusion):
   order, so no cycle of waiters can form — deadlock freedom without a
   detector (see ``docs/lock-table.md``).
 
+Hot-path optimisations (see the "Hot path" section of ``docs/lock-table.md``):
+
+* **Renewal/release fast path** — the current holder extends or drops its
+  lease with a single fencing-token-checked CAS on the expiry register,
+  *without* taking the shard ALock: zero simulated RDMA ops for local
+  holders, exactly one rCAS for remote holders.  The expiry register packs
+  ``(fence_token, expires_at)`` so the CAS validates the fence: a zombie
+  holder's CAS always loses after a re-grant (the token moved on).
+* **Shard-grouped batches** — ``acquire_batch`` holds each shard's ALock
+  once for all of that shard's keys (O(distinct shards) critical sections
+  instead of O(keys)), still walking the global order.
+* **Doorbell coalescing** — remote clients post the critical section's
+  register reads in one :meth:`~repro.core.AsymmetricMemory.post_batch`
+  doorbell and its writes in another, modelling RDMA WR posting lists.
+
 Telemetry: every table operation snapshots the calling process's
-:class:`~repro.core.OpCounts` and accumulates the delta into the target
-shard's per-class (LOCAL/REMOTE) totals, so benchmarks and the serving layer
-can verify the zero-RDMA home path without instrumenting clients.
+:class:`~repro.core.OpCounts` (an O(1) tuple snapshot, accumulated in place —
+no per-op dict copies) and adds the delta to the target shard's per-class
+(LOCAL/REMOTE) totals, so benchmarks and the serving layer can verify the
+zero-RDMA home path without instrumenting clients.
 """
 
 from __future__ import annotations
@@ -37,6 +53,7 @@ import hashlib
 import threading
 import time
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core import ALock, AsymmetricMemory, OpCounts, Process
@@ -45,9 +62,20 @@ LOCAL, REMOTE = 0, 1
 
 _NO_HOLDER = -1
 
+# The expiry register packs (fence_token, expires_at).  expires_at <= FREE_AT
+# means the key is not held (never granted, or released); a grant always
+# writes a strictly positive expiry, so the states cannot be confused.
+_FREE_AT = 0.0
 
+
+@lru_cache(maxsize=1 << 17)
 def stable_key_hash(key: str) -> int:
-    """A process-stable 64-bit hash (Python's ``hash`` is salted per run)."""
+    """A process-stable 64-bit hash (Python's ``hash`` is salted per run).
+
+    Cached: placement hashing of a hot key must not recompute blake2b on
+    every operation (the cache is per-process and placement is stable, so
+    memoisation can never change an answer).
+    """
     return int.from_bytes(
         hashlib.blake2b(key.encode("utf-8"), digest_size=8).digest(), "big"
     )
@@ -60,6 +88,11 @@ class Lease:
     ``token`` is the fencing token — strictly increasing per key across
     grants, so any resource that records the largest token it has seen can
     reject writes from a holder whose lease has expired and been re-granted.
+
+    ``expires_at`` doubles as the fast-path CAS witness: ``renew``/``release``
+    compare-and-swap the expiry register against ``(token, expires_at)``, so
+    hold on to the *latest* lease returned by acquire/renew (the
+    :class:`~repro.coord.CoordinationService` lease cache does this for you).
     """
 
     key: str
@@ -73,16 +106,28 @@ class Lease:
 class _KeyState:
     """Per-key lease registers, allocated on the shard's home node.
 
-    All three registers are read/written only inside the shard ALock's
-    critical section, so plain (asymmetry-dispatched) reads and writes
-    suffice — no mixed RMW, hence no Table-1 hazard.
+    ``holder`` and ``fence`` are read/written **only** inside the shard
+    ALock's critical section; ``fence`` is the authoritative token allocator,
+    which is why grant tokens are strictly monotonic unconditionally.
+
+    ``expires`` packs ``(fence_token, expires_at)`` and is the one register
+    the *current holder* may CAS lock-free (the renewal/release fast path).
+    Because remote RMW is not atomic against the critical section's writes
+    (Table 1), a **zombie's** in-flight rCAS write phase can, in a vanishing
+    window, overwrite a concurrent re-grant's write with its stale tuple.
+    The CS-only ``fence`` makes that clobber *detectable* (``expires`` token
+    ≠ fence) and *unable to affect token allocation*; grant decisions treat
+    a clobbered mirror as expired and repair it (``shard.repairs``
+    telemetry).  This is the standard lease-system posture: expiry-time
+    races cannot be airtight under asynchrony, fencing tokens are what make
+    them harmless downstream — and the tokens themselves never regress.
     """
 
     __slots__ = ("holder", "expires", "fence")
 
     def __init__(self, mem: AsymmetricMemory, node: int, name: str):
         self.holder = mem.alloc(node, f"{name}.holder", _NO_HOLDER)
-        self.expires = mem.alloc(node, f"{name}.expires", 0.0)
+        self.expires = mem.alloc(node, f"{name}.expires", (0, _FREE_AT))
         self.fence = mem.alloc(node, f"{name}.fence", 0)
 
 
@@ -100,6 +145,9 @@ class LockShard:
         self.grants = 0
         self.rejects = 0
         self.expirations = 0
+        self.fast_renews = 0
+        self.fast_releases = 0
+        self.repairs = 0  # clobbered expiry mirrors repaired by a grant
         self._meta = threading.Lock()
 
 
@@ -149,13 +197,119 @@ class ShardedLockTable:
         return st
 
     # ---------------------------------------------------------- accounting
-    def _account(self, shard: LockShard, p: Process, snap: OpCounts) -> None:
-        d = p.counts.delta(snap)
+    def _account(self, shard: LockShard, p: Process, snap: tuple) -> None:
         cls = LOCAL if p.node == shard.home_host else REMOTE
         with shard._meta:
-            shard.stats[cls] = shard.stats[cls] + d
+            shard.stats[cls].add_since(p.counts, snap)
+
+    # --------------------------------------------------- batched register IO
+    def _read_pairs(self, p: Process, shard: LockShard,
+                    states: Sequence[_KeyState]) -> List[Tuple[tuple, int]]:
+        """Read each key's (expires, fence) — one doorbell for remote clients."""
+        if p.node == shard.home_host:
+            return [
+                (self.mem.read(p, st.expires), self.mem.read(p, st.fence))
+                for st in states
+            ]
+        flat = self.mem.post_batch(
+            p,
+            [wr for st in states
+             for wr in (("read", st.expires), ("read", st.fence))],
+        )
+        return [(flat[2 * i], flat[2 * i + 1]) for i in range(len(states))]
+
+    def _read_key_state(self, p: Process, shard: LockShard,
+                        st: _KeyState) -> Tuple[int, tuple, int]:
+        """The slow paths' validation read set (holder, expires, fence) —
+        one doorbell for remote clients."""
+        if p.node == shard.home_host:
+            return (self.mem.read(p, st.holder),
+                    self.mem.read(p, st.expires),
+                    self.mem.read(p, st.fence))
+        holder, packed, fence = self.mem.post_batch(p, [
+            ("read", st.holder), ("read", st.expires), ("read", st.fence),
+        ])
+        return holder, packed, fence
 
     # --------------------------------------------------------------- leases
+    def _acquire_group(self, p: Process, shard: LockShard,
+                       keys: Sequence[str], ttl: float,
+                       ) -> Tuple[List[Lease], bool]:
+        """Grant a prefix of ``keys`` (one shard, global order) in **one**
+        ALock critical section.
+
+        Returns ``(granted, blocked)``: the leases granted, and whether the
+        next key was held by a live lease (granting stops there — taking
+        later keys while a smaller one is still wanted would break the
+        deadlock-avoidance total order).  Never blocks inside the critical
+        section.
+        """
+        states = [self._key_state(shard, k) for k in keys]
+        snap = p.counts.as_tuple()
+        local = p.node == shard.home_host
+        granted: List[Lease] = []
+        writes: List[tuple] = []
+        blocked = False
+        expirations = 0
+        repairs = 0
+        # Sample the clock BEFORE acquiring: every register read then happens
+        # at-or-after ``now``, so an "expired" verdict (eexp <= now <= read
+        # time) can only be beaten by a renewal whose local-clock check
+        # predates ``now`` but whose CAS lands after our read — i.e. exactly
+        # the documented zombie window.  Sampling after the lock would let a
+        # *healthy* pre-expiry renewal race the piggybacked (pre-CS) reads
+        # and be silently re-granted over.
+        now = self.clock()
+        try:
+            if local:
+                shard.alock.lock(p)
+                flat = None
+            else:
+                # Chain the lease-register reads into the Peterson-engagement
+                # doorbell; valid on uncontended fast entry, else re-read.
+                flat = shard.alock.lock(p, piggyback_reads=[
+                    r for st in states for r in (st.expires, st.fence)
+                ])
+            try:
+                if flat is None:
+                    vals = self._read_pairs(p, shard, states)
+                else:
+                    vals = [(flat[2 * i], flat[2 * i + 1])
+                            for i in range(len(states))]
+                for key, st, ((etok, eexp), fence) in zip(keys, states, vals):
+                    free = eexp <= _FREE_AT
+                    clobbered = etok != fence  # zombie CAS hit the mirror
+                    if not free and not clobbered and now < eexp:
+                        blocked = True
+                        break
+                    if clobbered:
+                        repairs += 1  # untrusted mirror: treat as expired
+                    elif not free:
+                        expirations += 1  # grant over an expired lease
+                    token = fence + 1  # CS-only allocator: never regresses
+                    granted.append(
+                        Lease(key, shard.index, p.pid, token, now + ttl, ttl)
+                    )
+                    writes += [
+                        ("write", st.fence, token),
+                        ("write", st.holder, p.pid),
+                        ("write", st.expires, (token, now + ttl)),
+                    ]
+            finally:
+                # The grant writes ride the unlock: applied in place by a
+                # local releaser, chained into the tail-drain doorbell by a
+                # remote one — still inside the critical section either way.
+                shard.alock.unlock(p, piggyback=writes or None)
+        finally:
+            self._account(shard, p, snap)
+        with shard._meta:
+            shard.grants += len(granted)
+            shard.expirations += expirations
+            shard.repairs += repairs
+            if blocked:
+                shard.rejects += 1
+        return granted, blocked
+
     def try_acquire(self, p: Process, key: str, ttl: float) -> Optional[Lease]:
         """One lease-table transaction; non-blocking.
 
@@ -168,29 +322,8 @@ class ShardedLockTable:
         if ttl <= 0:
             raise ValueError("ttl must be > 0")
         shard = self.shards[self.shard_of(key)]
-        st = self._key_state(shard, key)
-        snap = p.counts.snapshot()
-        try:
-            with shard.alock.guard(p):
-                now = self.clock()
-                holder = self.mem.auto_read(p, st.holder)
-                expires = self.mem.auto_read(p, st.expires)
-                expired = holder != _NO_HOLDER and now >= expires
-                if holder != _NO_HOLDER and not expired:
-                    with shard._meta:
-                        shard.rejects += 1
-                    return None
-                token = self.mem.auto_read(p, st.fence) + 1
-                self.mem.auto_write(p, st.fence, token)
-                self.mem.auto_write(p, st.holder, p.pid)
-                self.mem.auto_write(p, st.expires, now + ttl)
-                with shard._meta:
-                    shard.grants += 1
-                    if expired:
-                        shard.expirations += 1
-                return Lease(key, shard.index, p.pid, token, now + ttl, ttl)
-        finally:
-            self._account(shard, p, snap)
+        granted, _ = self._acquire_group(p, shard, (key,), ttl)
+        return granted[0] if granted else None
 
     def acquire(self, p: Process, key: str, ttl: float,
                 timeout: Optional[float] = None,
@@ -212,41 +345,105 @@ class ShardedLockTable:
             time.sleep(poll)
 
     def renew(self, p: Process, lease: Lease, ttl: Optional[float] = None) -> Optional[Lease]:
-        """Extend a still-valid lease; ``None`` if it was lost (fencing)."""
+        """Extend a still-valid lease; ``None`` if it was lost (fencing).
+
+        **Fast path** (the common case — the holder renews before expiry,
+        with its latest lease object): a single fencing-token-checked CAS on
+        the expiry register, no shard ALock.  Zero simulated RDMA ops for a
+        local holder, exactly one rCAS for a remote holder.  A zombie whose
+        key was re-granted always loses the CAS: the register carries the
+        new (larger) fence token, and tokens are never reused (no ABA).
+
+        **Slow path** (stale lease object, or contention diagnosis): the
+        original fully-validated transaction under the shard ALock.
+        """
         ttl = ttl if ttl is not None else lease.ttl
         shard = self.shards[lease.shard]
         st = self._key_state(shard, lease.key)
-        snap = p.counts.snapshot()
+        snap = p.counts.as_tuple()
         try:
-            with shard.alock.guard(p):
+            now = self.clock()
+            if now < lease.expires_at:
+                witness = (lease.token, lease.expires_at)
+                observed = self.mem.auto_cas(
+                    p, st.expires, witness, (lease.token, now + ttl)
+                )
+                if observed == witness:
+                    with shard._meta:
+                        shard.fast_renews += 1
+                    return Lease(lease.key, lease.shard, lease.holder_pid,
+                                 lease.token, now + ttl, ttl)
+            shard.alock.lock(p)
+            renewed = None
+            write = None
+            try:
                 now = self.clock()
+                holder, (etok, eexp), fence = self._read_key_state(p, shard, st)
+                # A clobbered mirror (etok != fence) means the expiry can no
+                # longer be trusted: refuse the renewal (conservative — the
+                # holder must re-acquire) rather than extend blindly.
                 if (
-                    self.mem.auto_read(p, st.holder) != lease.holder_pid
-                    or self.mem.auto_read(p, st.fence) != lease.token
-                    or now >= self.mem.auto_read(p, st.expires)
+                    holder == lease.holder_pid
+                    and fence == lease.token
+                    and etok == fence
+                    and _FREE_AT < eexp
+                    and now < eexp
                 ):
-                    return None
-                self.mem.auto_write(p, st.expires, now + ttl)
-                return Lease(lease.key, lease.shard, lease.holder_pid,
-                             lease.token, now + ttl, ttl)
+                    write = [("write", st.expires, (lease.token, now + ttl))]
+                    renewed = Lease(lease.key, lease.shard, lease.holder_pid,
+                                    lease.token, now + ttl, ttl)
+            finally:
+                shard.alock.unlock(p, piggyback=write)
+            return renewed
         finally:
             self._account(shard, p, snap)
 
     def release(self, p: Process, lease: Lease) -> bool:
-        """Release iff the lease is still the current grant (token match)."""
+        """Release iff the lease is still the current grant (token match).
+
+        **Fast path**: one fencing-token-checked CAS writes the expiry
+        register to ``(token, FREE)`` — no shard ALock, zero RDMA ops for a
+        local holder, one rCAS for a remote one.  The stale ``holder``
+        register left behind is harmless: grant decisions key off the packed
+        expiry + fence, and the next grant overwrites it.
+
+        **Slow path** (stale lease object whose token is still current): the
+        fully-validated transaction under the shard ALock.
+        """
         shard = self.shards[lease.shard]
         st = self._key_state(shard, lease.key)
-        snap = p.counts.snapshot()
+        snap = p.counts.as_tuple()
         try:
-            with shard.alock.guard(p):
-                if (
-                    self.mem.auto_read(p, st.holder) != lease.holder_pid
-                    or self.mem.auto_read(p, st.fence) != lease.token
-                ):
-                    return False  # stale: expired and re-granted elsewhere
-                self.mem.auto_write(p, st.holder, _NO_HOLDER)
-                self.mem.auto_write(p, st.expires, 0.0)
+            witness = (lease.token, lease.expires_at)
+            observed = self.mem.auto_cas(
+                p, st.expires, witness, (lease.token, _FREE_AT)
+            )
+            if observed == witness:
+                with shard._meta:
+                    shard.fast_releases += 1
                 return True
+            shard.alock.lock(p)
+            released = False
+            writes = None
+            try:
+                holder, (etok, eexp), fence = self._read_key_state(p, shard, st)
+                # Stale (expired and re-granted: the fence moved on) or
+                # already released (mirror intact at FREE) ⇒ nothing to do.
+                # Releasing the current generation is legal even with a
+                # clobbered mirror: the write below re-syncs it.
+                if (
+                    holder == lease.holder_pid
+                    and fence == lease.token
+                    and not (etok == fence and eexp <= _FREE_AT)
+                ):
+                    writes = [
+                        ("write", st.holder, _NO_HOLDER),
+                        ("write", st.expires, (lease.token, _FREE_AT)),
+                    ]
+                    released = True
+            finally:
+                shard.alock.unlock(p, piggyback=writes)
+            return released
         finally:
             self._account(shard, p, snap)
 
@@ -256,24 +453,49 @@ class ShardedLockTable:
         return sorted(set(keys), key=lambda k: (self.shard_of(k), k))
 
     def acquire_batch(self, p: Process, keys: Sequence[str], ttl: float,
-                      timeout: Optional[float] = None) -> List[Lease]:
+                      timeout: Optional[float] = None,
+                      poll: float = 0.0005) -> List[Lease]:
         """Acquire every key (deduplicated) in the global key order.
+
+        Keys are grouped by shard (the global order is primary-by-shard, so
+        groups are contiguous) and each shard's ALock is taken **once** for
+        all of its keys — O(distinct shards) critical sections instead of
+        O(keys), with the group's register reads and writes each coalesced
+        into one doorbell for remote clients.  Deadlock freedom is preserved:
+        grants still happen in the global order, and a blocked key is waited
+        on *outside* the critical section while holding only smaller keys.
 
         All-or-nothing: ``timeout`` bounds the *whole batch*; on expiry,
         already-granted leases are released and ``TimeoutError`` is raised.
-        Because every batched client acquires in the same total order, a
-        cycle of waiters cannot form.
         """
+        if ttl <= 0:
+            raise ValueError("ttl must be > 0")
         ordered = self.batch_order(keys)
         deadline = None if timeout is None else self.clock() + timeout
         held: List[Lease] = []
         try:
-            for key in ordered:
-                remaining = (
-                    None if deadline is None
-                    else max(deadline - self.clock(), 0.0)
-                )
-                held.append(self.acquire(p, key, ttl, timeout=remaining))
+            i, n = 0, len(ordered)
+            while i < n:
+                shard = self.shards[self.shard_of(ordered[i])]
+                j = i + 1
+                while j < n and self.shard_of(ordered[j]) == shard.index:
+                    j += 1
+                group = ordered[i:j]
+                start = 0
+                while start < len(group):
+                    granted, blocked = self._acquire_group(
+                        p, shard, group[start:], ttl
+                    )
+                    held.extend(granted)
+                    start += len(granted)
+                    if blocked:
+                        if deadline is not None and self.clock() > deadline:
+                            raise TimeoutError(
+                                f"batch lease on {group[start]!r} not granted "
+                                f"in {timeout}s"
+                            )
+                        time.sleep(poll)
+                i = j
         except TimeoutError:
             for lease in held:
                 self.release(p, lease)
@@ -297,6 +519,9 @@ class ShardedLockTable:
                     "grants": shard.grants,
                     "rejects": shard.rejects,
                     "expirations": shard.expirations,
+                    "fast_renews": shard.fast_renews,
+                    "fast_releases": shard.fast_releases,
+                    "repairs": shard.repairs,
                     "local": shard.stats[LOCAL].snapshot(),
                     "remote": shard.stats[REMOTE].snapshot(),
                 })

@@ -82,17 +82,31 @@ class ALock:
         """``getCid()``: locality of the process w.r.t. the lock's registers."""
         return LOCAL if p.node == self.home_node else REMOTE
 
-    def lock(self, p: Process) -> None:
-        """``pLock`` (Algorithm 1 lines 1-7)."""
+    def lock(self, p: Process, piggyback_reads=None):
+        """``pLock`` (Algorithm 1 lines 1-7).
+
+        ``piggyback_reads`` — optional registers on the home node to read in
+        the same doorbell as the (remote-class) Peterson engagement.  Returns
+        their values when the fast entry validated them (see
+        :meth:`ModifiedPetersonLock.acquire`), else ``None`` — in which case
+        the caller must (re-)read inside the critical section.  Local-class
+        callers and intra-cohort hand-offs always return ``None``.
+        """
         cid = self.class_of(p)
         is_leader = self.cohorts[cid].q_lock(p)
         if is_leader:
-            self.global_lock.acquire(p, cid)
+            return self.global_lock.acquire(p, cid, piggyback_reads)
         # else: the global lock was passed to us inside the cohort.
+        return None
 
-    def unlock(self, p: Process) -> None:
-        """``pUnlock`` (Algorithm 1 lines 9-11)."""
-        self.cohorts[self.class_of(p)].q_unlock(p)
+    def unlock(self, p: Process, piggyback=None) -> None:
+        """``pUnlock`` (Algorithm 1 lines 9-11).
+
+        ``piggyback`` — optional ``("write", reg, value)`` WRs flushed while
+        the critical section is still held; remote releasers chain them into
+        the tail-drain doorbell (see :meth:`BudgetedMCSLock.q_unlock`).
+        """
+        self.cohorts[self.class_of(p)].q_unlock(p, piggyback)
 
     # Context-manager sugar used by the coordination service.
     class _Guard:

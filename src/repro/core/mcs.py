@@ -137,17 +137,39 @@ class BudgetedMCSLock:
             mem.auto_write(p, d.budget, self.init_budget)
         return False
 
-    def q_unlock(self, p: Process) -> None:
+    def q_unlock(self, p: Process, piggyback=None) -> None:
         """Release: pass to the successor with a decremented budget, or CAS
-        the tail back to null (which also releases the Peterson flag)."""
+        the tail back to null (which also releases the Peterson flag).
+
+        ``piggyback`` — optional ``("write", reg, value)`` work requests on
+        the lock's home node, executed while the critical section is still
+        held: a local releaser applies them directly; a remote releaser
+        chains them into the *same doorbell* as the tail-drain rCAS (WR lists
+        execute in order, so the writes land before the release linearizes).
+        This is how the lock table flushes a grant's register writes without
+        paying a separate posting.
+        """
         mem = self.mem
         d = self._desc(p)
+        if piggyback and p.is_local_to(self.tail):
+            for _, reg, value in piggyback:
+                mem.write(p, reg, value)
+            piggyback = None
         if mem.auto_read(p, d.next) is NULLPTR:
-            if mem.auto_cas(p, self.tail, expected=p.pid, swap=NULLPTR) == p.pid:
+            if piggyback:
+                observed = mem.post_batch(
+                    p, list(piggyback) + [("cas", self.tail, p.pid, NULLPTR)]
+                )[-1]
+                piggyback = None
+                if observed == p.pid:
+                    return  # drained: writes flushed + lock released, 1 doorbell
+            elif mem.auto_cas(p, self.tail, expected=p.pid, swap=NULLPTR) == p.pid:
                 return  # queue drained; cohort flag now unset ⇒ global released
             # Someone is mid-enqueue: wait for the link (Algorithm 2 line 17).
             while mem.auto_read(p, d.next) is NULLPTR:
                 _spin_wait()
+        if piggyback:  # successor path: flush before handing the CS over
+            mem.post_batch(p, piggyback)
         nxt = self._desc_of(mem.auto_read(p, d.next))
         handoff = mem.auto_read(p, d.budget) - 1
         mem.auto_write(p, nxt.budget, handoff)  # pass the lock

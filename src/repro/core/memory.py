@@ -51,7 +51,14 @@ class OperationNotEnabled(RuntimeError):
 
 @dataclass
 class OpCounts:
-    """Per-process operation accounting (the unit of the paper's cost claims)."""
+    """Per-process operation accounting (the unit of the paper's cost claims).
+
+    ``remote_*`` count RDMA *completions* (one per work request, the unit of
+    the paper's cost claims); ``remote_doorbell`` counts *postings* — a
+    :meth:`AsymmetricMemory.post_batch` of N work requests rings the doorbell
+    once and completes N times, which is how doorbell coalescing shows up in
+    the telemetry (completions unchanged, postings collapsed).
+    """
 
     local_read: int = 0
     local_write: int = 0
@@ -59,6 +66,7 @@ class OpCounts:
     remote_read: int = 0
     remote_write: int = 0
     remote_cas: int = 0
+    remote_doorbell: int = 0
 
     @property
     def rdma_ops(self) -> int:
@@ -67,6 +75,30 @@ class OpCounts:
     @property
     def local_ops(self) -> int:
         return self.local_read + self.local_write + self.local_cas
+
+    def as_tuple(self) -> tuple:
+        """O(1) allocation-light snapshot for per-op accounting hot paths."""
+        return (
+            self.local_read, self.local_write, self.local_cas,
+            self.remote_read, self.remote_write, self.remote_cas,
+            self.remote_doorbell,
+        )
+
+    def add_since(self, current: "OpCounts", since: tuple) -> None:
+        """Accumulate ``current - since`` into self, in place (no allocs).
+
+        ``since`` is an :meth:`as_tuple` snapshot taken before the operation;
+        this is the O(1) telemetry-accounting path (the old per-op
+        ``snapshot()``/``delta()`` pair built two dicts and two dataclass
+        instances per table operation).
+        """
+        self.local_read += current.local_read - since[0]
+        self.local_write += current.local_write - since[1]
+        self.local_cas += current.local_cas - since[2]
+        self.remote_read += current.remote_read - since[3]
+        self.remote_write += current.remote_write - since[4]
+        self.remote_cas += current.remote_cas - since[5]
+        self.remote_doorbell += current.remote_doorbell - since[6]
 
     def snapshot(self) -> "OpCounts":
         return OpCounts(**vars(self))
@@ -167,11 +199,14 @@ class AsymmetricMemory:
         return observed
 
     # ------------------------------------------------------------- remote ops
+    # Each individually-posted remote op rings its own doorbell (one WR, one
+    # posting); ``post_batch`` is the coalesced path (one doorbell, N WRs).
     def rread(self, p: Process, reg: Register) -> Any:
         self._sched()
         with reg._lock:  # 8B remote read is atomic w.r.t. local ops (Table 1)
             v = reg._value
         p.counts.remote_read += 1
+        p.counts.remote_doorbell += 1
         return v
 
     def rwrite(self, p: Process, reg: Register, value: Any) -> None:
@@ -179,9 +214,10 @@ class AsymmetricMemory:
         with reg._lock:  # 8B remote write is atomic w.r.t. local read/write
             reg._value = value
         p.counts.remote_write += 1
+        p.counts.remote_doorbell += 1
 
-    def rcas(self, p: Process, reg: Register, expected: Any, swap: Any) -> Any:
-        """Remote CAS, executed by the target node's RNIC.
+    def _rcas_execute(self, reg: Register, expected: Any, swap: Any) -> Any:
+        """The RNIC's compare-and-swap, shared by ``rcas`` and ``post_batch``.
 
         Serialised against *other remote RMWs* by the RNIC lock, but its read
         and write phases acquire the machine lock separately with a
@@ -189,7 +225,6 @@ class AsymmetricMemory:
         ``CAS``/``Write`` (the Table-1 hazard: to a local process an ``rCAS``
         appears as a Read then a Write).
         """
-        self._sched()
         with self._rnic_locks[reg.node]:
             with reg._lock:
                 observed = reg._value
@@ -203,8 +238,91 @@ class AsymmetricMemory:
             if observed == expected:
                 with reg._lock:
                     reg._value = swap
-        p.counts.remote_cas += 1
         return observed
+
+    def rcas(self, p: Process, reg: Register, expected: Any, swap: Any) -> Any:
+        """Remote CAS, executed by the target node's RNIC (see _rcas_execute)."""
+        self._sched()
+        observed = self._rcas_execute(reg, expected, swap)
+        p.counts.remote_cas += 1
+        p.counts.remote_doorbell += 1
+        return observed
+
+    # ------------------------------------------------------ doorbell batching
+    def post_batch(self, p: Process, wrs) -> list:
+        """Post a list of remote work requests with **one doorbell** (WR list).
+
+        Models RDMA doorbell batching: a verbs client chains several work
+        requests and rings the QP doorbell once, so N operations cost one
+        posting (one MMIO/doorbell, one NIC fetch) and N completions.  The
+        accounting mirrors that: ``remote_doorbell`` is incremented once,
+        the per-op completion counters (``remote_read``/``remote_write``/
+        ``remote_cas``) by N — the paper's per-op cost claims are stated over
+        completions and are unchanged by coalescing.
+
+        ``wrs`` is a sequence of tuples::
+
+            ("read",  reg)                   -> result: the value read
+            ("write", reg, value)            -> result: None
+            ("cas",   reg, expected, swap)   -> result: the observed value
+
+        Constraints, matching the hardware: every register must live on the
+        same node (a WR list targets one queue pair), and the poster must be
+        *remote* to that node — local processes touch their own memory
+        directly and have no doorbell to ring (use plain ``read``/``write``/
+        ``cas``).
+
+        Atomicity is per work request, identical to posting each op alone:
+        reads/writes are single-register atomic, and each CAS keeps the
+        Table-1 non-atomic window w.r.t. local ``CAS``/``Write``.  The WR
+        list as a whole is **not** atomic — other processes can interleave
+        between its entries.
+        """
+        wrs = list(wrs)
+        if not wrs:
+            return []
+        node = wrs[0][1].node
+        # Validate the whole list before touching any register: a malformed
+        # WR must not leave earlier entries applied-but-unaccounted.
+        _ARITY = {"read": 2, "write": 3, "cas": 4}
+        for wr in wrs:
+            op, reg = wr[0], wr[1]
+            if _ARITY.get(op) != len(wr):
+                raise ValueError(f"malformed work request {wr!r}")
+            if reg.node != node:
+                raise ValueError(
+                    f"post_batch spans nodes {node} and {reg.node}: a work-"
+                    "request list targets one queue pair (one node)"
+                )
+        if p.node == node:
+            raise OperationNotEnabled(
+                f"process p{p.pid}@n{p.node} posted a doorbell batch to "
+                "its own node; local processes access memory directly"
+            )
+        results = []
+        nread = nwrite = ncas = 0
+        self._sched()  # the single doorbell ring
+        for i, wr in enumerate(wrs):
+            op, reg = wr[0], wr[1]
+            if i:  # entries execute in order but are NOT mutually atomic:
+                self._sched()  # let stress schedulers interleave between WRs
+            if op == "read":
+                with reg._lock:
+                    results.append(reg._value)
+                nread += 1
+            elif op == "write":
+                with reg._lock:
+                    reg._value = wr[2]
+                results.append(None)
+                nwrite += 1
+            elif op == "cas":
+                results.append(self._rcas_execute(reg, wr[2], wr[3]))
+                ncas += 1
+        p.counts.remote_read += nread
+        p.counts.remote_write += nwrite
+        p.counts.remote_cas += ncas
+        p.counts.remote_doorbell += 1
+        return results
 
     # ------------------------------------------------------ dispatch helpers
     def auto_read(self, p: Process, reg: Register) -> Any:

@@ -18,9 +18,9 @@ Differences from textbook Peterson:
 from __future__ import annotations
 
 import time
-from typing import Sequence
+from typing import List, Optional, Sequence
 
-from .memory import AsymmetricMemory, Process, Register
+from .memory import NULLPTR, AsymmetricMemory, Process, Register
 from .mcs import BudgetedMCSLock
 
 
@@ -38,9 +38,53 @@ class ModifiedPetersonLock:
         self.victim = victim
         self.cohorts = cohorts
 
-    def acquire(self, p: Process, cid: int) -> None:
-        """Algorithm 1 lines 6-7 (the ``isLeader`` branch of ``pLock``)."""
+    def acquire(self, p: Process, cid: int,
+                piggyback_reads: Optional[Sequence[Register]] = None,
+                ) -> Optional[List]:
+        """Algorithm 1 lines 6-7 (the ``isLeader`` branch of ``pLock``).
+
+        ``piggyback_reads`` (remote callers only; registers on the victim's
+        node) are chained into the same doorbell as the Peterson engagement:
+        ``[write victim, read other-tail, read r0, read r1, ...]``.  WR lists
+        execute in order, so if the other cohort's tail reads ``NULLPTR`` the
+        caller enters the critical section *immediately* — and the
+        piggybacked values are then valid CS reads: an MCS holder keeps its
+        cohort tail non-null for its whole critical section (including
+        intra-cohort hand-offs), so a null tail proves no opposite-class
+        holder was in (or could linearize into) the CS before our victim
+        write, which any later-arriving leader must lose to.  Returns the
+        read values on that uncontended fast entry, else ``None`` — the
+        caller must re-read inside the critical section (the values may have
+        been read while an opposite-class holder was still active).
+        """
         other = 1 - cid
+        tail = self.cohorts[other].tail
+        extra = [("read", r) for r in piggyback_reads or ()]
+        if not p.is_local_to(self.victim):
+            # Remote leader: engage with ONE posting — victim write, the
+            # other cohort's interested flag, and any piggybacked reads.
+            out = self.mem.post_batch(p, [
+                ("write", self.victim, cid), ("read", tail), *extra,
+            ])
+            if out[1] is NULLPTR:
+                return out[2:] if piggyback_reads else None  # fast entry
+            # Contended: wait, re-reading flag+victim (and the piggyback) in
+            # one posting per spin.  Whichever exit fires, the *same*
+            # posting's piggybacked reads are valid CS reads: a null tail
+            # proves the opposite cohort fully drained (a holder keeps its
+            # tail non-null for its whole CS, writes flushed before the
+            # drain), and ``victim != cid`` proves a fresh opposite-class
+            # leader wrote victim after us — a leader only engages on an
+            # *empty* cohort (no holder inside) and now parks until we
+            # release.  Same-class holders are excluded by our own cohort
+            # MCS throughout.
+            while True:
+                out = self.mem.post_batch(p, [
+                    ("read", tail), ("read", self.victim), *extra,
+                ])
+                if out[0] is NULLPTR or out[1] != cid:
+                    return out[2:] if piggyback_reads else None
+                time.sleep(0)
         self.mem.auto_write(p, self.victim, cid)
         self.mem.fence(p)
         while (
@@ -48,6 +92,7 @@ class ModifiedPetersonLock:
             and self.mem.auto_read(p, self.victim) == cid
         ):
             time.sleep(0)
+        return None
 
     def reacquire(self, p: Process, cid: int) -> None:
         """``pReacquire`` (Algorithm 1 lines 12-16): yield then re-wait.

@@ -1,0 +1,405 @@
+"""Hot-path fast paths: doorbell-batched postings, holder-validated
+renewal/release CAS, shard-grouped batched acquisition, and the fencing
+invariants that must survive them (see docs/lock-table.md, "Hot path")."""
+
+import random
+import threading
+
+import pytest
+
+from repro.core import AsymmetricMemory, OperationNotEnabled, make_scheduler
+from repro.coord import CoordinationService, ShardedLockTable
+from repro.coord.table import LOCAL, REMOTE
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def make_table(num_hosts=4, num_shards=8, clock=None, sched=None):
+    mem = AsymmetricMemory(num_hosts, sched=sched)
+    return mem, ShardedLockTable(mem, num_shards=num_shards, clock=clock)
+
+
+def key_homed_on(table, host, salt=""):
+    for i in range(10_000):
+        k = f"hot{salt}-{i}"
+        if table.home_of(k) == host:
+            return k
+    raise AssertionError(f"no key homed on host {host}")
+
+
+def fast_renews(table):
+    return sum(r["fast_renews"] for r in table.telemetry())
+
+
+def fast_releases(table):
+    return sum(r["fast_releases"] for r in table.telemetry())
+
+
+# ----------------------------------------------------------- post_batch model
+def test_post_batch_counts_one_doorbell_and_n_completions():
+    mem = AsymmetricMemory(2)
+    a = mem.alloc(0, "a", 1)
+    b = mem.alloc(0, "b", 2)
+    p = mem.spawn(1)
+    out = mem.post_batch(p, [
+        ("read", a), ("write", b, 7), ("cas", a, 1, 9), ("read", b),
+    ])
+    assert out == [1, None, 1, 7]
+    assert p.counts.remote_doorbell == 1
+    assert (p.counts.remote_read, p.counts.remote_write,
+            p.counts.remote_cas) == (2, 1, 1)
+    assert p.counts.rdma_ops == 4  # completions, the paper's cost unit
+    # the CAS took effect (expected matched)
+    assert mem.rread(p, a) == 9
+
+
+def test_post_batch_executes_in_order():
+    mem = AsymmetricMemory(2)
+    a = mem.alloc(0, "a", 0)
+    p = mem.spawn(1)
+    out = mem.post_batch(p, [
+        ("write", a, 5), ("read", a), ("cas", a, 5, 6), ("read", a),
+    ])
+    assert out == [None, 5, 5, 6]
+
+
+def test_post_batch_rejects_cross_node_lists_and_local_posters():
+    mem = AsymmetricMemory(3)
+    a = mem.alloc(0, "a", 0)
+    c = mem.alloc(1, "c", 0)
+    remote = mem.spawn(2)
+    with pytest.raises(ValueError, match="one queue pair"):
+        mem.post_batch(remote, [("read", a), ("read", c)])
+    local = mem.spawn(0)
+    with pytest.raises(OperationNotEnabled):
+        mem.post_batch(local, [("read", a)])
+    assert mem.post_batch(remote, []) == []
+
+
+def test_individual_remote_ops_ring_one_doorbell_each():
+    mem = AsymmetricMemory(2)
+    a = mem.alloc(0, "a", 0)
+    p = mem.spawn(1)
+    mem.rread(p, a)
+    mem.rwrite(p, a, 1)
+    mem.rcas(p, a, 1, 2)
+    assert p.counts.remote_doorbell == 3  # no coalescing when posted alone
+
+
+# ------------------------------------------------------- renewal fast path
+def test_local_holder_renewal_is_zero_rdma_and_skips_the_alock():
+    clock = FakeClock()
+    mem, table = make_table(clock=clock)
+    host = 1
+    p = mem.spawn(host)
+    k = key_homed_on(table, host)
+    lease = table.try_acquire(p, k, ttl=5.0)
+    snap = p.counts.snapshot()
+    for _ in range(10):
+        clock.advance(1.0)
+        lease = table.renew(p, lease)
+        assert lease is not None and lease.key == k
+    d = p.counts.delta(snap)
+    assert d.rdma_ops == 0, vars(d)
+    assert d.local_cas == 10  # exactly one CAS per renewal, nothing else
+    assert d.local_read == 0 and d.local_write == 0
+    assert fast_renews(table) == 10
+
+
+def test_remote_holder_renewal_is_exactly_one_rcas():
+    clock = FakeClock()
+    mem, table = make_table(clock=clock)
+    k = key_homed_on(table, 0)
+    p = mem.spawn(2)  # remote w.r.t. the key's home
+    lease = table.acquire(p, k, ttl=5.0)
+    snap = p.counts.snapshot()
+    clock.advance(1.0)
+    lease = table.renew(p, lease)
+    assert lease is not None
+    d = p.counts.delta(snap)
+    assert d.remote_cas == 1 and d.rdma_ops == 1, vars(d)
+    assert d.remote_doorbell == 1
+    assert fast_renews(table) == 1
+
+
+def test_zombie_fast_path_renewal_cas_loses_after_regrant():
+    """The satellite claim: once a key is re-granted, the old holder's
+    fast-path CAS must fail (the expiry register carries the new, larger
+    fencing token — tokens are never reused, so no ABA)."""
+    clock = FakeClock()
+    mem, table = make_table(clock=clock)
+    p0, p1 = mem.spawn(0), mem.spawn(1)
+    zombie = table.try_acquire(p0, "k", ttl=5.0)
+    assert zombie is not None
+    clock.advance(5.0)  # the holder "pauses" past expiry
+    regrant = table.try_acquire(p1, "k", ttl=100.0)
+    assert regrant is not None and regrant.token > zombie.token
+    # The zombie wakes believing its lease is live (its own expires_at is in
+    # the past now, but force the fast path by handing it a future view).
+    clock.t = 4.0  # rewind below the zombie's expiry: fast path is attempted
+    assert table.renew(p0, zombie) is None
+    assert fast_renews(table) == 0  # the CAS lost; no fast renewal recorded
+    # The re-granted holder is untouched by the zombie's attempt.
+    clock.t = 6.0
+    renewed = table.renew(p1, regrant)
+    assert renewed is not None and renewed.token == regrant.token
+
+
+def test_expired_holder_renewal_takes_slow_path_and_fails():
+    clock = FakeClock()
+    mem, table = make_table(clock=clock)
+    p = mem.spawn(0)
+    lease = table.try_acquire(p, "k", ttl=5.0)
+    clock.advance(5.0)
+    assert table.renew(p, lease) is None  # now >= expires_at: no fast path
+    assert fast_renews(table) == 0
+
+
+# ------------------------------------------------------- release fast path
+def test_local_holder_release_is_one_local_cas():
+    mem, table = make_table()
+    host = 3
+    p = mem.spawn(host)
+    k = key_homed_on(table, host)
+    lease = table.try_acquire(p, k, ttl=5.0)
+    snap = p.counts.snapshot()
+    assert table.release(p, lease) is True
+    d = p.counts.delta(snap)
+    assert d.local_cas == 1 and d.local_ops == 1 and d.rdma_ops == 0, vars(d)
+    assert fast_releases(table) == 1
+    # Double release finds nothing to release.
+    assert table.release(p, lease) is False
+    # The key is free again and the next grant carries a larger token.
+    nxt = table.try_acquire(p, k, ttl=5.0)
+    assert nxt is not None and nxt.token > lease.token
+
+
+def test_release_then_regrant_is_not_counted_as_expiration():
+    mem, table = make_table()
+    p = mem.spawn(0)
+    lease = table.try_acquire(p, "k", ttl=60.0)
+    assert table.release(p, lease)
+    assert table.try_acquire(p, "k", ttl=60.0) is not None
+    assert sum(r["expirations"] for r in table.telemetry()) == 0
+
+
+def test_remote_holder_release_is_exactly_one_rcas():
+    mem, table = make_table()
+    k = key_homed_on(table, 0)
+    p = mem.spawn(1)
+    lease = table.acquire(p, k, ttl=5.0)
+    snap = p.counts.snapshot()
+    assert table.release(p, lease) is True
+    d = p.counts.delta(snap)
+    assert d.remote_cas == 1 and d.rdma_ops == 1, vars(d)
+
+
+# --------------------------------------------------- shard-grouped batches
+def test_shard_grouped_batch_grants_same_leases_as_per_key_path():
+    """The grouped batch must be observably identical to the old per-key
+    loop: same keys granted, same shard placement, same tokens, same
+    expiries (one shared grant timestamp per shard group is the only
+    difference, and FakeClock pins that)."""
+    clock_a, clock_b = FakeClock(7.0), FakeClock(7.0)
+    _, ta = make_table(num_shards=8, clock=clock_a)
+    mem_b, tb = make_table(num_shards=8, clock=clock_b)
+    keys = [f"txn/{i}" for i in range(12)]
+
+    mem_a = ta.mem
+    pa, pb = mem_a.spawn(1), mem_b.spawn(1)
+    batch = ta.acquire_batch(pa, keys, ttl=9.0)
+    per_key = [tb.acquire(pb, k, ttl=9.0) for k in tb.batch_order(keys)]
+
+    def view(leases):
+        return sorted(
+            (l.key, l.shard, l.token, l.expires_at, l.ttl) for l in leases
+        )
+
+    assert view(batch) == view(per_key)
+    assert ta.release_batch(pa, batch) == len(keys)
+
+
+def test_batch_same_shard_keys_share_one_critical_section_doorbells():
+    """O(distinct shards) critical sections: a remote batch over K keys of
+    ONE shard costs the same ~3 postings as a single-key transaction
+    (engage+reads, tail CAS, writes+drain) instead of K of each."""
+    mem, table = make_table(num_hosts=2, num_shards=2)
+    shard0 = [k for i in range(200)
+              if table.shard_of(k := f"grp/{i}") == 0][:5]
+    assert len(shard0) == 5
+    home = table.shards[0].home_host
+    p = mem.spawn(1 - home)  # remote to shard 0
+    snap = p.counts.snapshot()
+    leases = table.acquire_batch(p, shard0, ttl=30.0)
+    d = p.counts.delta(snap)
+    assert len(leases) == 5
+    assert d.remote_doorbell <= 4, vars(d)  # NOT ~5x the single-key cost
+    # ...while completions still account every register op.
+    assert d.remote_read >= 5 and d.remote_write >= 10
+    table.release_batch(p, leases)
+
+
+def test_batch_stops_at_blocked_key_in_global_order():
+    mem, table = make_table(num_shards=4)
+    p0, p1 = mem.spawn(0), mem.spawn(1)
+    keys = [f"b/{i}" for i in range(6)]
+    ordered = table.batch_order(keys)
+    blocker = table.try_acquire(p0, ordered[3], ttl=1e9)
+    assert blocker is not None
+    with pytest.raises(TimeoutError):
+        table.acquire_batch(p1, keys, ttl=30.0, timeout=0.05)
+    # rollback returned every earlier key: all grantable again
+    for k in ordered[:3]:
+        lease = table.try_acquire(p1, k, ttl=1.0)
+        assert lease is not None
+        table.release(p1, lease)
+
+
+def test_piggybacked_expiry_reads_cannot_regrant_a_freshly_renewed_lease():
+    """Regression: the granter's expiry verdict must use a clock sample no
+    later than its (possibly piggybacked, pre-CS) register reads.  A holder
+    that renews strictly before expiry — while the granter sits between its
+    engagement posting and its verdict — must NOT lose its lease."""
+    clock = FakeClock()
+    hooks = {"armed": False, "fired": False}
+
+    class RenewInWindow(AsymmetricMemory):
+        def post_batch(self, p, wrs):
+            out = super().post_batch(p, wrs)
+            if hooks["armed"] and any(w[0] == "read" for w in wrs):
+                hooks["armed"] = False
+                hooks["fired"] = True
+                # The healthy holder renews (pre-expiry, local CAS) while
+                # the granter holds its stale reads; then time passes.
+                renewed = hooks["renew"]()
+                assert renewed is not None
+                clock.advance(2.0)  # past the ORIGINAL expiry
+            return out
+
+    mem = RenewInWindow(2)
+    table = ShardedLockTable(mem, num_shards=2, clock=clock)
+    k = None
+    for i in range(5000):
+        if table.home_of(f"pg-{i}") == 0:
+            k = f"pg-{i}"
+            break
+    holder = mem.spawn(0)  # local: renews via machine-local CAS
+    granter = mem.spawn(1)  # remote: piggybacks reads on the engagement
+    lease = table.try_acquire(holder, k, ttl=10.0)
+    state = {"lease": lease}
+    hooks["renew"] = lambda: state.__setitem__(
+        "lease", table.renew(holder, state["lease"])
+    ) or state["lease"]
+
+    clock.t = 9.0  # granter arrives just before expiry
+    hooks["armed"] = True
+    stolen = table.try_acquire(granter, k, ttl=10.0)
+    assert hooks["fired"], "engagement posting never carried the reads"
+    assert stolen is None, "a freshly-renewed live lease was re-granted"
+    # ...and the holder's lease is still fully operational.
+    assert table.renew(holder, state["lease"]) is not None
+
+
+# ------------------------------------------------ fencing under concurrency
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fencing_tokens_strictly_monotonic_under_renew_vs_expire_races(seed):
+    """Grant tokens must stay strictly increasing per key while a holder's
+    fast-path renewals race contenders grabbing the key at expiry."""
+    rng = random.Random(seed)
+    clock = FakeClock()
+    mem = AsymmetricMemory(3, sched=make_scheduler(rng, 0.2))
+    table = ShardedLockTable(mem, num_shards=4, clock=clock)
+    key = "contested"
+    grants = []
+    grant_mu = threading.Lock()
+    stop = threading.Event()
+
+    def ticker():
+        while not stop.is_set():
+            clock.advance(0.37)
+
+    def holder(host):
+        p = mem.spawn(host)
+        lease = None
+        while not stop.is_set():
+            if lease is None:
+                lease = table.try_acquire(p, key, ttl=1.0)
+                if lease is not None:
+                    with grant_mu:
+                        grants.append(lease.token)
+            else:
+                lease = table.renew(p, lease)  # None once expired/re-granted
+
+    ts = ([threading.Thread(target=ticker)]
+          + [threading.Thread(target=holder, args=(h,)) for h in (0, 1, 2)])
+    for t in ts:
+        t.start()
+    import time as _time
+    _time.sleep(0.5)
+    stop.set()
+    for t in ts:
+        t.join()
+
+    assert len(grants) >= 3, "race never re-granted the key"
+    assert grants == sorted(grants), grants
+    assert len(set(grants)) == len(grants), grants
+
+
+# ----------------------------------------------------- service lease cache
+def test_service_cache_keeps_stale_lease_objects_on_the_fast_path():
+    clock = FakeClock()
+    svc = CoordinationService(num_hosts=2, num_shards=4, clock=clock)
+    p = svc.host_process(0)
+    first = svc.acquire(p, "cached", ttl=5.0)
+    clock.advance(1.0)
+    assert svc.renew(p, first) is not None
+    clock.advance(1.0)
+    # Renewing with the ORIGINAL (stale) lease object: without the cache the
+    # CAS witness would mismatch and fall to the slow path; the cache
+    # substitutes the freshest witness, so it stays a fast-path CAS.
+    assert svc.renew(p, first) is not None
+    assert sum(r["fast_renews"] for r in svc.telemetry()) == 2
+    # A *different* token is never upgraded: it must fail fencing.
+    import dataclasses
+    forged = dataclasses.replace(first, token=first.token + 10)
+    assert svc.renew(p, forged) is None
+
+
+def test_service_cache_release_uses_freshest_witness():
+    clock = FakeClock()
+    svc = CoordinationService(num_hosts=2, num_shards=4, clock=clock)
+    p = svc.host_process(1)
+    first = svc.acquire(p, "rel", ttl=5.0)
+    clock.advance(1.0)
+    assert svc.renew(p, first) is not None
+    # Release with the stale object: cache supplies the fresh witness, so
+    # the release still succeeds (and on the fast path for local holders).
+    assert svc.release(p, first) is True
+    assert svc.try_acquire(p, "rel", ttl=5.0) is not None
+
+
+# --------------------------------------------------------- class telemetry
+def test_uncontended_remote_acquire_release_doorbell_budget():
+    """The coalesced hot path: a lone remote client's whole acquire+release
+    transaction fits in ≤5 doorbells (tail CAS, engage+reads, writes+drain,
+    release CAS) — the pre-optimisation path posted every op individually
+    (~14 postings)."""
+    mem, table = make_table(num_hosts=2, num_shards=2)
+    k = key_homed_on(table, 0)
+    p = mem.spawn(1)
+    lease = table.try_acquire(p, k, ttl=5.0)
+    assert lease is not None
+    assert table.release(p, lease)
+    assert p.counts.remote_doorbell <= 5, vars(p.counts)
+    totals = table.class_totals()
+    assert totals[REMOTE].remote_doorbell == p.counts.remote_doorbell
+    assert totals[LOCAL].rdma_ops == 0

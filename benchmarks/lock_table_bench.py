@@ -1,31 +1,29 @@
 """Benchmark 6 — sharded lock table: throughput scaling, fairness, and the
-hot-path fast paths (renewals, shard-grouped batches, doorbell coalescing).
+hot-path fast paths (renewals, shard-grouped batches, doorbell coalescing),
+in two modes:
 
-Sweeps hosts × shards × workload over the simulated fabric.  Remote *postings*
-carry an injected ~20 µs latency: each individually-posted op rings its own
-doorbell, while a ``post_batch`` of N work requests rings one — so the delay
-model prices doorbells, which is exactly what RDMA WR-list coalescing buys.
+* **threaded** (the original): clients are OS threads over wall-clock time;
+  remote *postings* carry an injected ~20 µs ``time.sleep`` latency.  Numbers
+  are medians over seeds because thread scheduling makes short runs noisy —
+  the JSON now records that dispersion (CV + IQR over the per-seed runs) so
+  the noise itself is measured.
+* **sim** (``repro.sim``): clients are cooperative tasks on the deterministic
+  virtual-time engine.  Same table, same cost model priced as virtual-clock
+  charges — but 64 hosts × 16 clients × 10⁵ lease ops complete in seconds of
+  wall time, per-class RDMA/doorbell counters are **exact** (not sampled),
+  and a given seed reproduces them byte-for-byte (CI diffs two runs).  This
+  unlocks workloads that are infeasible under thread-per-client: a zipfian
+  hot-key sweep and a failover storm (mass lease expiry + zombie fencing).
 
-Per config the bench reports:
+Per config the bench reports aggregate lease ops/second (wall-clock thru in
+threaded mode, virtual-time thru in sim mode), a Jain fairness index over
+per-client op counts, and per-class RDMA completions/doorbells per op from
+the table's own telemetry — verifying that **home-shard clients issue zero
+simulated RDMA ops** in both modes and at both scales.
 
-* aggregate lease operations/second across all client threads,
-* a Jain fairness index over per-client operation counts,
-* per-class RDMA completions and doorbells per operation from the table's own
-  telemetry — verifying that **home-shard clients issue zero simulated RDMA
-  ops** and that local-holder renewals are RDMA-free (remote holders ≤1 rCAS).
-
-Workloads:
-
-* ``home``    — each client only touches keys homed on its own host (the
-  placement-aware layout a sharded KV store would use);
-* ``uniform`` — every client draws keys uniformly (placement-oblivious);
-* ``renew``   — renewal-heavy: each client holds one lease on a key homed on
-  its **own** host and keepalives in a loop (the zero-RDMA fast path);
-* ``renew_remote`` — same, but the key is homed on another host (the 1-rCAS
-  fast path);
-* ``batch``   — batch-heavy: each client loops ``acquire_batch`` /
-  ``release_batch`` over its own multi-shard key set (one ALock critical
-  section per shard group, reads/writes doorbell-coalesced).
+Threaded workloads: ``home``, ``uniform``, ``renew``, ``renew_remote``,
+``batch`` (see each client fn).  Sim workloads: ``home``, ``uniform``,
+``zipfian``, ``failover`` (see ``repro.sim.workloads``).
 
 ``BASELINE`` records the pre-optimisation numbers (per-key critical sections,
 per-op doorbells, ALock-guarded renewals) so ``--json`` emits a before/after
@@ -41,9 +39,10 @@ import time
 from repro.core import AsymmetricMemory, make_scheduler
 from repro.coord import ShardedLockTable
 from repro.coord.table import LOCAL, REMOTE
+from repro.sim import SIM_WORKLOADS, run_lock_table_sim
+from repro.sim.workloads import KEYS_PER_HOST, jain as _jain, keys_by_home
 
 REMOTE_DELAY = 20e-6  # 20 µs per remote *posting*, paper §1's ~10× asymmetry
-KEYS_PER_HOST = 8
 BATCH_KEYS = 8
 TTL = 60.0
 
@@ -86,37 +85,17 @@ class _DelayMem(AsymmetricMemory):
         return super().post_batch(p, wrs)
 
 
-def _jain(xs):
-    xs = [x for x in xs if x >= 0]
-    total = sum(xs)
-    if total == 0:
-        return 0.0
-    return total * total / (len(xs) * sum(x * x for x in xs))
-
-
 def _keys_by_home(table, num_hosts):
-    """KEYS_PER_HOST keys per host, found by stable-hash placement.
+    """KEYS_PER_HOST keys per host via the shared placement scanner.
 
-    With fewer shards than hosts (the ``shards=1`` baseline) some hosts own
-    no shard at all; they fall back to keys homed elsewhere — which is
-    exactly the baseline's cost story: locality is impossible for them.
+    Non-strict: with fewer shards than hosts (the ``shards=1`` baseline)
+    some hosts own no shard at all and fall back to keys homed elsewhere —
+    which is exactly the baseline's cost story: locality is impossible for
+    them.  ``prefix="record/"`` keeps the key universe (and so the shard
+    placement) identical to the runs BASELINE was recorded with.
     """
-    per_host = {h: [] for h in range(num_hosts)}
-    pool = []
-    for i in range(20_000):
-        if all(len(v) >= KEYS_PER_HOST for v in per_host.values()):
-            break
-        k = f"record/{i}"
-        pool.append(k)
-        h = table.home_of(k)
-        if len(per_host[h]) < KEYS_PER_HOST:
-            per_host[h].append(k)
-    for h in range(num_hosts):
-        j = 0
-        while len(per_host[h]) < KEYS_PER_HOST:
-            per_host[h].append(pool[(h * KEYS_PER_HOST + j) % len(pool)])
-            j += 1
-    return per_host
+    return keys_by_home(table, num_hosts, KEYS_PER_HOST,
+                        prefix="record/", strict=False)
 
 
 def _key_homed_on(table, host, salt):
@@ -241,43 +220,112 @@ def _bench_median(num_hosts, shards, workload, seconds, seeds=SEEDS):
         runs.append(_bench(num_hosts, shards, workload, seconds=seconds, seed=s))
     runs.sort(key=lambda r: r["throughput"])
     med = dict(runs[len(runs) // 2])
-    med["throughput_runs"] = [round(r["throughput"], 1) for r in runs]
+    thr = [round(r["throughput"], 1) for r in runs]
+    med["throughput_runs"] = thr
+    # Dispersion alongside the median: the run-to-run noise is part of the
+    # result (and the thing sim mode eliminates), so measure it — CV over
+    # the seed runs plus the IQR (both 0.0 for single-seed smoke runs).
+    n = len(thr)
+    mean = sum(thr) / n
+    if n >= 2 and mean > 0:
+        sd = (sum((x - mean) ** 2 for x in thr) / (n - 1)) ** 0.5
+        med["throughput_cv"] = round(sd / mean, 4)
+        med["throughput_iqr"] = round(thr[(3 * (n - 1)) // 4] - thr[(n - 1) // 4], 1)
+    else:
+        med["throughput_cv"] = 0.0
+        med["throughput_iqr"] = 0.0
     return med
 
 
 BENCH_NAME = "lock_table"
-_LAST = {"results": [], "seconds": None}  # for benchmarks.run --json
+_LAST = {"results": [], "seconds": None, "sim": None}  # for benchmarks.run --json
+
+# Sim-mode sweep: the scale the threaded bench cannot reach (its practical
+# ceiling is 4 hosts × 2 threads).  The zipfian config is the acceptance
+# sweep — 64×16 clients, 10⁵ simulated lease ops — and runs at full size
+# even under --smoke; the other workloads shrink their op targets there.
+SIM_HOSTS, SIM_CPH, SIM_SHARDS = 64, 16, 128
+SIM_OPS = {"home": 50_000, "uniform": 50_000,
+           "zipfian": 100_000, "failover": 25_000}
+SIM_SMOKE_OPS = {"home": 25_000, "uniform": 25_000,
+                 "zipfian": 100_000, "failover": 10_000}
+
+
+def run_sim(report, sim_seed=0, smoke=False):
+    """The deterministic virtual-time sweep; returns (rows, wall_seconds).
+
+    ``rows`` contains only seed-determined fields (exact counters, virtual
+    throughput, event counts) — two runs with the same seed must compare
+    equal, which the CI determinism gate enforces.  Wall-clock durations
+    live in the separate ``wall_seconds`` dict.
+    """
+    ops_table = SIM_SMOKE_OPS if smoke else SIM_OPS
+    rows, wall = {}, {}
+    for workload in SIM_WORKLOADS:
+        r = run_lock_table_sim(
+            workload, num_hosts=SIM_HOSTS, clients_per_host=SIM_CPH,
+            num_shards=SIM_SHARDS, total_ops=ops_table[workload],
+            seed=sim_seed,
+        )
+        cfg = f"{workload}/hosts{SIM_HOSTS}x{SIM_CPH}/shards{SIM_SHARDS}"
+        rows[cfg] = r.row()
+        wall[cfg] = round(r.wall_seconds, 3)
+        rdma = sum(v for k, v in r.cost["remote"].items()
+                   if k.startswith("remote_") and k != "remote_doorbell")
+        report(
+            f"lock_table/sim/{cfg}",
+            1e6 / max(r.virtual_throughput, 1e-9),  # virtual µs per op
+            f"vthru={r.virtual_throughput:.0f}/s jain={r.jain:.3f} "
+            f"ops={r.ops} rejects={r.rejects} exp={r.expirations} "
+            f"rRDMA/op={rdma / max(r.ops, 1):.2f} "
+            f"doorbells/op={r.cost['remote']['remote_doorbell'] / max(r.ops, 1):.2f} "
+            f"wall={r.wall_seconds:.1f}s localRDMA=0",
+        )
+    return rows, wall
 
 
 def json_extra():
     """Hook for ``benchmarks.run --json``: the before/after trajectory."""
-    return json_payload(_LAST["results"], _LAST["seconds"])
+    return json_payload(_LAST["results"], _LAST["seconds"], _LAST["sim"])
 
 
-def run(report, seconds=0.7, seeds=SEEDS):
+def run(report, seconds=0.7, seeds=SEEDS, mode="both", sim_seed=0,
+        smoke=False):
     _LAST["results"] = results = []
     _LAST["seconds"] = seconds
-    num_hosts = 4
-    for workload in ("home", "uniform", "renew", "renew_remote", "batch"):
-        base = None
-        for shards in (1, 4, 16):
-            r = _bench_median(num_hosts, shards, workload, seconds, seeds)
-            if shards == 1:
-                base = r["throughput"]
-            r["speedup_vs_1shard"] = r["throughput"] / max(base, 1e-9)
-            results.append(r)
-            report(
-                f"lock_table/{workload}/hosts{num_hosts}/shards{shards}",
-                1e6 / max(r["throughput"], 1e-9),  # µs per operation
-                f"thru={r['throughput']:.0f}/s x{r['speedup_vs_1shard']:.2f} "
-                f"jain={r['jain']:.3f} "
-                f"rRDMA/op={r['remote_rdma_per_op']:.2f} "
-                f"doorbells/op={r['remote_doorbells_per_op']:.2f} "
-                f"fastrenew={r['fast_renews']} localRDMA=0",
-            )
+    _LAST["sim"] = None
+    if mode in ("threaded", "both"):
+        num_hosts = 4
+        for workload in ("home", "uniform", "renew", "renew_remote", "batch"):
+            base = None
+            for shards in (1, 4, 16):
+                r = _bench_median(num_hosts, shards, workload, seconds, seeds)
+                if shards == 1:
+                    base = r["throughput"]
+                r["speedup_vs_1shard"] = r["throughput"] / max(base, 1e-9)
+                results.append(r)
+                report(
+                    f"lock_table/{workload}/hosts{num_hosts}/shards{shards}",
+                    1e6 / max(r["throughput"], 1e-9),  # µs per operation
+                    f"thru={r['throughput']:.0f}/s x{r['speedup_vs_1shard']:.2f} "
+                    f"jain={r['jain']:.3f} "
+                    f"cv={r['throughput_cv']:.3f} "
+                    f"rRDMA/op={r['remote_rdma_per_op']:.2f} "
+                    f"doorbells/op={r['remote_doorbells_per_op']:.2f} "
+                    f"fastrenew={r['fast_renews']} localRDMA=0",
+                )
+    if mode in ("sim", "both"):
+        rows, wall = run_sim(report, sim_seed=sim_seed, smoke=smoke)
+        _LAST["sim"] = {
+            "seed": sim_seed,
+            "config": {"hosts": SIM_HOSTS, "clients_per_host": SIM_CPH,
+                       "shards": SIM_SHARDS},
+            "rows": rows,
+            "wall_seconds": wall,
+        }
 
 
-def json_payload(results, seconds):
+def json_payload(results, seconds, sim=None):
     """The machine-readable perf-trajectory record (BENCH_lock_table.json)."""
     current = {}
     for r in results:
@@ -289,7 +337,7 @@ def json_payload(results, seconds):
         for cfg, before in BASELINE.items()
         if cfg in current and before > 0
     }
-    return {
+    payload = {
         "bench": "lock_table",
         "config": {
             "hosts": 4,
@@ -303,12 +351,23 @@ def json_payload(results, seconds):
         "current": current,
         "speedup_vs_baseline": speedups,
     }
+    if sim is not None:
+        payload["sim"] = sim
+    return payload
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny config for CI (short runs, same assertions)")
+                    help="CI config: short threaded runs, smaller sim op "
+                         "targets (the 64x16 zipfian sweep stays full-size)")
+    ap.add_argument("--mode", choices=("threaded", "sim", "both"),
+                    default="both",
+                    help="threaded = wall-clock thread-per-client; sim = "
+                         "deterministic virtual-time engine; both (default)")
+    ap.add_argument("--sim-seed", type=int, default=0,
+                    help="seed for the sim sweep (same seed => byte-"
+                         "identical counters; CI diffs two runs)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the before/after results to PATH")
     args = ap.parse_args()
@@ -321,7 +380,8 @@ def main():
         rows.append(name)
         print(f"{name},{us:.3f},{derived}")
 
-    run(report, seconds=seconds, seeds=seeds)
+    run(report, seconds=seconds, seeds=seeds, mode=args.mode,
+        sim_seed=args.sim_seed, smoke=args.smoke)
     print(f"# {len(rows)} lock-table rows")
     if args.json:
         payload = json_extra()

@@ -33,7 +33,6 @@ paper's register model).
 from __future__ import annotations
 
 import threading
-import time
 from typing import Dict, List, Optional, Sequence
 
 from repro.core import ALock, AsymmetricMemory, OpCounts, Process
@@ -51,12 +50,21 @@ class CoordinationService:
         num_shards: Optional[int] = None,
         sched=None,
         clock=None,
+        sleep=None,
+        yield_point=None,
     ):
         self.num_hosts = num_hosts
-        self.mem = AsymmetricMemory(num_hosts, sched=sched)
+        # One time source end-to-end: the memory's spin hooks, the table's
+        # lease deadlines and the barriers' timeouts all read the same
+        # injected clock (and back off through the matching sleep/yield),
+        # so the whole service runs unchanged under the sim engine's
+        # virtual time.
+        self.mem = AsymmetricMemory(
+            num_hosts, sched=sched, clock=clock, yield_point=yield_point
+        )
         self.table = ShardedLockTable(
             self.mem, num_shards=num_shards, init_budget=init_budget,
-            clock=clock, name="svc.table",
+            clock=clock, sleep=sleep, name="svc.table",
         )
         self._locks: Dict[str, ALock] = {}
         self._claims: Dict[str, object] = {}
@@ -229,9 +237,14 @@ class Barrier:
                 mem.auto_write(p, self.generation, gen + 1)
                 return gen
             mem.auto_write(p, self.count, n)
-        deadline = time.monotonic() + timeout
+        # The deadline runs on the *table's* clock, not a hardcoded
+        # time.monotonic: when the service was built with an injected clock
+        # (tests' FakeClock, the sim engine's virtual clock), mixing time
+        # bases would make the timeout fire never — or immediately.
+        clock = self.svc.table.clock
+        deadline = clock() + timeout
         while mem.auto_read(p, self.generation) == gen:
-            if time.monotonic() > deadline:
+            if clock() > deadline:
                 raise TimeoutError(f"barrier timeout (gen {gen}, {n}/{self.parties})")
-            time.sleep(0)
+            mem.yield_point()
         return gen

@@ -160,6 +160,7 @@ class ShardedLockTable:
         num_shards: Optional[int] = None,
         init_budget: int = 4,
         clock: Optional[Callable[[], float]] = None,
+        sleep: Optional[Callable[[float], None]] = None,
         name: str = "table",
     ):
         self.mem = mem
@@ -167,7 +168,14 @@ class ShardedLockTable:
         self.num_shards = num_shards or 2 * self.num_hosts
         if self.num_shards <= 0:
             raise ValueError("num_shards must be > 0")
+        # clock and sleep travel as a pair: the blocking paths compute their
+        # deadline on `clock` and back off on `sleep`, so injecting one
+        # without the other (the old wall-clock time.sleep next to a fake
+        # clock) would stall a poll loop forever — or time out instantly —
+        # whenever the two disagree.  The sim engine injects a virtual clock
+        # plus a charging sleep; threaded callers get the time module's pair.
         self.clock = clock or time.monotonic
+        self.sleep = sleep or time.sleep
         self.name = name
         self.shards = [
             LockShard(mem, s, s % self.num_hosts, init_budget, name)
@@ -342,7 +350,7 @@ class ShardedLockTable:
                 return lease
             if deadline is not None and self.clock() > deadline:
                 raise TimeoutError(f"lease on {key!r} not granted in {timeout}s")
-            time.sleep(poll)
+            self.sleep(poll)
 
     def renew(self, p: Process, lease: Lease, ttl: Optional[float] = None) -> Optional[Lease]:
         """Extend a still-valid lease; ``None`` if it was lost (fencing).
@@ -494,7 +502,7 @@ class ShardedLockTable:
                                 f"batch lease on {group[start]!r} not granted "
                                 f"in {timeout}s"
                             )
-                        time.sleep(poll)
+                        self.sleep(poll)
                 i = j
         except TimeoutError:
             for lease in held:

@@ -31,7 +31,6 @@ from __future__ import annotations
 import itertools
 import queue
 import threading
-import time
 from typing import Any, Dict, List, Optional
 
 from .memory import NULLPTR, AsymmetricMemory, Process, Register
@@ -140,7 +139,7 @@ class NaiveRCASLock:
         # Loopback: even local processes go through the RNIC so that RMWs are
         # mutually atomic — the exact overhead the paper eliminates.
         while self.mem.rcas(p, self.word, 0, 1) != 0:
-            time.sleep(0)  # remote spinning
+            self.mem.yield_point()  # remote spinning
 
     def unlock(self, p: Process) -> None:
         self.mem.rwrite(p, self.word, 0)
@@ -235,7 +234,7 @@ class FilterLock:
             self.mem.auto_write(p, self.level[me], lvl)
             self.mem.auto_write(p, self.victim[lvl], me)
             while self._exists_conflict(p, me, lvl):
-                time.sleep(0)
+                self.mem.yield_point()
 
     def _exists_conflict(self, p: Process, me: int, lvl: int) -> bool:
         if self.mem.auto_read(p, self.victim[lvl]) != me:
@@ -264,10 +263,10 @@ class BrokenMixedCASLock:
     def lock(self, p: Process) -> None:
         if p.is_local_to(self.word):
             while self.mem.cas(p, self.word, 0, 1) != 0:
-                time.sleep(0)
+                self.mem.yield_point()
         else:
             while self.mem.rcas(p, self.word, 0, 1) != 0:
-                time.sleep(0)
+                self.mem.yield_point()
 
     def unlock(self, p: Process) -> None:
         self.mem.auto_write(p, self.word, 0)

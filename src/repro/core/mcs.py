@@ -23,7 +23,6 @@ waiting — this is what makes the combined primitive fair.
 
 from __future__ import annotations
 
-import time
 from typing import Any, Callable, Dict, Optional
 
 from .memory import NULLPTR, AsymmetricMemory, Process, Register
@@ -37,11 +36,6 @@ class _Descriptor:
     def __init__(self, budget: Register, nxt: Register):
         self.budget = budget
         self.next = nxt
-
-
-def _spin_wait() -> None:
-    # Release the GIL so the holder can make progress; models local spinning.
-    time.sleep(0)
 
 
 class BudgetedMCSLock:
@@ -124,10 +118,12 @@ class BudgetedMCSLock:
 
         # Link behind the predecessor, then spin on OUR OWN descriptor — a
         # machine-local read; no remote spinning (Algorithm 2 lines 8-10).
+        # The wait step goes through the memory's yield_point so the same
+        # code runs threaded (GIL yield) or simulated (virtual-time charge).
         pred = self._desc_of(curr)
         mem.auto_write(p, pred.next, p.pid)
         while mem.auto_read(p, d.budget) == -1:
-            _spin_wait()
+            mem.yield_point()
 
         if mem.auto_read(p, d.budget) == 0:
             # Budget exhausted: yield the global lock to the other class
@@ -167,7 +163,7 @@ class BudgetedMCSLock:
                 return  # queue drained; cohort flag now unset ⇒ global released
             # Someone is mid-enqueue: wait for the link (Algorithm 2 line 17).
             while mem.auto_read(p, d.next) is NULLPTR:
-                _spin_wait()
+                mem.yield_point()
         if piggyback:  # successor path: flush before handing the CS over
             mem.post_batch(p, piggyback)
         nxt = self._desc_of(mem.auto_read(p, d.next))

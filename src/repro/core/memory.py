@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional
 
@@ -139,19 +140,41 @@ class Process:
         return self.node == reg.node
 
 
+def _thread_yield() -> None:
+    """Default ``yield_point``: release the GIL so another thread can run."""
+    time.sleep(0)
+
+
 class AsymmetricMemory:
     """RDMA-accessible shared memory ``M`` partitioned among nodes.
 
     ``sched`` is an optional preemption hook invoked at every operation
     boundary (and *inside* the non-atomic window of ``rcas``); the stress tests
     install a randomised yield to explore interleavings.
+
+    ``clock``/``yield_point`` are the virtual-time hooks: every piece of the
+    stack that waits (lock spin loops, the Peterson wait, the baselines)
+    routes its wait step through ``yield_point`` instead of calling
+    ``time.sleep(0)`` directly, and time-based logic reads ``clock``.  The
+    defaults preserve threaded behavior exactly (a GIL-releasing yield and
+    ``time.monotonic``); the discrete-event engine (``repro.sim``) installs a
+    virtual clock and a spin hook that charges simulated time, which is how
+    the same lock code runs unmodified under simulation.
     """
 
-    def __init__(self, num_nodes: int, sched: Optional[Callable[[], None]] = None):
+    def __init__(
+        self,
+        num_nodes: int,
+        sched: Optional[Callable[[], None]] = None,
+        clock: Optional[Callable[[], float]] = None,
+        yield_point: Optional[Callable[[], None]] = None,
+    ):
         self.num_nodes = num_nodes
         self._registers: Dict[str, Register] = {}
         self._rnic_locks = [threading.Lock() for _ in range(num_nodes)]
         self._sched = sched or (lambda: None)
+        self.clock = clock or time.monotonic
+        self.yield_point = yield_point or _thread_yield
         self._pid_counter = itertools.count()
         self._reg_guard = threading.Lock()
 
@@ -281,17 +304,19 @@ class AsymmetricMemory:
         wrs = list(wrs)
         if not wrs:
             return []
-        node = wrs[0][1].node
         # Validate the whole list before touching any register: a malformed
-        # WR must not leave earlier entries applied-but-unaccounted.
+        # WR must not leave earlier entries applied-but-unaccounted.  Arity
+        # is checked before any element access so a short tuple surfaces as
+        # the documented ValueError, not an IndexError.
         _ARITY = {"read": 2, "write": 3, "cas": 4}
         for wr in wrs:
-            op, reg = wr[0], wr[1]
-            if _ARITY.get(op) != len(wr):
+            if not wr or _ARITY.get(wr[0]) != len(wr):
                 raise ValueError(f"malformed work request {wr!r}")
-            if reg.node != node:
+        node = wrs[0][1].node
+        for wr in wrs:
+            if wr[1].node != node:
                 raise ValueError(
-                    f"post_batch spans nodes {node} and {reg.node}: a work-"
+                    f"post_batch spans nodes {node} and {wr[1].node}: a work-"
                     "request list targets one queue pair (one node)"
                 )
         if p.node == node:
@@ -367,7 +392,6 @@ def make_scheduler(rng, p_yield: float = 0.3) -> Callable[[], None]:
     releases the GIL and lets the OS scheduler pick another runnable thread —
     cheap, wall-clock-free interleaving diversity.
     """
-    import time
 
     def sched() -> None:
         if rng.random() < p_yield:

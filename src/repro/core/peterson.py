@@ -17,7 +17,6 @@ Differences from textbook Peterson:
 
 from __future__ import annotations
 
-import time
 from typing import List, Optional, Sequence
 
 from .memory import NULLPTR, AsymmetricMemory, Process, Register
@@ -84,14 +83,14 @@ class ModifiedPetersonLock:
                 ])
                 if out[0] is NULLPTR or out[1] != cid:
                     return out[2:] if piggyback_reads else None
-                time.sleep(0)
+                self.mem.yield_point()
         self.mem.auto_write(p, self.victim, cid)
         self.mem.fence(p)
         while (
             self.cohorts[other].q_is_locked(p)
             and self.mem.auto_read(p, self.victim) == cid
         ):
-            time.sleep(0)
+            self.mem.yield_point()
         return None
 
     def reacquire(self, p: Process, cid: int) -> None:

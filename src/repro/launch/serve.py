@@ -68,17 +68,24 @@ class BatchAdmission:
         return p
 
     def admit(self, timeout: Optional[float] = None):
-        """Take a lease on any free slot (round-robin scan, then block)."""
-        deadline = None if timeout is None else time.monotonic() + timeout
+        """Take a lease on any free slot (round-robin scan, then block).
+
+        The deadline and backoff run on the coordination service's injected
+        clock/sleep pair, so an admission gate over a sim-backed (or
+        fake-clock) table times out in that table's time base instead of
+        wall time.
+        """
+        clock, sleep = self.svc.table.clock, self.svc.table.sleep
+        deadline = None if timeout is None else clock() + timeout
         while True:
             for s in range(self.num_slots):
                 lease = self.svc.try_acquire(self._proc(), f"serve/slot{s}",
                                              self.ttl)
                 if lease is not None:
                     return lease
-            if deadline is not None and time.monotonic() > deadline:
+            if deadline is not None and clock() > deadline:
                 raise TimeoutError(f"no admission slot free in {timeout}s")
-            time.sleep(0.002)  # back off: a full scan found no free slot
+            sleep(0.002)  # back off: a full scan found no free slot
 
     def keepalive(self, lease):
         """Renew mid-batch (call between prefill and decode, or per chunk).

@@ -1,0 +1,342 @@
+"""Sim workloads: cooperative lock-table clients at 100× threaded scale.
+
+Each client is a generator task on a :class:`~repro.sim.SimEngine`, driving a
+:class:`~repro.coord.ShardedLockTable` built over a
+:class:`~repro.sim.SimFabricMemory`.  Everything — key choice, backoff,
+think time, the fabric's latency charges, the scheduler's tie-breaks — is
+derived from the run's seed, so a config produces **byte-identical** results
+every time: exact per-class RDMA/doorbell counts, exact grant/reject/expiry
+tallies, and a virtual-time throughput with zero run-to-run dispersion.
+
+Clients use the table's **non-blocking** operations (``try_acquire`` /
+``renew`` / ``release``) and express waiting as generator yields, which is
+the contract the engine's atomic-step model requires (see
+``repro.sim.engine``); contention shows up as rejects + seeded exponential
+backoff rather than thread preemption.
+
+Workloads (mirroring, then extending, the threaded bench):
+
+* ``home``     — each client draws only keys homed on its own host: the
+  placement-aware layout.  Every operation is local-class; the run asserts
+  the whole REMOTE class stays at zero ops.
+* ``uniform``  — placement-oblivious uniform draws over the global keyspace.
+* ``zipfian``  — Zipf(s)-skewed draws over the global keyspace: a handful of
+  hot keys absorb most traffic.  Only feasible at simulated scale — at
+  64×16 clients the hot keys see the contention regime the RDMA
+  lock-service literature actually studies.
+* ``failover`` — a hot key set with short TTLs where ``crash_prob`` of
+  holders silently die mid-lease and later wake as zombies: leases expire,
+  hundreds of contenders storm the freed keys, and the woken zombies try to
+  renew with stale leases.  The run asserts every zombie renewal is fenced
+  off and grant tokens never regress.
+"""
+
+from __future__ import annotations
+
+import bisect
+import random
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.coord import ShardedLockTable
+from repro.coord.table import LOCAL, REMOTE
+
+from .engine import SimEngine
+from .fabric import FabricLatency, SimFabricMemory
+
+__all__ = ["SIM_WORKLOADS", "KEYS_PER_HOST", "SimResult", "jain",
+           "keys_by_home", "run_lock_table_sim"]
+
+SIM_WORKLOADS = ("home", "uniform", "zipfian", "failover")
+
+KEYS_PER_HOST = 8   # keyspace density; shared with the threaded bench
+HOLD = 10e-6        # virtual seconds a lease is held
+THINK = 5e-6        # virtual think time between transactions
+BACKOFF = 20e-6     # initial reject backoff (doubles, capped)
+BACKOFF_CAP = 2e-3
+
+
+def jain(xs: List[int]) -> float:
+    """Jain fairness index over per-client op counts (threaded + sim)."""
+    xs = [x for x in xs if x >= 0]
+    total = sum(xs)
+    if total == 0:
+        return 0.0
+    return total * total / (len(xs) * sum(x * x for x in xs))
+
+
+class _RunState:
+    """Shared counters + safety invariants (steps are atomic: no locking)."""
+
+    __slots__ = ("per_client", "total", "target", "last_token",
+                 "token_regressions", "zombie_renews")
+
+    def __init__(self, nclients: int, target: int):
+        self.per_client = [0] * nclients
+        self.total = 0
+        self.target = target
+        self.last_token: Dict[str, int] = {}
+        self.token_regressions = 0
+        self.zombie_renews = 0
+
+    def done(self) -> bool:
+        return self.total >= self.target
+
+    def granted(self, idx: int, lease) -> None:
+        self.per_client[idx] += 1
+        self.total += 1
+        prev = self.last_token.get(lease.key, 0)
+        if lease.token <= prev:
+            self.token_regressions += 1
+        else:
+            self.last_token[lease.key] = lease.token
+
+
+# ------------------------------------------------------------- key pickers
+def _zipf_picker(keys: List[str], s: float) -> Callable:
+    """Zipf(s) over ``keys``: rank r drawn with weight 1/r^s (r = 1-based)."""
+    cum, acc = [], 0.0
+    for r in range(1, len(keys) + 1):
+        acc += 1.0 / r ** s
+        cum.append(acc)
+    total = cum[-1]
+
+    def pick(rng: random.Random) -> str:
+        return keys[bisect.bisect_right(cum, rng.random() * total)]
+
+    return pick
+
+
+def keys_by_home(table: ShardedLockTable, num_hosts: int, per_host: int,
+                 prefix: str = "home/",
+                 strict: bool = True) -> Dict[int, List[str]]:
+    """``per_host`` keys homed on each host, by stable-hash placement scan.
+
+    Shared by the sim workloads and the threaded bench (one scanner, so the
+    two modes cannot drift).  ``strict=True`` raises when a host owns no
+    shard (the sim's home workload is meaningless then); ``strict=False``
+    pads under-filled hosts with keys homed elsewhere — the threaded
+    bench's shards<hosts baseline, where locality is impossible for them
+    and that *is* the cost story being measured.
+    """
+    out: Dict[int, List[str]] = {h: [] for h in range(num_hosts)}
+    pool: List[str] = []
+    need = num_hosts * per_host
+    for i in range(200 * need):
+        if all(len(ks) >= per_host for ks in out.values()):
+            break
+        k = f"{prefix}{i}"
+        pool.append(k)
+        ks = out[table.home_of(k)]
+        if len(ks) < per_host:
+            ks.append(k)
+    short = [h for h, ks in out.items() if len(ks) < per_host]
+    if short and strict:
+        raise ValueError(
+            f"hosts {short} own no (or too few) shards — the home workload "
+            f"needs num_shards >= num_hosts (got {table.num_shards} shards "
+            f"for {num_hosts} hosts)"
+        )
+    for h in short:
+        j = 0
+        while len(out[h]) < per_host:
+            out[h].append(pool[(h * per_host + j) % len(pool)])
+            j += 1
+    return out
+
+
+# ------------------------------------------------------------ client tasks
+def _acquire_release_client(table, p, rng, pick, st, idx, ttl):
+    backoff = BACKOFF
+    while not st.done():
+        lease = table.try_acquire(p, pick(rng), ttl)
+        if lease is None:
+            yield backoff * (0.5 + rng.random())
+            backoff = min(backoff * 2, BACKOFF_CAP)
+            continue
+        backoff = BACKOFF
+        st.granted(idx, lease)
+        yield HOLD
+        table.release(p, lease)
+        yield THINK
+
+
+def _failover_client(table, p, rng, pick, st, idx, ttl, crash_prob):
+    hold = min(HOLD, ttl / 8)
+    backoff = ttl / 4
+    while not st.done():
+        lease = table.try_acquire(p, pick(rng), ttl)
+        if lease is None:
+            yield backoff * (0.5 + rng.random())
+            backoff = min(backoff * 2, 8 * ttl)
+            continue
+        backoff = ttl / 4
+        st.granted(idx, lease)
+        if rng.random() < crash_prob:
+            # Crash mid-lease: hold silently past expiry, then wake as a
+            # zombie and try to renew the stale lease.  Fencing must reject
+            # it — by then the expiry register is past-due (or re-granted
+            # with a larger token), so the renewal can never stick.
+            yield ttl * (1.5 + rng.random())
+            if table.renew(p, lease) is not None:
+                st.zombie_renews += 1
+            yield ttl * rng.random()  # recovery pause before rejoining
+            continue
+        yield hold
+        renewed = table.renew(p, lease)
+        if renewed is not None:
+            yield hold
+            table.release(p, renewed)
+        yield THINK
+
+
+# ------------------------------------------------------------------ runner
+@dataclass
+class SimResult:
+    """One deterministic sim run.  ``row()`` is the byte-stable record: it
+    excludes wall-clock fields (and the live table), so two same-seed runs
+    compare equal — the CI determinism gate diffs exactly these rows."""
+
+    workload: str
+    num_hosts: int
+    clients_per_host: int
+    num_shards: int
+    seed: int
+    target_ops: int
+    ops: int
+    virtual_seconds: float
+    virtual_throughput: float
+    jain: float
+    grants: int
+    rejects: int
+    expirations: int
+    fast_renews: int
+    fast_releases: int
+    repairs: int
+    zombie_renews: int
+    token_regressions: int
+    cost: Dict[str, Dict[str, int]]
+    events: int
+    spins: int
+    wall_seconds: float
+    per_client: List[int] = field(repr=False)
+    table: ShardedLockTable = field(repr=False)
+
+    def row(self) -> Dict:
+        drop = {"wall_seconds", "per_client", "table"}
+        return {k: v for k, v in vars(self).items() if k not in drop}
+
+
+def run_lock_table_sim(
+    workload: str,
+    num_hosts: int = 64,
+    clients_per_host: int = 16,
+    num_shards: Optional[int] = None,
+    total_ops: int = 100_000,
+    seed: int = 0,
+    ttl: Optional[float] = None,
+    latency: Optional[FabricLatency] = None,
+    zipf_s: float = 0.99,
+    keys_per_host: int = KEYS_PER_HOST,
+    crash_prob: float = 0.1,
+    max_events: Optional[int] = None,
+) -> SimResult:
+    """Run one workload to ``total_ops`` granted leases; fully deterministic.
+
+    Returns exact per-class operation counts (``cost``) plus virtual-time
+    throughput and fairness.  Raises if any safety invariant breaks: the
+    LOCAL class must never issue an RDMA op, grant tokens must be strictly
+    monotonic per key, and no zombie renewal may survive fencing.
+    """
+    if workload not in SIM_WORKLOADS:
+        raise ValueError(f"unknown sim workload {workload!r}")
+    wall0 = time.perf_counter()
+    engine = SimEngine(seed)
+    mem = SimFabricMemory(num_hosts, engine, latency or FabricLatency())
+    table = ShardedLockTable(
+        mem, num_shards=num_shards or 2 * num_hosts,
+        clock=engine.clock, sleep=engine.sleep_inline, name=f"sim{seed}",
+    )
+    if ttl is None:
+        ttl = 300e-6 if workload == "failover" else 1.0
+
+    universe = [f"k/{i}" for i in range(num_hosts * keys_per_host)]
+    if workload == "home":
+        per_host = keys_by_home(table, num_hosts, keys_per_host)
+        pick_for = lambda h: lambda rng: rng.choice(per_host[h])  # noqa: E731
+    elif workload == "uniform":
+        pick_for = lambda h: lambda rng: rng.choice(universe)  # noqa: E731
+    elif workload == "zipfian":
+        zipf = _zipf_picker(universe, zipf_s)
+        pick_for = lambda h: zipf  # noqa: E731
+    else:  # failover: everyone storms a small hot set
+        hot = universe[: max(4, num_hosts)]
+        pick_for = lambda h: lambda rng: rng.choice(hot)  # noqa: E731
+
+    nclients = num_hosts * clients_per_host
+    st = _RunState(nclients, total_ops)
+    for idx in range(nclients):
+        host = idx // clients_per_host
+        p = mem.spawn(host)
+        rng = random.Random(1_000_003 * seed + idx)
+        pick = pick_for(host)
+        if workload == "failover":
+            task = _failover_client(table, p, rng, pick, st, idx, ttl,
+                                    crash_prob)
+        else:
+            task = _acquire_release_client(table, p, rng, pick, st, idx, ttl)
+        engine.spawn(task, delay=idx * 1e-7)  # deterministic arrival stagger
+
+    engine.run(stop=st.done,
+               max_events=max_events or (200 * total_ops + 500_000))
+    wall = time.perf_counter() - wall0
+
+    totals = table.class_totals()
+    if totals[LOCAL].rdma_ops:
+        raise AssertionError(
+            f"{workload}: LOCAL class issued {totals[LOCAL].rdma_ops} RDMA ops"
+        )
+    if workload == "home" and totals[REMOTE].rdma_ops:
+        raise AssertionError(
+            f"home: placement-aware clients issued "
+            f"{totals[REMOTE].rdma_ops} remote ops"
+        )
+    if st.token_regressions:
+        raise AssertionError(
+            f"{workload}: {st.token_regressions} fencing-token regressions"
+        )
+    if st.zombie_renews:
+        raise AssertionError(
+            f"{workload}: {st.zombie_renews} zombie renewals survived fencing"
+        )
+
+    rows = table.telemetry()
+    vsec = engine.clock.now
+    return SimResult(
+        workload=workload,
+        num_hosts=num_hosts,
+        clients_per_host=clients_per_host,
+        num_shards=table.num_shards,
+        seed=seed,
+        target_ops=total_ops,
+        ops=st.total,
+        virtual_seconds=vsec,
+        virtual_throughput=st.total / max(vsec, 1e-12),
+        jain=jain(st.per_client),
+        grants=sum(r["grants"] for r in rows),
+        rejects=sum(r["rejects"] for r in rows),
+        expirations=sum(r["expirations"] for r in rows),
+        fast_renews=sum(r["fast_renews"] for r in rows),
+        fast_releases=sum(r["fast_releases"] for r in rows),
+        repairs=sum(r["repairs"] for r in rows),
+        zombie_renews=st.zombie_renews,
+        token_regressions=st.token_regressions,
+        cost={"local": vars(totals[LOCAL]).copy(),
+              "remote": vars(totals[REMOTE]).copy()},
+        events=engine.events,
+        spins=engine.spins,
+        wall_seconds=wall,
+        per_client=st.per_client,
+        table=table,
+    )

@@ -1,0 +1,144 @@
+"""`AsymmetricMemory.post_batch` edge cases (ISSUE 4 satellite).
+
+The WR-list model has three load-bearing edges: an empty posting must be a
+true no-op (no doorbell, no completions), a malformed or node-spanning list
+must be rejected *before any entry executes* (applied-but-unaccounted WRs
+would corrupt the cost claims), and the doorbell-vs-completion accounting
+must stay exact under arbitrary interleavings of batched and individual ops
+— completions are the paper's cost unit, doorbells are what coalescing
+saves, and neither may drift.
+"""
+
+import random
+
+import pytest
+
+from repro.core import AsymmetricMemory, OperationNotEnabled
+
+
+def setup_mem(num_nodes=3):
+    mem = AsymmetricMemory(num_nodes)
+    regs = [mem.alloc(0, f"r{i}", i) for i in range(4)]
+    other = mem.alloc(1, "other", 99)
+    return mem, regs, other
+
+
+# ------------------------------------------------------------ empty posting
+def test_empty_wr_list_is_a_true_noop():
+    mem, regs, _ = setup_mem()
+    p = mem.spawn(1)
+    sched_calls = []
+    mem._sched = lambda *a: sched_calls.append(a)
+    assert mem.post_batch(p, []) == []
+    assert mem.post_batch(p, iter(())) == []  # any iterable, not just list
+    assert p.counts.as_tuple() == (0,) * 7  # no doorbell, no completions
+    assert sched_calls == []  # no doorbell ring even at the sched hook level
+
+
+# -------------------------------------------- validation precedes execution
+def test_cross_node_list_rejected_before_any_entry_executes():
+    mem, regs, other = setup_mem()
+    p = mem.spawn(2)
+    with pytest.raises(ValueError, match="one queue pair"):
+        mem.post_batch(p, [("write", regs[0], 555), ("read", other)])
+    # The leading (well-formed, same-node) write must NOT have been applied.
+    assert mem.rread(p, regs[0]) == 0
+    # ...and nothing was accounted beyond that verification read.
+    assert p.counts.rdma_ops == 1 and p.counts.remote_doorbell == 1
+
+
+@pytest.mark.parametrize("bad", [
+    ("read",),                      # missing register
+    ("write",),                     # missing register and value
+    ("cas",),                       # bare op
+    (),                             # empty work request
+])
+def test_short_wr_tuples_rejected_upfront_as_valueerror(bad):
+    mem, regs, _ = setup_mem()
+    p = mem.spawn(1)
+    with pytest.raises(ValueError, match="malformed work request"):
+        mem.post_batch(p, [("write", regs[1], 7), bad])
+    assert mem.rread(p, regs[1]) == 1  # leading write not applied
+
+
+@pytest.mark.parametrize("bad", [
+    ("read", None, None),           # wrong arity for read
+    ("write", None),                # wrong arity for write
+    ("cas", None, 1),               # wrong arity for cas
+    ("swap", None, 1, 2),           # unknown opcode
+])
+def test_malformed_wr_arity_rejected_upfront(bad):
+    mem, regs, _ = setup_mem()
+    p = mem.spawn(1)
+    wr = (bad[0], regs[2]) + tuple(bad[2:]) if len(bad) > 2 else (bad[0], regs[2])
+    with pytest.raises(ValueError, match="malformed work request"):
+        mem.post_batch(p, [("write", regs[1], 7), wr])
+    assert mem.rread(p, regs[1]) == 1  # leading write not applied
+    assert p.counts.remote_write == 0
+
+
+def test_local_poster_rejected_with_no_side_effects():
+    mem, regs, _ = setup_mem()
+    local = mem.spawn(0)
+    with pytest.raises(OperationNotEnabled, match="own node"):
+        mem.post_batch(local, [("write", regs[0], 123)])
+    assert local.counts.as_tuple() == (0,) * 7
+    remote = mem.spawn(1)
+    assert mem.rread(remote, regs[0]) == 0
+
+
+# ------------------------------------------- doorbell/completion invariants
+def test_doorbell_and_completion_accounting_invariants():
+    """Over any mix of batched and individual remote ops:
+
+    * ``remote_doorbell`` == number of non-empty postings + individual ops,
+    * completions (``rdma_ops``) == total work requests,
+    * batching never changes completion counts, only doorbell counts.
+    """
+    mem, regs, _ = setup_mem()
+    p = mem.spawn(1)
+    rng = random.Random(0)
+    postings = 0
+    wrs_total = 0
+    per_class = {"read": 0, "write": 0, "cas": 0}
+    for _ in range(50):
+        if rng.random() < 0.5:
+            n = rng.randint(1, 6)
+            wrs = []
+            for _ in range(n):
+                reg = rng.choice(regs)
+                op = rng.choice(("read", "write", "cas"))
+                wrs.append({"read": ("read", reg),
+                            "write": ("write", reg, rng.randint(0, 9)),
+                            "cas": ("cas", reg, 0, 1)}[op])
+                per_class[op] += 1
+            out = mem.post_batch(p, wrs)
+            assert len(out) == n  # one result per WR, even for writes
+            postings += 1
+            wrs_total += n
+        else:
+            reg = rng.choice(regs)
+            op = rng.choice(("read", "write", "cas"))
+            if op == "read":
+                mem.rread(p, reg)
+            elif op == "write":
+                mem.rwrite(p, reg, rng.randint(0, 9))
+            else:
+                mem.rcas(p, reg, 0, 1)
+            per_class[op] += 1
+            postings += 1
+            wrs_total += 1
+    assert p.counts.remote_doorbell == postings
+    assert p.counts.rdma_ops == wrs_total
+    assert p.counts.remote_read == per_class["read"]
+    assert p.counts.remote_write == per_class["write"]
+    assert p.counts.remote_cas == per_class["cas"]
+    assert p.counts.local_ops == 0  # a remote poster never goes local
+
+
+def test_single_wr_batch_costs_same_doorbells_as_individual_post():
+    mem, regs, _ = setup_mem()
+    a, b = mem.spawn(1), mem.spawn(1)
+    mem.post_batch(a, [("cas", regs[0], 0, 5)])
+    mem.rcas(b, regs[0], 5, 0)
+    assert a.counts.as_tuple() == b.counts.as_tuple()

@@ -1,0 +1,268 @@
+"""Virtual-time discrete-event engine + sim lock-table workloads.
+
+Covers the engine's scheduling contract (time order, seeded determinism,
+livelock guard), the clock/sleep plumbing bugfixes (table poll loops and
+barrier deadlines must run on the *injected* time base), and the sim
+benchmark's headline guarantees: byte-identical counters per seed, zero
+LOCAL-class RDMA at scale, and fencing invariants under a failover storm.
+"""
+
+import time
+
+import pytest
+
+from repro.coord import Barrier, CoordinationService, ShardedLockTable
+from repro.coord.table import LOCAL, REMOTE
+from repro.sim import (FabricLatency, SimEngine, SimFabricMemory,
+                       SimLivelockError, VirtualClock, run_lock_table_sim)
+
+
+# ------------------------------------------------------------------- engine
+def test_tasks_run_in_virtual_time_order():
+    eng = SimEngine(seed=0)
+    trace = []
+
+    def task(name, delays):
+        for d in delays:
+            trace.append((name, round(eng.clock.now, 9)))
+            yield d
+
+    eng.spawn(task("a", [3e-3, 1e-3]), delay=1e-3)
+    eng.spawn(task("b", [1e-3, 1e-3]), delay=2e-3)
+    eng.run()
+    assert trace == [
+        ("a", 1e-3), ("b", 2e-3), ("b", 3e-3), ("a", 4e-3),
+    ]
+
+
+def test_same_seed_same_interleaving_different_seed_differs():
+    def order_for(seed):
+        eng = SimEngine(seed=seed)
+        order = []
+
+        def task(i):
+            order.append(i)
+            yield 0
+
+        for i in range(20):
+            eng.spawn(task(i))  # all due at t=0: pure tie-break territory
+        eng.run()
+        return order
+
+    assert order_for(7) == order_for(7)
+    assert order_for(7) != order_for(8)
+
+
+def test_step_charges_extend_only_the_charging_tasks_timeline():
+    """A step's virtual-time charges must not serialise other tasks behind
+    it: two clients charging 1 ms each still both finish by ~1 ms."""
+    eng = SimEngine(seed=0)
+    ends = {}
+
+    def worker(name):
+        eng.clock.advance(1e-3)  # a modeled 1 ms operation
+        yield 0
+        ends[name] = eng.clock.now
+
+    eng.spawn(worker("a"))
+    eng.spawn(worker("b"))
+    eng.run()
+    assert ends["a"] == pytest.approx(1e-3)
+    assert ends["b"] == pytest.approx(1e-3)  # overlapped, not 2 ms
+
+
+def test_run_until_and_max_events():
+    eng = SimEngine(seed=0)
+
+    def ticker():
+        while True:
+            yield 1.0
+
+    eng.spawn(ticker())
+    assert eng.run(until=5.5) == 5.5
+    with pytest.raises(SimLivelockError, match="max_events"):
+        eng.run(max_events=3)
+
+
+def test_clock_rejects_negative_advance_and_negative_yield():
+    clock = VirtualClock()
+    with pytest.raises(ValueError):
+        clock.advance(-1.0)
+    eng = SimEngine(seed=0)
+
+    def bad():
+        yield -1e-3
+
+    eng.spawn(bad())
+    with pytest.raises(ValueError):
+        eng.run()
+
+
+def test_sleep_inline_budget_is_virtual_time_not_iterations():
+    """Regression: a timeout-bounded poll loop may legitimately need more
+    sleep-polls than spin_limit (60 s / 0.5 ms = 120k); the sleep guard must
+    budget virtual seconds, tripping only on horizon-scale (unbounded)
+    sleeping."""
+    eng = SimEngine(seed=0, spin_limit=100, sleep_horizon=3600.0)
+    for _ in range(5_000):  # 50x spin_limit iterations, 5 virtual seconds
+        eng.sleep_inline(1e-3)
+    assert eng.clock.now == pytest.approx(5.0)
+    with pytest.raises(SimLivelockError, match="sleep_horizon"):
+        for _ in range(4_000_000):
+            eng.sleep_inline(1e-3)  # an unbounded poll loop: past 1 h virtual
+
+
+def test_yield_point_livelock_guard_trips_deterministically():
+    eng = SimEngine(seed=0, spin_limit=50)
+
+    def spinner():
+        while True:  # a cross-task wait that can never be satisfied mid-step
+            eng.yield_point()
+        yield  # pragma: no cover - makes this a generator
+
+    eng.spawn(spinner())
+    with pytest.raises(SimLivelockError, match="spin iterations"):
+        eng.run()
+    assert eng.spins == 51  # limit + the tripping call: exact, not timing
+
+
+# ------------------------------------------- clock/sleep plumbing (bugfixes)
+def test_table_poll_backoff_runs_on_the_injected_sleep():
+    """Regression (ISSUE 4 satellite): `acquire` mixed an injected clock for
+    the deadline with wall-clock time.sleep for the backoff.  With a virtual
+    clock + charging sleep the timeout must fire in virtual time — i.e.
+    instantly in wall time — instead of stalling the poll loop forever."""
+    eng = SimEngine(seed=0)
+    mem = SimFabricMemory(2, eng)
+    table = ShardedLockTable(mem, num_shards=4, clock=eng.clock,
+                             sleep=eng.sleep_inline)
+    holder, waiter = mem.spawn(0), mem.spawn(1)
+    assert table.try_acquire(holder, "k", ttl=1e9) is not None
+    wall0 = time.perf_counter()
+    with pytest.raises(TimeoutError):
+        table.acquire(waiter, "k", ttl=1.0, timeout=0.05)
+    assert time.perf_counter() - wall0 < 1.0  # virtual wait, not wall wait
+    assert eng.clock.now > 0.05  # the backoff charged the virtual clock
+
+
+def test_batch_poll_backoff_runs_on_the_injected_sleep():
+    eng = SimEngine(seed=0)
+    mem = SimFabricMemory(2, eng)
+    table = ShardedLockTable(mem, num_shards=4, clock=eng.clock,
+                             sleep=eng.sleep_inline)
+    holder, waiter = mem.spawn(0), mem.spawn(1)
+    keys = [f"b/{i}" for i in range(4)]
+    blocked = table.batch_order(keys)[2]
+    assert table.try_acquire(holder, blocked, ttl=1e9) is not None
+    with pytest.raises(TimeoutError):
+        table.acquire_batch(waiter, keys, ttl=1.0, timeout=0.05)
+    # rollback released the earlier keys despite the virtual-time timeout
+    for k in table.batch_order(keys):
+        if k != blocked:
+            assert table.try_acquire(waiter, k, ttl=1.0) is not None
+
+
+def test_barrier_timeout_uses_the_service_clock():
+    """Regression (ISSUE 4 satellite): Barrier.wait hardcoded time.monotonic
+    for its deadline even when the service was built with a custom clock."""
+    clock = VirtualClock()
+    svc = CoordinationService(
+        num_hosts=2, num_shards=4, clock=clock,
+        sleep=clock.advance, yield_point=lambda: clock.advance(0.5),
+    )
+    bar = Barrier(svc, "epoch", parties=2)
+    p = svc.host_process(0)
+    wall0 = time.perf_counter()
+    with pytest.raises(TimeoutError, match="barrier timeout"):
+        bar.wait(p, timeout=10.0)  # 10 *virtual* seconds
+    assert time.perf_counter() - wall0 < 1.0
+    assert clock.now > 10.0
+
+
+# -------------------------------------------------------- sim bench results
+SMALL = dict(num_hosts=8, clients_per_host=4, num_shards=16, total_ops=3000)
+
+
+@pytest.mark.parametrize("workload", ["home", "uniform", "zipfian", "failover"])
+def test_sim_workloads_are_deterministic_per_seed(workload):
+    a = run_lock_table_sim(workload, seed=5, **SMALL)
+    b = run_lock_table_sim(workload, seed=5, **SMALL)
+    assert a.row() == b.row()
+    # wall time is the one field allowed (expected, even) to differ
+    assert a.ops >= SMALL["total_ops"]
+
+
+def test_sim_different_seeds_explore_different_histories():
+    a = run_lock_table_sim("zipfian", seed=0, **SMALL)
+    b = run_lock_table_sim("zipfian", seed=1, **SMALL)
+    assert a.row() != b.row()
+    # ...but the invariants hold in every history
+    for r in (a, b):
+        assert r.cost["local"]["remote_cas"] == 0
+        assert r.cost["local"]["remote_read"] == 0
+        assert r.cost["local"]["remote_write"] == 0
+        assert r.token_regressions == 0
+
+
+def test_sim_home_workload_is_entirely_rdma_free():
+    r = run_lock_table_sim("home", seed=2, **SMALL)
+    # Placement-aware clients: the REMOTE class never even appears.
+    assert all(v == 0 for v in r.cost["remote"].values()), r.cost
+    assert r.ops == r.grants  # one grant per counted op, none lost
+
+
+def test_sim_zipfian_contention_shows_up_as_rejects_not_unfairness_collapse():
+    r = run_lock_table_sim("zipfian", seed=3, zipf_s=1.2, **SMALL)
+    assert r.rejects > 0  # hot keys actually contended
+    assert 0.5 < r.jain <= 1.0
+    assert r.ops >= SMALL["total_ops"]
+
+
+def test_sim_failover_storm_expires_and_fences():
+    r = run_lock_table_sim("failover", seed=4, crash_prob=0.3, **SMALL)
+    assert r.expirations > 0          # crashed holders' leases lapsed
+    assert r.zombie_renews == 0       # every woken zombie was fenced off
+    assert r.token_regressions == 0   # grant tokens strictly monotonic
+    assert r.fast_renews > 0          # healthy holders used the fast path
+    assert r.grants >= r.ops
+
+
+def test_sim_scale_smoke_64_hosts():
+    """A shrunken version of the acceptance sweep: 64 hosts x 4 clients,
+    10k zipfian ops, must finish fast and RDMA-free for the LOCAL class."""
+    wall0 = time.perf_counter()
+    r = run_lock_table_sim("zipfian", num_hosts=64, clients_per_host=4,
+                           num_shards=128, total_ops=10_000, seed=0)
+    assert time.perf_counter() - wall0 < 60.0
+    assert r.ops >= 10_000
+    assert r.cost["local"]["remote_cas"] == 0
+    assert r.cost["local"]["remote_read"] == 0
+    assert r.cost["local"]["remote_write"] == 0
+    assert r.num_hosts * r.clients_per_host == 256  # tasks actually at scale
+
+
+def test_sim_fabric_prices_doorbells_not_work_requests():
+    """One posting of N WRs must cost one doorbell charge + N WR charges —
+    cheaper than N postings; and virtual charges never touch wall time."""
+    lat = FabricLatency(local_op=1e-6, doorbell=10e-6, wr=1e-6)
+    eng = SimEngine(seed=0)
+    mem = SimFabricMemory(2, eng, lat)
+    a = mem.alloc(0, "a", 0)
+    b = mem.alloc(0, "b", 0)
+    p = mem.spawn(1)
+    t0 = eng.clock.now
+    mem.post_batch(p, [("read", a), ("read", b)])
+    batched = eng.clock.now - t0
+    t1 = eng.clock.now
+    mem.rread(p, a)
+    mem.rread(p, b)
+    individual = eng.clock.now - t1
+    assert batched == pytest.approx(12e-6)
+    assert individual == pytest.approx(22e-6)
+    assert p.counts.remote_doorbell == 3
+    assert p.counts.remote_read == 4
+
+
+def test_sim_rejects_unknown_workload():
+    with pytest.raises(ValueError, match="unknown sim workload"):
+        run_lock_table_sim("renew", **SMALL)

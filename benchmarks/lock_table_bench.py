@@ -21,9 +21,13 @@ per-client op counts, and per-class RDMA completions/doorbells per op from
 the table's own telemetry — verifying that **home-shard clients issue zero
 simulated RDMA ops** in both modes and at both scales.
 
-Threaded workloads: ``home``, ``uniform``, ``renew``, ``renew_remote``,
-``batch`` (see each client fn).  Sim workloads: ``home``, ``uniform``,
-``zipfian``, ``failover`` (see ``repro.sim.workloads``).
+Threaded workloads: ``home``, ``uniform``, ``read_heavy`` (95:5
+shared:exclusive mode mix), ``renew``, ``renew_remote``, ``batch`` (see each
+client fn).  Sim workloads: ``home``, ``uniform``, ``zipfian``,
+``failover``, ``read_heavy``, ``reader_flood`` (see
+``repro.sim.workloads``), plus the read:write ratio sweep (``run_rw_sweep``)
+comparing SHARED readers against an exclusive-only degradation of the same
+seeded run — the mode-aware before/after in ``BENCH_lock_table.json``.
 
 ``BASELINE`` records the pre-optimisation numbers (per-key critical sections,
 per-op doorbells, ALock-guarded renewals) so ``--json`` emits a before/after
@@ -37,7 +41,7 @@ import threading
 import time
 
 from repro.core import AsymmetricMemory, make_scheduler
-from repro.coord import ShardedLockTable
+from repro.coord import LeaseMode, ShardedLockTable
 from repro.coord.table import LOCAL, REMOTE
 from repro.sim import SIM_WORKLOADS, run_lock_table_sim
 from repro.sim.workloads import KEYS_PER_HOST, jain as _jain, keys_by_home
@@ -129,6 +133,22 @@ def _bench(num_hosts, num_shards, workload, seconds=0.4, seed=0):
                 table.release(p, lease)
         counts[idx] = n
 
+    def read_heavy_client(host, idx):
+        # The mode-aware mix: 95 % shared joins (single CAS, no shard
+        # ALock), 5 % exclusive writer grants, same key universe as
+        # ``uniform`` so the rows are comparable.
+        p = procs[idx]
+        r = random.Random(seed * 1000 + idx)
+        n = 0
+        while not stop.is_set():
+            mode = (LeaseMode.EXCLUSIVE if r.random() < 0.05
+                    else LeaseMode.SHARED)
+            lease = table.try_acquire(p, r.choice(all_keys), TTL, mode=mode)
+            if lease is not None:
+                n += 1
+                table.release(p, lease)
+        counts[idx] = n
+
     renew_keys = {}  # resolved before the clock starts: hashing 50k
     # candidate keys per client inside the timed window would understate
     # the shards=1 rows and skew the recorded speedups.
@@ -154,6 +174,7 @@ def _bench(num_hosts, num_shards, workload, seconds=0.4, seed=0):
         counts[idx] = n
 
     target = {"home": acq_client, "uniform": acq_client,
+              "read_heavy": read_heavy_client,
               "renew": renew_client, "renew_remote": renew_client,
               "batch": batch_client}[workload]
     threads = []
@@ -201,6 +222,10 @@ def _bench(num_hosts, num_shards, workload, seconds=0.4, seed=0):
         "remote_cas": totals[REMOTE].remote_cas,
         "fast_renews": sum(r["fast_renews"] for r in rows),
         "fast_releases": sum(r["fast_releases"] for r in rows),
+        "grants_shared": sum(r["grants_shared"] for r in rows),
+        "grants_exclusive": sum(r["grants_exclusive"] for r in rows),
+        "shared_joins": sum(r["shared_joins"] for r in rows),
+        "intent_blocks": sum(r["intent_blocks"] for r in rows),
         "grants": grants,
         "total_ops": total,
     }
@@ -246,9 +271,77 @@ _LAST = {"results": [], "seconds": None, "sim": None}  # for benchmarks.run --js
 # even under --smoke; the other workloads shrink their op targets there.
 SIM_HOSTS, SIM_CPH, SIM_SHARDS = 64, 16, 128
 SIM_OPS = {"home": 50_000, "uniform": 50_000,
-           "zipfian": 100_000, "failover": 25_000}
+           "zipfian": 100_000, "failover": 25_000,
+           "read_heavy": 50_000, "reader_flood": 20_000}
 SIM_SMOKE_OPS = {"home": 25_000, "uniform": 25_000,
-                 "zipfian": 100_000, "failover": 10_000}
+                 "zipfian": 100_000, "failover": 10_000,
+                 "read_heavy": 25_000, "reader_flood": 10_000}
+
+# Read:write ratio sweep (sim): the mode-aware acceptance numbers.  A hot
+# read-mostly working set — one home key per host shared by its 16 clients,
+# Zipf(1.2) for the remote tail, 150 µs lease holds — run once with SHARED
+# readers and once degraded to exclusive-only, same seed, so the speedup is
+# a like-for-like protocol delta (and deterministic).  The 95:5 row is the
+# acceptance gate: shared-mode throughput ≥ 3× exclusive-only, home-class
+# readers at exactly 0 RDMA ops, remote shared acquires at ≤ 1 rCAS each.
+RW_CFG = dict(num_hosts=16, clients_per_host=16, num_shards=32,
+              keys_per_host=1, zipf_s=1.2, home_frac=0.9, hold=150e-6)
+RW_OPS = 10_000
+RW_RATIOS = (0.5, 0.9, 0.95, 0.99)       # read fraction per ratio row
+RW_SMOKE_RATIOS = (0.95,)                # CI keeps just the acceptance row
+
+
+def run_rw_sweep(report, sim_seed=0, smoke=False):
+    """Shared vs exclusive-only throughput across read:write ratios."""
+    sweep = {}
+    # The exclusive-only degradation ignores the S/X draw (every op is
+    # EXCLUSIVE either way), so one baseline run serves every ratio.
+    excl = run_lock_table_sim(
+        "read_heavy", total_ops=RW_OPS, seed=sim_seed, shared_reads=False,
+        **RW_CFG)
+    for read_frac in (RW_SMOKE_RATIOS if smoke else RW_RATIOS):
+        wf = round(1.0 - read_frac, 6)
+        shared = run_lock_table_sim(
+            "read_heavy", total_ops=RW_OPS, seed=sim_seed, write_frac=wf,
+            **RW_CFG)
+        label = f"{round(read_frac * 100)}:{round(wf * 100)}"
+        speedup = shared.virtual_throughput / max(excl.virtual_throughput,
+                                                  1e-9)
+        rcas_per_join = (shared.shared_acquire_rcas
+                         / max(shared.shared_remote_grants, 1))
+        sweep[label] = {
+            "write_frac": wf,
+            "shared": {
+                "virtual_throughput": shared.virtual_throughput,
+                "ops": shared.ops,
+                "grants_shared": shared.grants_shared,
+                "grants_exclusive": shared.grants_exclusive,
+                "rejects": shared.rejects,
+                "intent_blocks": shared.intent_blocks,
+                "shared_remote_grants": shared.shared_remote_grants,
+                "shared_acquire_rcas": shared.shared_acquire_rcas,
+                "local_rdma": sum(
+                    v for k, v in shared.cost["local"].items()
+                    if k.startswith("remote_") and k != "remote_doorbell"),
+            },
+            "exclusive_only": {
+                "virtual_throughput": excl.virtual_throughput,
+                "ops": excl.ops,
+                "rejects": excl.rejects,
+            },
+            "shared_speedup": round(speedup, 3),
+            "rcas_per_remote_shared_acquire": round(rcas_per_join, 4),
+        }
+        report(
+            f"lock_table/sim/rw{label}/hosts{RW_CFG['num_hosts']}"
+            f"x{RW_CFG['clients_per_host']}",
+            1e6 / max(shared.virtual_throughput, 1e-9),
+            f"shared={shared.virtual_throughput:.0f}/s "
+            f"exclusive_only={excl.virtual_throughput:.0f}/s "
+            f"speedup={speedup:.2f}x "
+            f"rcas/rsharedacq={rcas_per_join:.2f} localRDMA=0",
+        )
+    return sweep
 
 
 def run_sim(report, sim_seed=0, smoke=False):
@@ -272,6 +365,13 @@ def run_sim(report, sim_seed=0, smoke=False):
         wall[cfg] = round(r.wall_seconds, 3)
         rdma = sum(v for k, v in r.cost["remote"].items()
                    if k.startswith("remote_") and k != "remote_doorbell")
+        extra = ""
+        if r.grants_shared:
+            extra = (f"gS={r.grants_shared} gX={r.grants_exclusive} "
+                     f"intent={r.intent_blocks} ")
+        if workload == "reader_flood":
+            extra += (f"writer_grants={r.writer_grants} "
+                      f"writer_max_wait={r.writer_max_wait * 1e6:.0f}us ")
         report(
             f"lock_table/sim/{cfg}",
             1e6 / max(r.virtual_throughput, 1e-9),  # virtual µs per op
@@ -279,6 +379,7 @@ def run_sim(report, sim_seed=0, smoke=False):
             f"ops={r.ops} rejects={r.rejects} exp={r.expirations} "
             f"rRDMA/op={rdma / max(r.ops, 1):.2f} "
             f"doorbells/op={r.cost['remote']['remote_doorbell'] / max(r.ops, 1):.2f} "
+            f"{extra}"
             f"wall={r.wall_seconds:.1f}s localRDMA=0",
         )
     return rows, wall
@@ -296,7 +397,8 @@ def run(report, seconds=0.7, seeds=SEEDS, mode="both", sim_seed=0,
     _LAST["sim"] = None
     if mode in ("threaded", "both"):
         num_hosts = 4
-        for workload in ("home", "uniform", "renew", "renew_remote", "batch"):
+        for workload in ("home", "uniform", "read_heavy", "renew",
+                         "renew_remote", "batch"):
             base = None
             for shards in (1, 4, 16):
                 r = _bench_median(num_hosts, shards, workload, seconds, seeds)
@@ -316,12 +418,17 @@ def run(report, seconds=0.7, seeds=SEEDS, mode="both", sim_seed=0,
                 )
     if mode in ("sim", "both"):
         rows, wall = run_sim(report, sim_seed=sim_seed, smoke=smoke)
+        sweep = run_rw_sweep(report, sim_seed=sim_seed, smoke=smoke)
         _LAST["sim"] = {
             "seed": sim_seed,
             "config": {"hosts": SIM_HOSTS, "clients_per_host": SIM_CPH,
                        "shards": SIM_SHARDS},
             "rows": rows,
             "wall_seconds": wall,
+            "read_write_sweep": {
+                "config": dict(RW_CFG, total_ops=RW_OPS),
+                "ratios": sweep,
+            },
         }
 
 

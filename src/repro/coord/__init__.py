@@ -6,4 +6,5 @@ wraps it together with named locks, elections and barriers.
 """
 
 from .service import Barrier, CoordinationService  # noqa: F401
-from .table import Lease, LockShard, ShardedLockTable, stable_key_hash  # noqa: F401
+from .table import (Lease, LeaseMode, LockShard, ShardedLockTable,  # noqa: F401
+                    stable_key_hash)

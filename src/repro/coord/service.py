@@ -37,7 +37,7 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.core import ALock, AsymmetricMemory, OpCounts, Process
 
-from .table import Lease, ShardedLockTable
+from .table import Lease, LeaseMode, ShardedLockTable
 
 
 class CoordinationService:
@@ -70,17 +70,21 @@ class CoordinationService:
         self._claims: Dict[str, object] = {}
         self._init_budget = init_budget
         self._guard = threading.Lock()
-        # Read-mostly lease cache: (holder pid, key) -> latest Lease.  The
-        # table's renewal/release fast path CASes the expiry register against
-        # the lease's (token, expires_at) witness, so a caller holding a
-        # *stale* lease object (e.g. the one acquire returned, after several
-        # keepalives) would fall off the fast path.  The cache keeps the
-        # freshest witness per holder and substitutes it when the fencing
-        # token matches — repeat holders skip the slow ALock transaction (and
-        # its table lookups) entirely.  Entries are dropped on release or any
-        # failed renew; leases that silently lapse (a crashed holder never
-        # calls back) are swept inside _cache_put once the cache grows past
-        # an amortised threshold, so it cannot leak unboundedly.
+        # Read-mostly lease cache: (holder pid, key, mode) -> latest Lease.
+        # The table's renewal/release fast path CASes the expiry register
+        # against the lease's (token, expires_at) witness, so a caller
+        # holding a *stale* lease object (e.g. the one acquire returned,
+        # after several keepalives) would fall off the fast path.  The cache
+        # keeps the freshest witness per holder and substitutes it when the
+        # fencing token matches — repeat holders skip the slow ALock
+        # transaction (and its table lookups) entirely.  The key includes
+        # the lease *mode*: a shared lease and an exclusive lease on the
+        # same key are different grants with different witnesses (and a
+        # mid-upgrade holder briefly has both).  Entries are dropped on
+        # release or any failed renew; leases that silently lapse (a crashed
+        # holder never calls back) are swept inside _cache_put once the
+        # cache grows past an amortised threshold, so it cannot leak
+        # unboundedly.
         self._lease_cache: Dict[tuple, Lease] = {}
         self._cache_sweep_at = self._CACHE_SWEEP
 
@@ -100,7 +104,7 @@ class CoordinationService:
             # have doubled, so steady-state puts stay O(1) even with >1024
             # live leases (a sweep that evicts nothing doesn't rerun per put).
             self._cache_sweep_at = max(self._CACHE_SWEEP, 2 * len(cache))
-        cache[(p.pid, lease.key)] = lease
+        cache[(p.pid, lease.key, lease.mode)] = lease
 
     def host_process(self, host: int) -> Process:
         """One coordination process per host (call once per host thread)."""
@@ -113,61 +117,91 @@ class CoordinationService:
     def home_of(self, key: str) -> int:
         return self.table.home_of(key)
 
-    def try_acquire(self, p: Process, key: str, ttl: float) -> Optional[Lease]:
-        lease = self.table.try_acquire(p, key, ttl)
+    def try_acquire(self, p: Process, key: str, ttl: float,
+                    mode: LeaseMode = LeaseMode.EXCLUSIVE) -> Optional[Lease]:
+        lease = self.table.try_acquire(p, key, ttl, mode=mode)
         if lease is not None:
             self._cache_put(p, lease)
         return lease
 
     def acquire(self, p: Process, key: str, ttl: float,
-                timeout: Optional[float] = None) -> Lease:
-        lease = self.table.acquire(p, key, ttl, timeout=timeout)
+                timeout: Optional[float] = None,
+                mode: LeaseMode = LeaseMode.EXCLUSIVE) -> Lease:
+        lease = self.table.acquire(p, key, ttl, timeout=timeout, mode=mode)
         self._cache_put(p, lease)
         return lease
 
     def acquire_batch(self, p: Process, keys: Sequence[str], ttl: float,
-                      timeout: Optional[float] = None) -> List[Lease]:
-        leases = self.table.acquire_batch(p, keys, ttl, timeout=timeout)
+                      timeout: Optional[float] = None,
+                      mode: LeaseMode = LeaseMode.EXCLUSIVE) -> List[Lease]:
+        leases = self.table.acquire_batch(p, keys, ttl, timeout=timeout,
+                                          mode=mode)
         for lease in leases:
             self._cache_put(p, lease)
         return leases
 
-    def release(self, p: Process, lease: Lease) -> bool:
-        cached = self._lease_cache.get((p.pid, lease.key))
+    def _freshest(self, p: Process, lease: Lease, evict: bool) -> Lease:
+        """Substitute the cached latest witness for the same grant."""
+        ck = (p.pid, lease.key, lease.mode)
+        cached = self._lease_cache.get(ck)
         if cached is not None and cached.token == lease.token:
-            # Same grant: evict and release with the freshest witness (keeps
-            # the CAS fast path hot).  A token mismatch is an older grant's
-            # stale object — leave the live grant's cache entry alone.
-            self._lease_cache.pop((p.pid, lease.key), None)
-            lease = cached
-        return self.table.release(p, lease)
+            # Same grant: use the freshest witness (keeps the CAS fast path
+            # hot).  A token mismatch is an older grant's stale object —
+            # leave the live grant's cache entry alone.
+            if evict:
+                self._lease_cache.pop(ck, None)
+            return cached
+        return lease
+
+    def release(self, p: Process, lease: Lease) -> bool:
+        return self.table.release(p, self._freshest(p, lease, evict=True))
 
     def release_batch(self, p: Process, leases: Sequence[Lease]) -> int:
-        return sum(1 for lease in leases if self.release(p, lease))
+        """Witness-corrected batch release, shard-grouped by the table
+        (one doorbell per shard group of fast-path CASes, at most one
+        ALock critical section per group for the slow-path remainder)."""
+        fixed = [self._freshest(p, lease, evict=True) for lease in leases]
+        return self.table.release_batch(p, fixed)
 
     def renew(self, p: Process, lease: Lease,
               ttl: Optional[float] = None) -> Optional[Lease]:
         """Renew via the table's fast path, witness-corrected by the cache.
 
         A stale lease *object* (same fencing token, older ``expires_at``) is
-        silently upgraded to the cached latest before the CAS, so repeat
+        silently refreshed to the cached latest before the CAS, so repeat
         holders stay on the zero-ALock fast path no matter which of their
-        lease objects they pass in.  A token mismatch is never upgraded —
+        lease objects they pass in.  A token mismatch is never refreshed —
         that is a different grant and must fail fencing validation.
         """
-        cached = self._lease_cache.get((p.pid, lease.key))
-        if (
-            cached is not None
-            and cached.token == lease.token
-            and cached.expires_at > lease.expires_at
-        ):
-            lease = cached
+        lease = self._freshest(p, lease, evict=False)
         renewed = self.table.renew(p, lease, ttl)
         if renewed is None:
-            self._lease_cache.pop((p.pid, lease.key), None)
+            self._lease_cache.pop((p.pid, lease.key, lease.mode), None)
         else:
             self._cache_put(p, renewed)
         return renewed
+
+    def upgrade(self, p: Process, lease: Lease,
+                ttl: Optional[float] = None) -> Optional[Lease]:
+        """SHARED → EXCLUSIVE via the table (sole live reader only); the
+        cache swaps the shared entry for the new exclusive grant."""
+        lease = self._freshest(p, lease, evict=False)
+        upgraded = self.table.upgrade(p, lease, ttl)
+        if upgraded is not None:
+            self._lease_cache.pop((p.pid, lease.key, lease.mode), None)
+            self._cache_put(p, upgraded)
+        return upgraded
+
+    def downgrade(self, p: Process, lease: Lease,
+                  ttl: Optional[float] = None) -> Optional[Lease]:
+        """EXCLUSIVE → SHARED via the table's single-CAS transition; the
+        cache swaps the exclusive entry for the new shared grant."""
+        lease = self._freshest(p, lease, evict=False)
+        downgraded = self.table.downgrade(p, lease, ttl)
+        if downgraded is not None:
+            self._lease_cache.pop((p.pid, lease.key, lease.mode), None)
+            self._cache_put(p, downgraded)
+        return downgraded
 
     def telemetry(self) -> List[Dict]:
         return self.table.telemetry()

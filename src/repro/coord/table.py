@@ -25,17 +25,33 @@ Layered on the shard locks is a **lease table** (the long-lived exclusion):
   order, so no cycle of waiters can form — deadlock freedom without a
   detector (see ``docs/lock-table.md``).
 
+**Lease modes** (see the "Lease modes" section of ``docs/lock-table.md``):
+every lease is either :data:`LeaseMode.EXCLUSIVE` (one writer) or
+:data:`LeaseMode.SHARED` (a cohort of readers).  The per-key expiry register
+packs ``(writer_fence_token, reader_count, expires_at)`` so that a shared
+grant is a *single CAS* on one word — readers never take the shard ALock at
+all: zero simulated RDMA ops for a home-host reader, one rCAS per attempt
+for a remote one (exactly one uncontended and under the sim engine's atomic
+steps; a threaded CAS race retries, bounded by the fast-attempt cap).  Reader generations reuse the last CS-allocated token (readers
+issue no fenced downstream writes), writer grants still allocate strictly
+increasing tokens inside the critical section, and a queued writer **drains**
+a live reader cohort through a lease-like intent barrier: new joins and
+shared renewals are refused while the barrier is armed, so the cohort dries
+up within one TTL and the writer's grant latency is bounded.
+
 Hot-path optimisations (see the "Hot path" section of ``docs/lock-table.md``):
 
 * **Renewal/release fast path** — the current holder extends or drops its
   lease with a single fencing-token-checked CAS on the expiry register,
   *without* taking the shard ALock: zero simulated RDMA ops for local
   holders, exactly one rCAS for remote holders.  The expiry register packs
-  ``(fence_token, expires_at)`` so the CAS validates the fence: a zombie
-  holder's CAS always loses after a re-grant (the token moved on).
+  ``(fence_token, readers, expires_at)`` so the CAS validates the fence: a
+  zombie holder's CAS always loses after a re-grant (the token moved on).
 * **Shard-grouped batches** — ``acquire_batch`` holds each shard's ALock
   once for all of that shard's keys (O(distinct shards) critical sections
-  instead of O(keys)), still walking the global order.
+  instead of O(keys)), still walking the global order; ``release_batch``
+  mirrors it, coalescing a shard group's release CASes into one doorbell
+  and taking the shard ALock at most once for the group's slow-path leases.
 * **Doorbell coalescing** — remote clients post the critical section's
   register reads in one :meth:`~repro.core.AsymmetricMemory.post_batch`
   doorbell and its writes in another, modelling RDMA WR posting lists.
@@ -43,12 +59,14 @@ Hot-path optimisations (see the "Hot path" section of ``docs/lock-table.md``):
 Telemetry: every table operation snapshots the calling process's
 :class:`~repro.core.OpCounts` (an O(1) tuple snapshot, accumulated in place —
 no per-op dict copies) and adds the delta to the target shard's per-class
-(LOCAL/REMOTE) totals, so benchmarks and the serving layer can verify the
-zero-RDMA home path without instrumenting clients.
+(LOCAL/REMOTE) totals — and, since the mode refactor, to the per-mode
+per-class totals — so benchmarks and the serving layer can verify the
+zero-RDMA home path *per mode* without instrumenting clients.
 """
 
 from __future__ import annotations
 
+import enum
 import hashlib
 import threading
 import time
@@ -62,10 +80,33 @@ LOCAL, REMOTE = 0, 1
 
 _NO_HOLDER = -1
 
-# The expiry register packs (fence_token, expires_at).  expires_at <= FREE_AT
-# means the key is not held (never granted, or released); a grant always
-# writes a strictly positive expiry, so the states cannot be confused.
+# The expiry register packs (fence_token, reader_count, expires_at).
+# expires_at <= FREE_AT means the key is not held (never granted, or
+# released); a grant always writes a strictly positive expiry, so the states
+# cannot be confused.
 _FREE_AT = 0.0
+
+# Bounded optimism: the shared-mode fast paths are read+CAS retry loops (the
+# CAS can lose only to another *successful* shared operation, so the system
+# as a whole always progresses).  Under the sim engine's atomic steps a
+# retry never happens; under threads the cap converts a pathological
+# contention storm into a clean reject instead of an unbounded spin.
+_FAST_ATTEMPTS = 64
+
+
+class LeaseMode(enum.IntEnum):
+    """S/X lease modes.  SHARED leases form a reader cohort on one packed
+    word; EXCLUSIVE leases are the original writer leases."""
+
+    SHARED = 0
+    EXCLUSIVE = 1
+
+    @property
+    def label(self) -> str:
+        return "shared" if self is LeaseMode.SHARED else "exclusive"
+
+
+SHARED, EXCLUSIVE = LeaseMode.SHARED, LeaseMode.EXCLUSIVE
 
 
 @lru_cache(maxsize=1 << 17)
@@ -83,16 +124,23 @@ def stable_key_hash(key: str) -> int:
 
 @dataclass(frozen=True)
 class Lease:
-    """A granted lease: the unit of long-lived exclusion.
+    """A granted lease: the unit of long-lived exclusion (or sharing).
 
     ``token`` is the fencing token — strictly increasing per key across
-    grants, so any resource that records the largest token it has seen can
-    reject writes from a holder whose lease has expired and been re-granted.
+    *writer* grants, so any resource that records the largest token it has
+    seen can reject writes from a holder whose lease has expired and been
+    re-granted.  A SHARED lease carries its reader generation's token (the
+    last token the critical section allocated): readers issue no fenced
+    downstream writes, and the next writer's token is strictly larger than
+    every reader generation it displaces.
 
-    ``expires_at`` doubles as the fast-path CAS witness: ``renew``/``release``
-    compare-and-swap the expiry register against ``(token, expires_at)``, so
-    hold on to the *latest* lease returned by acquire/renew (the
-    :class:`~repro.coord.CoordinationService` lease cache does this for you).
+    ``expires_at`` doubles as the fast-path CAS witness for EXCLUSIVE
+    leases: ``renew``/``release`` compare-and-swap the expiry register
+    against ``(token, 0, expires_at)``, so hold on to the *latest* lease
+    returned by acquire/renew (the :class:`~repro.coord.CoordinationService`
+    lease cache does this for you, keyed per mode).  For SHARED leases it is
+    the holder's own validity horizon — the packed word tracks the cohort's
+    maximum.
     """
 
     key: str
@@ -101,6 +149,7 @@ class Lease:
     token: int
     expires_at: float
     ttl: float
+    mode: LeaseMode = LeaseMode.EXCLUSIVE
 
 
 class _KeyState:
@@ -108,10 +157,11 @@ class _KeyState:
 
     ``holder`` and ``fence`` are read/written **only** inside the shard
     ALock's critical section; ``fence`` is the authoritative token allocator,
-    which is why grant tokens are strictly monotonic unconditionally.
+    which is why writer grant tokens are strictly monotonic unconditionally.
 
-    ``expires`` packs ``(fence_token, expires_at)`` and is the one register
-    the *current holder* may CAS lock-free (the renewal/release fast path).
+    ``expires`` packs ``(fence_token, reader_count, expires_at)`` and is the
+    one register holders may CAS lock-free: the renewal/release fast path,
+    shared joins/leaves, and downgrades all operate on this single word.
     Because remote RMW is not atomic against the critical section's writes
     (Table 1), a **zombie's** in-flight rCAS write phase can, in a vanishing
     window, overwrite a concurrent re-grant's write with its stale tuple.
@@ -121,14 +171,23 @@ class _KeyState:
     telemetry).  This is the standard lease-system posture: expiry-time
     races cannot be airtight under asynchrony, fencing tokens are what make
     them harmless downstream — and the tokens themselves never regress.
+
+    ``intent`` is the writer drain barrier: a virtual-time deadline written
+    only inside the critical section (by a writer blocked on a live reader
+    cohort).  The shared fast paths read it and refuse joins/renewals while
+    ``now < intent``, so the cohort drains within one TTL; any writer grant
+    clears it.  A stale barrier (the writer timed out or was beaten to the
+    grant) simply lapses — no cleanup protocol, same posture as the leases
+    themselves.
     """
 
-    __slots__ = ("holder", "expires", "fence")
+    __slots__ = ("holder", "expires", "fence", "intent")
 
     def __init__(self, mem: AsymmetricMemory, node: int, name: str):
         self.holder = mem.alloc(node, f"{name}.holder", _NO_HOLDER)
-        self.expires = mem.alloc(node, f"{name}.expires", (0, _FREE_AT))
+        self.expires = mem.alloc(node, f"{name}.expires", (0, 0, _FREE_AT))
         self.fence = mem.alloc(node, f"{name}.fence", 0)
+        self.intent = mem.alloc(node, f"{name}.intent", _FREE_AT)
 
 
 class LockShard:
@@ -142,11 +201,23 @@ class LockShard:
         self.keys: Dict[str, _KeyState] = {}
         # Meta-level accounting (not part of the simulated protocol).
         self.stats = {LOCAL: OpCounts(), REMOTE: OpCounts()}
+        self.mode_stats = {(m, c): OpCounts()
+                           for m in LeaseMode for c in (LOCAL, REMOTE)}
         self.grants = 0
         self.rejects = 0
+        self.grants_by_mode = {m: 0 for m in LeaseMode}
+        self.rejects_by_mode = {m: 0 for m in LeaseMode}
         self.expirations = 0
         self.fast_renews = 0
         self.fast_releases = 0
+        self.shared_joins = 0        # fast-path shared grants (no ALock)
+        self.shared_renews = 0
+        self.shared_releases = 0
+        self.shared_remote_grants = 0   # shared grants paid for over the fabric
+        self.shared_acquire_rcas = 0    # rCAS posted by remote shared acquires
+        self.upgrades = 0
+        self.downgrades = 0
+        self.intent_blocks = 0       # shared ops refused by a writer barrier
         self.repairs = 0  # clobbered expiry mirrors repaired by a grant
         self._meta = threading.Lock()
 
@@ -181,6 +252,66 @@ class ShardedLockTable:
             LockShard(mem, s, s % self.num_hosts, init_budget, name)
             for s in range(self.num_shards)
         ]
+        # Client-side cohort-slot ledger: pid -> {key: [count, token,
+        # horizon]}.  The packed word's reader count is anonymous — a
+        # decrement cannot tell WHOSE slot it takes — so the client library
+        # must never post one it does not own: a double release (or a renew
+        # / release after an upgrade consumed the slot) would otherwise
+        # free another live reader's slot and let a writer in beside them.
+        # Within one process, slots of the same (key, generation) are
+        # fungible: a stale handle releases one of the CALLER'S own slots
+        # (self-inflicted, contained) — it can never free another client's.
+        # A pid is single-threaded by the spawn contract, so each inner
+        # per-pid dict is accessed (and swept, amortised) lock-free by its
+        # owner; the guard covers only outer-dict insertion.  Entries die
+        # with their horizon, like the service lease cache.
+        self._slots: Dict[int, Dict[str, List]] = {}
+        self._slots_guard = threading.Lock()
+
+    _SLOTS_SWEEP = 1024
+
+    def _pid_slots(self, p: Process) -> Dict[str, List]:
+        slots = self._slots.get(p.pid)
+        if slots is None:
+            with self._slots_guard:
+                slots = self._slots.setdefault(p.pid, {})
+        return slots
+
+    def _slot_join(self, p: Process, key: str, token: int,
+                   horizon: float) -> None:
+        """Record one cohort slot owned by ``p`` on ``key``."""
+        slots = self._pid_slots(p)
+        if len(slots) >= self._SLOTS_SWEEP:
+            now = self.clock()
+            for k in [k for k, e in slots.items()
+                      if e[0] <= 0 or now >= e[2]]:
+                del slots[k]
+        entry = slots.get(key)
+        if (entry is not None and entry[1] == token
+                and self.clock() < entry[2]):
+            entry[0] += 1
+            entry[2] = max(entry[2], horizon)
+        else:
+            slots[key] = [1, token, horizon]
+
+    def _slot_count(self, p: Process, key: str, token: int) -> int:
+        """How many slots of ``key``'s generation ``token`` does ``p`` own?"""
+        entry = self._pid_slots(p).get(key)
+        return entry[0] if entry is not None and entry[1] == token else 0
+
+    def _slot_owned(self, p: Process, key: str, token: int) -> bool:
+        return self._slot_count(p, key, token) > 0
+
+    def _slot_extend(self, p: Process, key: str, token: int,
+                     horizon: float) -> None:
+        entry = self._pid_slots(p).get(key)
+        if entry is not None and entry[1] == token:
+            entry[2] = max(entry[2], horizon)
+
+    def _slot_consume(self, p: Process, key: str, token: int) -> None:
+        entry = self._pid_slots(p).get(key)
+        if entry is not None and entry[1] == token and entry[0] > 0:
+            entry[0] -= 1
 
     # ---------------------------------------------------------- placement
     def shard_of(self, key: str) -> int:
@@ -205,10 +336,12 @@ class ShardedLockTable:
         return st
 
     # ---------------------------------------------------------- accounting
-    def _account(self, shard: LockShard, p: Process, snap: tuple) -> None:
+    def _account(self, shard: LockShard, p: Process, snap: tuple,
+                 mode: LeaseMode) -> None:
         cls = LOCAL if p.node == shard.home_host else REMOTE
         with shard._meta:
             shard.stats[cls].add_since(p.counts, snap)
+            shard.mode_stats[(mode, cls)].add_since(p.counts, snap)
 
     # --------------------------------------------------- batched register IO
     def _read_pairs(self, p: Process, shard: LockShard,
@@ -227,24 +360,182 @@ class ShardedLockTable:
         return [(flat[2 * i], flat[2 * i + 1]) for i in range(len(states))]
 
     def _read_key_state(self, p: Process, shard: LockShard,
-                        st: _KeyState) -> Tuple[int, tuple, int]:
-        """The slow paths' validation read set (holder, expires, fence) —
-        one doorbell for remote clients."""
+                        st: _KeyState) -> Tuple[int, tuple, int, float]:
+        """The slow paths' validation read set (holder, expires, fence,
+        intent) — one doorbell for remote clients."""
         if p.node == shard.home_host:
             return (self.mem.read(p, st.holder),
                     self.mem.read(p, st.expires),
-                    self.mem.read(p, st.fence))
-        holder, packed, fence = self.mem.post_batch(p, [
-            ("read", st.holder), ("read", st.expires), ("read", st.fence),
+                    self.mem.read(p, st.fence),
+                    self.mem.read(p, st.intent))
+        holder, packed, fence, barrier = self.mem.post_batch(p, [
+            ("read", st.holder), ("read", st.expires),
+            ("read", st.fence), ("read", st.intent),
         ])
-        return holder, packed, fence
+        return holder, packed, fence, barrier
+
+    def _shared_read(self, p: Process, shard: LockShard,
+                     st: _KeyState) -> Tuple[tuple, int, float]:
+        """The shared fast path's read set (expires, fence, intent) — one
+        doorbell for remote clients, three machine reads for local ones."""
+        if p.node == shard.home_host:
+            return (self.mem.read(p, st.expires),
+                    self.mem.read(p, st.fence),
+                    self.mem.read(p, st.intent))
+        packed, fence, barrier = self.mem.post_batch(p, [
+            ("read", st.expires), ("read", st.fence), ("read", st.intent),
+        ])
+        return packed, fence, barrier
+
+    # ------------------------------------------------------- shared fast path
+    def _shared_acquire(self, p: Process, shard: LockShard, key: str,
+                        ttl: float) -> Optional[Lease]:
+        """Grant a SHARED lease with a single CAS on the packed word.
+
+        Joinable states: free, expired (any mode), or a live reader cohort.
+        A live writer blocks; an armed writer-intent barrier blocks (drain
+        priority); a clobbered mirror (word token ≠ fence) is repaired via
+        the critical section like any grant over untrusted state.  The CAS
+        either joins the live cohort (count+1, expiry extended to cover this
+        reader) or opens a fresh generation (count=1) reusing the last
+        CS-allocated token — token allocation stays CS-only, so writer
+        tokens remain strictly monotonic and are always strictly larger
+        than any reader generation they displace.
+        """
+        st = self._key_state(shard, key)
+        snap = p.counts.as_tuple()
+        local = p.node == shard.home_host
+        lease: Optional[Lease] = None
+        intent_block = False
+        repair = False
+        expired_over = False
+        rcas_posted = 0
+        try:
+            for _ in range(_FAST_ATTEMPTS):
+                now = self.clock()
+                packed, fence, barrier = self._shared_read(p, shard, st)
+                etok, readers, eexp = packed
+                if now < barrier:
+                    intent_block = True  # a writer is draining this key
+                    break
+                if etok != fence:
+                    repair = True  # untrusted mirror: go repair via the CS
+                    break
+                free = eexp <= _FREE_AT
+                live = (not free) and now < eexp
+                if live and readers == 0:
+                    break  # a live writer holds the key
+                if live:  # join the live reader cohort
+                    new = (etok, readers + 1, max(eexp, now + ttl))
+                else:     # open a fresh generation over free/expired state
+                    new = (etok, 1, now + ttl)
+                observed = self.mem.auto_cas(p, st.expires, packed, new)
+                if not local:
+                    rcas_posted += 1
+                if observed == packed:
+                    lease = Lease(key, shard.index, p.pid, etok, now + ttl,
+                                  ttl, LeaseMode.SHARED)
+                    expired_over = (not free) and not live
+                    break
+                self.mem.yield_point()  # lost to another shared CAS: retry
+        finally:
+            self._account(shard, p, snap, LeaseMode.SHARED)
+        if repair:
+            return self._shared_repair_grant(p, shard, key, st, ttl,
+                                             rcas_posted)
+        if lease is not None:
+            self._slot_join(p, key, lease.token, lease.expires_at)
+        with shard._meta:
+            shard.shared_acquire_rcas += rcas_posted
+            if lease is not None:
+                shard.grants += 1
+                shard.grants_by_mode[LeaseMode.SHARED] += 1
+                shard.shared_joins += 1
+                if not local:
+                    shard.shared_remote_grants += 1
+                if expired_over:
+                    shard.expirations += 1
+            else:
+                shard.rejects += 1
+                shard.rejects_by_mode[LeaseMode.SHARED] += 1
+                if intent_block:
+                    shard.intent_blocks += 1
+        return lease
+
+    def _shared_repair_grant(self, p: Process, shard: LockShard, key: str,
+                             st: _KeyState, ttl: float,
+                             rcas_posted: int) -> Optional[Lease]:
+        """A shared grant over a clobbered mirror: the one shared-acquire
+        case that must run under the shard ALock (the mirror cannot be
+        trusted, so the CS re-validates and re-seeds it — allocating a fresh
+        token, exactly like an exclusive grant over untrusted state)."""
+        snap = p.counts.as_tuple()
+        lease: Optional[Lease] = None
+        repaired = False
+        blocked_by_intent = False
+        try:
+            now = self.clock()
+            shard.alock.lock(p)
+            writes: List[tuple] = []
+            try:
+                holder, packed, fence, barrier = \
+                    self._read_key_state(p, shard, st)
+                etok, readers, eexp = packed
+                if now < barrier:
+                    blocked_by_intent = True
+                else:
+                    free = eexp <= _FREE_AT
+                    clobbered = etok != fence
+                    if free or clobbered or now >= eexp:
+                        token = fence + 1
+                        # CAS, not write: a CS-free join can land between
+                        # the read above and this commit; the CAS loses
+                        # cleanly and the caller's retry re-reads.
+                        if self.mem.auto_cas(p, st.expires, packed,
+                                             (token, 1, now + ttl)) == packed:
+                            lease = Lease(key, shard.index, p.pid, token,
+                                          now + ttl, ttl, LeaseMode.SHARED)
+                            writes = [
+                                ("write", st.fence, token),
+                                ("write", st.holder, _NO_HOLDER),
+                                ("write", st.intent, _FREE_AT),
+                            ]
+                            repaired = clobbered
+                    # else: someone re-granted cleanly while we queued for
+                    # the CS — report a reject; the caller's retry will join.
+            finally:
+                shard.alock.unlock(p, piggyback=writes or None)
+        finally:
+            self._account(shard, p, snap, LeaseMode.SHARED)
+        if lease is not None:
+            self._slot_join(p, key, lease.token, lease.expires_at)
+        with shard._meta:
+            shard.shared_acquire_rcas += rcas_posted
+            if lease is not None:
+                shard.grants += 1
+                shard.grants_by_mode[LeaseMode.SHARED] += 1
+                if p.node != shard.home_host:
+                    shard.shared_remote_grants += 1
+                if repaired:
+                    shard.repairs += 1
+            else:
+                shard.rejects += 1
+                shard.rejects_by_mode[LeaseMode.SHARED] += 1
+                if blocked_by_intent:
+                    shard.intent_blocks += 1
+        return lease
 
     # --------------------------------------------------------------- leases
     def _acquire_group(self, p: Process, shard: LockShard,
                        keys: Sequence[str], ttl: float,
+                       mode: LeaseMode = LeaseMode.EXCLUSIVE,
                        ) -> Tuple[List[Lease], bool]:
-        """Grant a prefix of ``keys`` (one shard, global order) in **one**
-        ALock critical section.
+        """Grant a prefix of ``keys`` (one shard, global order).
+
+        EXCLUSIVE mode runs the original transaction in **one** ALock
+        critical section; SHARED mode joins each key's reader cohort with
+        the CS-free single-CAS fast path (shared grants never conflict with
+        each other, so there is no critical section to batch).
 
         Returns ``(granted, blocked)``: the leases granted, and whether the
         next key was held by a live lease (granting stops there — taking
@@ -252,10 +543,19 @@ class ShardedLockTable:
         deadlock-avoidance total order).  Never blocks inside the critical
         section.
         """
+        if mode == LeaseMode.SHARED:
+            granted: List[Lease] = []
+            for key in keys:
+                lease = self._shared_acquire(p, shard, key, ttl)
+                if lease is None:
+                    return granted, True
+                granted.append(lease)
+            return granted, False
+
         states = [self._key_state(shard, k) for k in keys]
         snap = p.counts.as_tuple()
         local = p.node == shard.home_host
-        granted: List[Lease] = []
+        granted = []
         writes: List[tuple] = []
         blocked = False
         expirations = 0
@@ -284,58 +584,128 @@ class ShardedLockTable:
                 else:
                     vals = [(flat[2 * i], flat[2 * i + 1])
                             for i in range(len(states))]
-                for key, st, ((etok, eexp), fence) in zip(keys, states, vals):
+                # Verdict pass: the grantable prefix in global order.
+                plan = []  # (key, st, packed-as-read, new token, clobbered, free)
+                for key, st, ((etok, readers, eexp), fence) in zip(
+                        keys, states, vals):
                     free = eexp <= _FREE_AT
                     clobbered = etok != fence  # zombie CAS hit the mirror
                     if not free and not clobbered and now < eexp:
                         blocked = True
+                        if readers > 0:
+                            # A live reader cohort: arm the drain barrier so
+                            # no new reader joins (and no shared renewal
+                            # extends the cohort) past its current horizon —
+                            # the writer's wait is bounded by one TTL.
+                            writes.append(("write", st.intent, eexp))
                         break
-                    if clobbered:
-                        repairs += 1  # untrusted mirror: treat as expired
-                    elif not free:
-                        expirations += 1  # grant over an expired lease
                     token = fence + 1  # CS-only allocator: never regresses
-                    granted.append(
-                        Lease(key, shard.index, p.pid, token, now + ttl, ttl)
-                    )
-                    writes += [
-                        ("write", st.fence, token),
-                        ("write", st.holder, p.pid),
-                        ("write", st.expires, (token, now + ttl)),
+                    plan.append((key, st, (etok, readers, eexp), token,
+                                 clobbered, free))
+                # Commit pass: every packed-word mutation is a CAS against
+                # the value this transaction read — the CS excludes other
+                # critical sections but NOT the CS-free shared joins, so a
+                # plain grant write could stomp a reader that joined the
+                # free word in the decision window.  The CAS loses instead
+                # (and the key reports blocked).  Remote clients post the
+                # whole group's grant CASes in one doorbell.
+                if plan:
+                    if local:
+                        won = [
+                            self.mem.cas(p, st.expires, packed,
+                                         (token, 0, now + ttl)) == packed
+                            for (_k, st, packed, token, _c, _f) in plan
+                        ]
+                    else:
+                        obs = self.mem.post_batch(p, [
+                            ("cas", st.expires, packed, (token, 0, now + ttl))
+                            for (_k, st, packed, token, _c, _f) in plan
+                        ])
+                        won = [o == packed
+                               for o, (_k, _s, packed, *_r) in zip(obs, plan)]
+                    cut = won.index(False) if False in won else len(plan)
+                    # Global-order discipline: nothing may be held past the
+                    # first loser.  The batch's CASes already executed, so
+                    # un-grant any stray winners after the cut (we hold the
+                    # only witness to the value we just wrote; only the
+                    # vanishing remote-window can beat the rollback, and a
+                    # clobbered word is repaired by the next grant).
+                    rollback = [
+                        ("cas", st.expires, (token, 0, now + ttl), packed)
+                        for i, (_k, st, packed, token, _c, _f)
+                        in enumerate(plan)
+                        if i > cut and won[i]
                     ]
+                    if rollback:
+                        if local:
+                            for _op, reg, exp_v, new_v in rollback:
+                                self.mem.cas(p, reg, exp_v, new_v)
+                        else:
+                            self.mem.post_batch(p, rollback)
+                    if cut < len(plan):
+                        blocked = True
+                    for key, st, packed, token, clobbered, free in plan[:cut]:
+                        if clobbered:
+                            repairs += 1  # untrusted mirror: repaired
+                        elif not free:
+                            expirations += 1  # grant over an expired lease
+                        granted.append(
+                            Lease(key, shard.index, p.pid, token, now + ttl,
+                                  ttl, LeaseMode.EXCLUSIVE)
+                        )
+                        writes += [
+                            ("write", st.fence, token),
+                            ("write", st.holder, p.pid),
+                            ("write", st.intent, _FREE_AT),  # barrier served
+                        ]
             finally:
                 # The grant writes ride the unlock: applied in place by a
                 # local releaser, chained into the tail-drain doorbell by a
                 # remote one — still inside the critical section either way.
                 shard.alock.unlock(p, piggyback=writes or None)
         finally:
-            self._account(shard, p, snap)
+            self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
         with shard._meta:
             shard.grants += len(granted)
+            shard.grants_by_mode[LeaseMode.EXCLUSIVE] += len(granted)
             shard.expirations += expirations
             shard.repairs += repairs
             if blocked:
                 shard.rejects += 1
+                shard.rejects_by_mode[LeaseMode.EXCLUSIVE] += 1
         return granted, blocked
 
-    def try_acquire(self, p: Process, key: str, ttl: float) -> Optional[Lease]:
+    def try_acquire(self, p: Process, key: str, ttl: float,
+                    mode: LeaseMode = LeaseMode.EXCLUSIVE) -> Optional[Lease]:
         """One lease-table transaction; non-blocking.
 
-        Grants iff the key is free or its current lease has expired; a fresh
-        grant always carries a larger fencing token.  Returns ``None`` while
-        a live lease exists — *including* the caller's own (non-reentrant: a
-        holder extends via :meth:`renew`; silently superseding would let one
-        process posing as several clients steal its own slots).
+        EXCLUSIVE: grants iff the key is free or its current lease (either
+        mode) has expired; a fresh grant always carries a larger fencing
+        token.  Returns ``None`` while a live lease exists — *including* the
+        caller's own (non-reentrant: a holder extends via :meth:`renew`;
+        silently superseding would let one process posing as several clients
+        steal its own slots).
+
+        SHARED: grants iff the key is free, expired, or held by a live
+        reader cohort with no writer draining it — a single CAS (per
+        attempt; a lost race with another shared CAS retries, bounded by
+        ``_FAST_ATTEMPTS``), no shard ALock.  Shared joins by the same
+        process stack (each join holds one cohort slot and needs its own
+        release); a live writer or an armed writer-intent barrier yields
+        ``None``.
         """
         if ttl <= 0:
             raise ValueError("ttl must be > 0")
         shard = self.shards[self.shard_of(key)]
-        granted, _ = self._acquire_group(p, shard, (key,), ttl)
+        if mode == LeaseMode.SHARED:
+            return self._shared_acquire(p, shard, key, ttl)
+        granted, _ = self._acquire_group(p, shard, (key,), ttl, mode)
         return granted[0] if granted else None
 
     def acquire(self, p: Process, key: str, ttl: float,
                 timeout: Optional[float] = None,
-                poll: float = 0.0005) -> Lease:
+                poll: float = 0.0005,
+                mode: LeaseMode = LeaseMode.EXCLUSIVE) -> Lease:
         """Blocking acquire: retry ``try_acquire`` until granted or timeout.
 
         ``poll`` backs off between attempts — every retry is a full shard
@@ -345,7 +715,7 @@ class ShardedLockTable:
         """
         deadline = None if timeout is None else self.clock() + timeout
         while True:
-            lease = self.try_acquire(p, key, ttl)
+            lease = self.try_acquire(p, key, ttl, mode=mode)
             if lease is not None:
                 return lease
             if deadline is not None and self.clock() > deadline:
@@ -355,76 +725,142 @@ class ShardedLockTable:
     def renew(self, p: Process, lease: Lease, ttl: Optional[float] = None) -> Optional[Lease]:
         """Extend a still-valid lease; ``None`` if it was lost (fencing).
 
-        **Fast path** (the common case — the holder renews before expiry,
-        with its latest lease object): a single fencing-token-checked CAS on
-        the expiry register, no shard ALock.  Zero simulated RDMA ops for a
-        local holder, exactly one rCAS for a remote holder.  A zombie whose
-        key was re-granted always loses the CAS: the register carries the
-        new (larger) fence token, and tokens are never reused (no ABA).
+        **EXCLUSIVE fast path** (the common case — the holder renews before
+        expiry, with its latest lease object): a single fencing-token-checked
+        CAS on the expiry register, no shard ALock.  Zero simulated RDMA ops
+        for a local holder, exactly one rCAS for a remote holder.  A zombie
+        whose key was re-granted always loses the CAS: the register carries
+        the new (larger) fence token, and tokens are never reused (no ABA).
 
-        **Slow path** (stale lease object, or contention diagnosis): the
-        original fully-validated transaction under the shard ALock.
+        **EXCLUSIVE slow path** (stale lease object, or contention
+        diagnosis): the original fully-validated transaction under the shard
+        ALock.
+
+        **SHARED**: a read + CAS extending the cohort's expiry horizon — no
+        ALock in any case.  Refused while a writer-intent barrier is armed
+        (the drain protocol: the reader keeps its slot until its own expiry,
+        but cannot extend), after the holder's own ``expires_at`` (a crashed
+        reader cannot resurrect its slot late), or when the generation moved
+        on (token mismatch).
         """
         ttl = ttl if ttl is not None else lease.ttl
         shard = self.shards[lease.shard]
         st = self._key_state(shard, lease.key)
+        if lease.mode == LeaseMode.SHARED:
+            return self._shared_renew(p, shard, st, lease, ttl)
         snap = p.counts.as_tuple()
         try:
             now = self.clock()
             if now < lease.expires_at:
-                witness = (lease.token, lease.expires_at)
+                witness = (lease.token, 0, lease.expires_at)
                 observed = self.mem.auto_cas(
-                    p, st.expires, witness, (lease.token, now + ttl)
+                    p, st.expires, witness, (lease.token, 0, now + ttl)
                 )
                 if observed == witness:
                     with shard._meta:
                         shard.fast_renews += 1
                     return Lease(lease.key, lease.shard, lease.holder_pid,
-                                 lease.token, now + ttl, ttl)
+                                 lease.token, now + ttl, ttl,
+                                 LeaseMode.EXCLUSIVE)
             shard.alock.lock(p)
             renewed = None
-            write = None
             try:
                 now = self.clock()
-                holder, (etok, eexp), fence = self._read_key_state(p, shard, st)
+                holder, (etok, readers, eexp), fence, _barrier = \
+                    self._read_key_state(p, shard, st)
                 # A clobbered mirror (etok != fence) means the expiry can no
                 # longer be trusted: refuse the renewal (conservative — the
-                # holder must re-acquire) rather than extend blindly.
+                # holder must re-acquire) rather than extend blindly.  A
+                # reader count (readers > 0) under our own token means the
+                # key was released and re-opened as a reader generation
+                # reusing it: our exclusive lease is long gone.
                 if (
                     holder == lease.holder_pid
                     and fence == lease.token
                     and etok == fence
+                    and readers == 0
                     and _FREE_AT < eexp
                     and now < eexp
                 ):
-                    write = [("write", st.expires, (lease.token, now + ttl))]
-                    renewed = Lease(lease.key, lease.shard, lease.holder_pid,
-                                    lease.token, now + ttl, ttl)
+                    # CAS against the read value (the word is CAS-only).
+                    if self.mem.auto_cas(
+                        p, st.expires, (etok, readers, eexp),
+                        (lease.token, 0, now + ttl),
+                    ) == (etok, readers, eexp):
+                        renewed = Lease(lease.key, lease.shard,
+                                        lease.holder_pid, lease.token,
+                                        now + ttl, ttl, LeaseMode.EXCLUSIVE)
             finally:
-                shard.alock.unlock(p, piggyback=write)
+                shard.alock.unlock(p)
             return renewed
         finally:
-            self._account(shard, p, snap)
+            self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
+
+    def _shared_renew(self, p: Process, shard: LockShard, st: _KeyState,
+                      lease: Lease, ttl: float) -> Optional[Lease]:
+        if not self._slot_owned(p, lease.key, lease.token):
+            return None  # released/upgraded already: the slot is not ours
+        snap = p.counts.as_tuple()
+        renewed = None
+        intent_block = False
+        try:
+            for _ in range(_FAST_ATTEMPTS):
+                now = self.clock()
+                if now >= lease.expires_at:
+                    break  # the holder's own slot lapsed: no resurrection
+                packed, fence, barrier = self._shared_read(p, shard, st)
+                etok, readers, eexp = packed
+                if now < barrier:
+                    intent_block = True  # writer draining: stop extending
+                    break
+                if (etok != lease.token or etok != fence or readers <= 0
+                        or now >= eexp):
+                    break  # generation moved on, clobbered, or expired
+                new = (etok, readers, max(eexp, now + ttl))
+                if self.mem.auto_cas(p, st.expires, packed, new) == packed:
+                    renewed = Lease(lease.key, lease.shard, lease.holder_pid,
+                                    etok, now + ttl, ttl, LeaseMode.SHARED)
+                    break
+                self.mem.yield_point()  # lost to another shared CAS: retry
+        finally:
+            self._account(shard, p, snap, LeaseMode.SHARED)
+        if renewed is not None:
+            self._slot_extend(p, lease.key, lease.token, renewed.expires_at)
+        with shard._meta:
+            if renewed is not None:
+                shard.shared_renews += 1
+            elif intent_block:
+                shard.intent_blocks += 1
+        return renewed
 
     def release(self, p: Process, lease: Lease) -> bool:
         """Release iff the lease is still the current grant (token match).
 
-        **Fast path**: one fencing-token-checked CAS writes the expiry
-        register to ``(token, FREE)`` — no shard ALock, zero RDMA ops for a
-        local holder, one rCAS for a remote one.  The stale ``holder``
-        register left behind is harmless: grant decisions key off the packed
-        expiry + fence, and the next grant overwrites it.
+        **EXCLUSIVE fast path**: one fencing-token-checked CAS writes the
+        expiry register to ``(token, 0, FREE)`` — no shard ALock, zero RDMA
+        ops for a local holder, one rCAS for a remote one.  The stale
+        ``holder`` register left behind is harmless: grant decisions key off
+        the packed expiry + fence, and the next grant overwrites it.
 
-        **Slow path** (stale lease object whose token is still current): the
-        fully-validated transaction under the shard ALock.
+        **EXCLUSIVE slow path** (stale lease object whose token is still
+        current): the fully-validated transaction under the shard ALock.
+
+        **SHARED**: a read + CAS decrementing the cohort count (the last
+        reader out writes FREE) — no ALock in any case.  A lapsed shared
+        lease (past its own ``expires_at``) returns ``False``: its slot dies
+        with the generation, which closes the ABA window where a zombie
+        reader could decrement a *successor* generation that reused the
+        token.
         """
         shard = self.shards[lease.shard]
         st = self._key_state(shard, lease.key)
+        if lease.mode == LeaseMode.SHARED:
+            return self._shared_release(p, shard, st, lease)
         snap = p.counts.as_tuple()
         try:
-            witness = (lease.token, lease.expires_at)
+            witness = (lease.token, 0, lease.expires_at)
             observed = self.mem.auto_cas(
-                p, st.expires, witness, (lease.token, _FREE_AT)
+                p, st.expires, witness, (lease.token, 0, _FREE_AT)
             )
             if observed == witness:
                 with shard._meta:
@@ -434,26 +870,177 @@ class ShardedLockTable:
             released = False
             writes = None
             try:
-                holder, (etok, eexp), fence = self._read_key_state(p, shard, st)
-                # Stale (expired and re-granted: the fence moved on) or
-                # already released (mirror intact at FREE) ⇒ nothing to do.
+                holder, (etok, readers, eexp), fence, _barrier = \
+                    self._read_key_state(p, shard, st)
+                # Stale (expired and re-granted: the fence moved on), already
+                # released (mirror intact at FREE), or superseded by a reader
+                # generation reusing our token (readers > 0) ⇒ nothing to do.
                 # Releasing the current generation is legal even with a
                 # clobbered mirror: the write below re-syncs it.
                 if (
                     holder == lease.holder_pid
                     and fence == lease.token
+                    and readers == 0
                     and not (etok == fence and eexp <= _FREE_AT)
                 ):
-                    writes = [
-                        ("write", st.holder, _NO_HOLDER),
-                        ("write", st.expires, (lease.token, _FREE_AT)),
-                    ]
-                    released = True
+                    # CAS against the read value (the word is CAS-only).
+                    if self.mem.auto_cas(
+                        p, st.expires, (etok, readers, eexp),
+                        (lease.token, 0, _FREE_AT),
+                    ) == (etok, readers, eexp):
+                        writes = [("write", st.holder, _NO_HOLDER)]
+                        released = True
             finally:
                 shard.alock.unlock(p, piggyback=writes)
             return released
         finally:
-            self._account(shard, p, snap)
+            self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
+
+    def _shared_release(self, p: Process, shard: LockShard, st: _KeyState,
+                        lease: Lease) -> bool:
+        if not self._slot_owned(p, lease.key, lease.token):
+            # Double release, or the slot was consumed by an upgrade: the
+            # word's count is anonymous, so posting a decrement we do not
+            # own would free ANOTHER live reader's slot and let a writer in
+            # beside them.  Refuse without touching the word.
+            return False
+        snap = p.counts.as_tuple()
+        released = False
+        try:
+            for _ in range(_FAST_ATTEMPTS):
+                now = self.clock()
+                if now >= lease.expires_at:
+                    break  # lapsed: the slot dies with the generation (ABA)
+                if p.node == shard.home_host:
+                    packed = self.mem.read(p, st.expires)
+                else:
+                    packed = self.mem.rread(p, st.expires)
+                etok, readers, eexp = packed
+                if etok != lease.token or readers <= 0:
+                    break  # the generation moved on: nothing to release
+                new = (etok, readers - 1,
+                       eexp if readers > 1 else _FREE_AT)
+                if self.mem.auto_cas(p, st.expires, packed, new) == packed:
+                    released = True
+                    break
+                self.mem.yield_point()  # lost to another shared CAS: retry
+        finally:
+            self._account(shard, p, snap, LeaseMode.SHARED)
+        if released:
+            self._slot_consume(p, lease.key, lease.token)
+            with shard._meta:
+                shard.shared_releases += 1
+        return released
+
+    # ------------------------------------------------------ mode transitions
+    def upgrade(self, p: Process, lease: Lease,
+                ttl: Optional[float] = None) -> Optional[Lease]:
+        """SHARED → EXCLUSIVE, iff the caller is the *sole* live reader.
+
+        Runs under the shard ALock (it allocates a token).  With other
+        readers present it arms the writer-intent drain barrier (no new
+        joins, no renewal extensions) and returns ``None`` — poll until the
+        cohort drains.  Two holders upgrading the same key concurrently
+        cannot both succeed; bound the polling with a timeout and release on
+        failure (the classic S/X upgrade deadlock is the caller's to break).
+        The upgraded lease's token is strictly larger than the reader
+        generation's, so fencing monotonicity is preserved.
+        """
+        if lease.mode != LeaseMode.SHARED:
+            raise ValueError("upgrade() takes a SHARED lease")
+        if not self._slot_owned(p, lease.key, lease.token):
+            return None  # released/consumed already: not our slot to trade
+        ttl = ttl if ttl is not None else lease.ttl
+        shard = self.shards[lease.shard]
+        st = self._key_state(shard, lease.key)
+        snap = p.counts.as_tuple()
+        upgraded = None
+        try:
+            now = self.clock()
+            if now >= lease.expires_at:
+                return None
+            shard.alock.lock(p)
+            writes: List[tuple] = []
+            try:
+                now = self.clock()
+                _holder, (etok, readers, eexp), fence, _barrier = \
+                    self._read_key_state(p, shard, st)
+                if (etok == fence == lease.token and readers >= 1
+                        and _FREE_AT < eexp and now < eexp
+                        and now < lease.expires_at):
+                    if readers == 1:  # the sole live reader is us
+                        token = fence + 1
+                        # CAS, not write: a CS-free join can slip in between
+                        # the read and this commit — it must not be stomped
+                        # into a phantom reader under our exclusive grant.
+                        if self.mem.auto_cas(
+                            p, st.expires, (etok, readers, eexp),
+                            (token, 0, now + ttl),
+                        ) == (etok, readers, eexp):
+                            writes = [
+                                ("write", st.fence, token),
+                                ("write", st.holder, p.pid),
+                                ("write", st.intent, _FREE_AT),
+                            ]
+                            upgraded = Lease(lease.key, lease.shard, p.pid,
+                                             token, now + ttl, ttl,
+                                             LeaseMode.EXCLUSIVE)
+                        else:  # a joiner beat us: drain them first
+                            writes = [("write", st.intent, eexp)]
+                    else:  # drain the rest of the cohort first
+                        writes = [("write", st.intent, eexp)]
+            finally:
+                shard.alock.unlock(p, piggyback=writes or None)
+        finally:
+            self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
+        if upgraded is not None:
+            self._slot_consume(p, lease.key, lease.token)
+        with shard._meta:
+            if upgraded is not None:
+                shard.upgrades += 1
+                shard.grants += 1
+                shard.grants_by_mode[LeaseMode.EXCLUSIVE] += 1
+            else:
+                shard.rejects += 1
+                shard.rejects_by_mode[LeaseMode.EXCLUSIVE] += 1
+        return upgraded
+
+    def downgrade(self, p: Process, lease: Lease,
+                  ttl: Optional[float] = None) -> Optional[Lease]:
+        """EXCLUSIVE → SHARED without a window for another writer.
+
+        A single fencing-token-checked CAS turns the writer lease into a
+        one-reader cohort that keeps the writer's token (the generation the
+        readers share) — zero RDMA ops for a local holder, exactly one rCAS
+        for a remote one.  Other readers can join the instant the CAS lands.
+        ``None`` if the lease was stale (the witness lost).
+        """
+        if lease.mode != LeaseMode.EXCLUSIVE:
+            raise ValueError("downgrade() takes an EXCLUSIVE lease")
+        ttl = ttl if ttl is not None else lease.ttl
+        shard = self.shards[lease.shard]
+        st = self._key_state(shard, lease.key)
+        snap = p.counts.as_tuple()
+        downgraded = None
+        try:
+            now = self.clock()
+            if now < lease.expires_at:
+                witness = (lease.token, 0, lease.expires_at)
+                observed = self.mem.auto_cas(
+                    p, st.expires, witness, (lease.token, 1, now + ttl)
+                )
+                if observed == witness:
+                    downgraded = Lease(lease.key, lease.shard, p.pid,
+                                       lease.token, now + ttl, ttl,
+                                       LeaseMode.SHARED)
+        finally:
+            self._account(shard, p, snap, LeaseMode.SHARED)
+        if downgraded is not None:
+            self._slot_join(p, lease.key, downgraded.token,
+                            downgraded.expires_at)
+            with shard._meta:
+                shard.downgrades += 1
+        return downgraded
 
     # --------------------------------------------------------------- batches
     def batch_order(self, keys: Iterable[str]) -> List[str]:
@@ -462,16 +1049,19 @@ class ShardedLockTable:
 
     def acquire_batch(self, p: Process, keys: Sequence[str], ttl: float,
                       timeout: Optional[float] = None,
-                      poll: float = 0.0005) -> List[Lease]:
+                      poll: float = 0.0005,
+                      mode: LeaseMode = LeaseMode.EXCLUSIVE) -> List[Lease]:
         """Acquire every key (deduplicated) in the global key order.
 
         Keys are grouped by shard (the global order is primary-by-shard, so
-        groups are contiguous) and each shard's ALock is taken **once** for
-        all of its keys — O(distinct shards) critical sections instead of
-        O(keys), with the group's register reads and writes each coalesced
-        into one doorbell for remote clients.  Deadlock freedom is preserved:
-        grants still happen in the global order, and a blocked key is waited
-        on *outside* the critical section while holding only smaller keys.
+        groups are contiguous); EXCLUSIVE groups take each shard's ALock
+        **once** for all of that shard's keys — O(distinct shards) critical
+        sections instead of O(keys), with the group's register reads and
+        writes each coalesced into one doorbell for remote clients — while
+        SHARED groups join each key's cohort CS-free.  Deadlock freedom is
+        preserved: grants still happen in the global order, and a blocked
+        key is waited on *outside* the critical section while holding only
+        smaller keys.
 
         All-or-nothing: ``timeout`` bounds the *whole batch*; on expiry,
         already-granted leases are released and ``TimeoutError`` is raised.
@@ -492,7 +1082,7 @@ class ShardedLockTable:
                 start = 0
                 while start < len(group):
                     granted, blocked = self._acquire_group(
-                        p, shard, group[start:], ttl
+                        p, shard, group[start:], ttl, mode
                     )
                     held.extend(granted)
                     start += len(granted)
@@ -511,12 +1101,206 @@ class ShardedLockTable:
         return held
 
     def release_batch(self, p: Process, leases: Sequence[Lease]) -> int:
-        """Release a batch (any order); returns how many were still current."""
-        return sum(1 for lease in leases if self.release(p, lease))
+        """Release a batch (any order); returns how many were still current.
+
+        Mirrors ``acquire_batch``'s shard grouping: leases are grouped by
+        shard, each group's EXCLUSIVE fast-path CASes are coalesced into
+        **one doorbell** for remote clients (one posting for the whole
+        group instead of one per lease), SHARED releases batch their cohort
+        reads and decrement CASes the same way, and whatever falls off the
+        fast path is settled under **one** shard ALock critical section per
+        group — the exact structure the old per-key loop paid for K times.
+        """
+        by_shard: Dict[int, List[Lease]] = {}
+        for lease in leases:
+            by_shard.setdefault(lease.shard, []).append(lease)
+        released = 0
+        for sidx in sorted(by_shard):
+            group = by_shard[sidx]
+            shard = self.shards[sidx]
+            released += self._release_group(p, shard, group)
+        return released
+
+    def _release_group(self, p: Process, shard: LockShard,
+                       group: Sequence[Lease]) -> int:
+        local = p.node == shard.home_host
+        released = 0
+        # --- EXCLUSIVE leases: witness CASes, one doorbell for the group.
+        excl = [l for l in group if l.mode == LeaseMode.EXCLUSIVE]
+        slow: List[Lease] = []
+        if excl:
+            snap = p.counts.as_tuple()
+            nfast = 0
+            try:
+                sts = [self._key_state(shard, l.key) for l in excl]
+                if local:
+                    observed = [
+                        self.mem.cas(p, st.expires,
+                                     (l.token, 0, l.expires_at),
+                                     (l.token, 0, _FREE_AT))
+                        for st, l in zip(sts, excl)
+                    ]
+                else:
+                    observed = self.mem.post_batch(p, [
+                        ("cas", st.expires, (l.token, 0, l.expires_at),
+                         (l.token, 0, _FREE_AT))
+                        for st, l in zip(sts, excl)
+                    ])
+                for lease, obs in zip(excl, observed):
+                    if obs == (lease.token, 0, lease.expires_at):
+                        nfast += 1
+                    else:
+                        slow.append(lease)
+            finally:
+                self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
+            with shard._meta:
+                shard.fast_releases += nfast
+            released += nfast
+            if slow:
+                released += self._release_group_slow(p, shard, slow)
+        # --- SHARED leases: cohort reads + decrement CASes, batched.
+        shrd = [l for l in group if l.mode == LeaseMode.SHARED]
+        if shrd:
+            released += self._release_group_shared(p, shard, shrd)
+        return released
+
+    def _release_group_slow(self, p: Process, shard: LockShard,
+                            group: Sequence[Lease]) -> int:
+        """Slow-path releases for one shard, in ONE critical section."""
+        states = [self._key_state(shard, l.key) for l in group]
+        snap = p.counts.as_tuple()
+        local = p.node == shard.home_host
+        released = 0
+        writes: List[tuple] = []
+        try:
+            if local:
+                shard.alock.lock(p)
+                flat = None
+            else:
+                flat = shard.alock.lock(p, piggyback_reads=[
+                    r for st in states
+                    for r in (st.holder, st.expires, st.fence)
+                ])
+            try:
+                if flat is None:
+                    if local:
+                        vals = [(self.mem.read(p, st.holder),
+                                 self.mem.read(p, st.expires),
+                                 self.mem.read(p, st.fence))
+                                for st in states]
+                    else:
+                        out = self.mem.post_batch(p, [
+                            wr for st in states
+                            for wr in (("read", st.holder),
+                                       ("read", st.expires),
+                                       ("read", st.fence))
+                        ])
+                        vals = [tuple(out[3 * i:3 * i + 3])
+                                for i in range(len(states))]
+                else:
+                    vals = [tuple(flat[3 * i:3 * i + 3])
+                            for i in range(len(states))]
+                plan = []  # (st, packed-as-read, release tuple)
+                for lease, st, (holder, (etok, readers, eexp), fence) in zip(
+                        group, states, vals):
+                    if (
+                        holder == lease.holder_pid
+                        and fence == lease.token
+                        and readers == 0
+                        and not (etok == fence and eexp <= _FREE_AT)
+                    ):
+                        plan.append((st, (etok, readers, eexp),
+                                     (lease.token, 0, _FREE_AT)))
+                # Commit by CAS (the word is CAS-only — a CS-free join can
+                # land between read and commit); one doorbell for the group.
+                if plan:
+                    if local:
+                        won = [self.mem.cas(p, st.expires, packed, new)
+                               == packed for st, packed, new in plan]
+                    else:
+                        obs = self.mem.post_batch(p, [
+                            ("cas", st.expires, packed, new)
+                            for st, packed, new in plan
+                        ])
+                        won = [o == packed
+                               for o, (_s, packed, _n) in zip(obs, plan)]
+                    for (st, _packed, _new), ok in zip(plan, won):
+                        if ok:
+                            writes.append(("write", st.holder, _NO_HOLDER))
+                            released += 1
+            finally:
+                shard.alock.unlock(p, piggyback=writes or None)
+        finally:
+            self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
+        return released
+
+    def _release_group_shared(self, p: Process, shard: LockShard,
+                              group: Sequence[Lease]) -> int:
+        """Batched shared releases: one read doorbell + one CAS doorbell for
+        the group's first round; CAS losers retry individually (rare — only
+        same-key leases in one batch, or an outside racer)."""
+        local = p.node == shard.home_host
+        released = 0
+        if local:
+            for lease in group:
+                st = self._key_state(shard, lease.key)
+                if self._shared_release(p, shard, st, lease):
+                    released += 1
+            return released
+        snap = p.counts.as_tuple()
+        retry: List[Lease] = []
+        done: List[Lease] = []
+        try:
+            now = self.clock()
+            # The slot-ledger filter applies batch-wide: a decrement the
+            # caller does not own (double release, consumed by an upgrade,
+            # or a duplicate of an earlier batch entry) is never posted.
+            owned: List[Lease] = []
+            counted: Dict[Tuple[str, int], int] = {}
+            for lease in group:
+                if now >= lease.expires_at:
+                    continue
+                k = (lease.key, lease.token)
+                counted[k] = counted.get(k, 0) + 1
+                if counted[k] <= self._slot_count(p, lease.key, lease.token):
+                    owned.append(lease)
+            pending = [(l, self._key_state(shard, l.key)) for l in owned]
+            if pending:
+                packeds = self.mem.post_batch(
+                    p, [("read", st.expires) for _, st in pending])
+                wrs, metas = [], []
+                for (lease, st), packed in zip(pending, packeds):
+                    etok, readers, eexp = packed
+                    if etok != lease.token or readers <= 0:
+                        continue  # generation moved on: nothing to release
+                    new = (etok, readers - 1,
+                           eexp if readers > 1 else _FREE_AT)
+                    wrs.append(("cas", st.expires, packed, new))
+                    metas.append((lease, packed))
+                outs = self.mem.post_batch(p, wrs) if wrs else []
+                for (lease, packed), obs in zip(metas, outs):
+                    if obs == packed:
+                        done.append(lease)
+                    else:
+                        retry.append(lease)
+        finally:
+            self._account(shard, p, snap, LeaseMode.SHARED)
+        if done:
+            for lease in done:
+                self._slot_consume(p, lease.key, lease.token)
+            with shard._meta:
+                shard.shared_releases += len(done)
+            released += len(done)
+        for lease in retry:
+            st = self._key_state(shard, lease.key)
+            if self._shared_release(p, shard, st, lease):
+                released += 1
+        return released
 
     # ------------------------------------------------------------- telemetry
     def telemetry(self) -> List[Dict]:
-        """Per-shard snapshot: placement, grant counters, per-class OpCounts."""
+        """Per-shard snapshot: placement, grant counters, per-class OpCounts
+        (total and per mode)."""
         out = []
         for shard in self.shards:
             with shard._meta:
@@ -526,12 +1310,34 @@ class ShardedLockTable:
                     "keys": len(shard.keys),
                     "grants": shard.grants,
                     "rejects": shard.rejects,
+                    "grants_shared": shard.grants_by_mode[LeaseMode.SHARED],
+                    "grants_exclusive":
+                        shard.grants_by_mode[LeaseMode.EXCLUSIVE],
+                    "rejects_shared": shard.rejects_by_mode[LeaseMode.SHARED],
+                    "rejects_exclusive":
+                        shard.rejects_by_mode[LeaseMode.EXCLUSIVE],
                     "expirations": shard.expirations,
                     "fast_renews": shard.fast_renews,
                     "fast_releases": shard.fast_releases,
+                    "shared_joins": shard.shared_joins,
+                    "shared_renews": shard.shared_renews,
+                    "shared_releases": shard.shared_releases,
+                    "shared_remote_grants": shard.shared_remote_grants,
+                    "shared_acquire_rcas": shard.shared_acquire_rcas,
+                    "upgrades": shard.upgrades,
+                    "downgrades": shard.downgrades,
+                    "intent_blocks": shard.intent_blocks,
                     "repairs": shard.repairs,
                     "local": shard.stats[LOCAL].snapshot(),
                     "remote": shard.stats[REMOTE].snapshot(),
+                    "shared_local":
+                        shard.mode_stats[(LeaseMode.SHARED, LOCAL)].snapshot(),
+                    "shared_remote":
+                        shard.mode_stats[(LeaseMode.SHARED, REMOTE)].snapshot(),
+                    "exclusive_local":
+                        shard.mode_stats[(LeaseMode.EXCLUSIVE, LOCAL)].snapshot(),
+                    "exclusive_remote":
+                        shard.mode_stats[(LeaseMode.EXCLUSIVE, REMOTE)].snapshot(),
                 })
         return out
 
@@ -542,4 +1348,16 @@ class ShardedLockTable:
             with shard._meta:
                 for cls in (LOCAL, REMOTE):
                     totals[cls] = totals[cls] + shard.stats[cls]
+        return totals
+
+    def mode_class_totals(self) -> Dict[LeaseMode, Dict[int, OpCounts]]:
+        """Aggregate per-(mode, class) OpCounts across all shards."""
+        totals = {m: {LOCAL: OpCounts(), REMOTE: OpCounts()}
+                  for m in LeaseMode}
+        for shard in self.shards:
+            with shard._meta:
+                for m in LeaseMode:
+                    for cls in (LOCAL, REMOTE):
+                        totals[m][cls] = (totals[m][cls]
+                                          + shard.mode_stats[(m, cls)])
         return totals

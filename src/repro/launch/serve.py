@@ -29,7 +29,7 @@ import numpy as np
 
 from ..compat import set_mesh
 from ..configs import ShapeConfig, get_config
-from ..coord import CoordinationService
+from ..coord import CoordinationService, LeaseMode
 from ..data import SyntheticLMDataset
 from ..models import Model, input_specs
 from .mesh import make_mesh
@@ -45,16 +45,33 @@ class BatchAdmission:
     and its slot re-opens at expiry, so capacity can never leak away.  The
     lease's fencing token travels with the batch for downstream accounting
     (e.g. a KV-cache pool can reject a zombie batch's writes).
+
+    **Read slots vs write slots** (the mode-aware split): mutating batches
+    (decode/prefill that write KV state) take EXCLUSIVE leases on the write
+    slots as before, while read-only work — health probes, stats scrapes,
+    cache-warm scans — shares ``read_slots`` *read lanes* through SHARED
+    leases (:meth:`admit_read`): any number of readers join a lane with a
+    single CAS and zero simulated RDMA ops on the serving host, so read
+    traffic never queues behind (or consumes) batch capacity.  A maintenance
+    operation that must quiesce a lane's readers takes an EXCLUSIVE lease on
+    it (:meth:`quiesce`): the table's writer-intent barrier stops new joins,
+    the cohort drains within one TTL, and readers resume the moment the
+    maintenance lease is released.
     """
 
     def __init__(self, num_slots: int = 4, ttl: float = 30.0,
-                 svc: Optional[CoordinationService] = None):
+                 svc: Optional[CoordinationService] = None,
+                 read_slots: int = 0):
         if num_slots <= 0:
             raise ValueError("num_slots must be > 0")
+        if read_slots < 0:
+            raise ValueError("read_slots must be >= 0")
         # Single-host table by default: the serving host is the local class
         # for every shard, so admissions cost zero simulated RDMA ops.
-        self.svc = svc or CoordinationService(num_hosts=1, num_shards=num_slots)
+        self.svc = svc or CoordinationService(
+            num_hosts=1, num_shards=num_slots + read_slots)
         self.num_slots = num_slots
+        self.read_slots = read_slots
         self.ttl = ttl
         self._tls = threading.local()
 
@@ -68,7 +85,8 @@ class BatchAdmission:
         return p
 
     def admit(self, timeout: Optional[float] = None):
-        """Take a lease on any free slot (round-robin scan, then block).
+        """Take an EXCLUSIVE lease on any free write slot (round-robin scan,
+        then block).
 
         The deadline and backoff run on the coordination service's injected
         clock/sleep pair, so an admission gate over a sim-backed (or
@@ -86,6 +104,54 @@ class BatchAdmission:
             if deadline is not None and clock() > deadline:
                 raise TimeoutError(f"no admission slot free in {timeout}s")
             sleep(0.002)  # back off: a full scan found no free slot
+
+    def admit_read(self, timeout: Optional[float] = None):
+        """Join a read lane with a SHARED lease (a single CAS; readers
+        stack, so this only ever blocks while a quiesce drains the lanes).
+
+        Requires ``read_slots > 0``.  The lane is chosen round-robin so
+        concurrent readers spread their cohort CASes across lanes.
+        Complete (and keepalive) a shared admission **on the thread that
+        admitted it**: each server thread is its own coordination process,
+        and the table's cohort-slot ledger is per process.  (Exclusive
+        admissions are witness CASes and may be completed from any thread.)
+        """
+        if self.read_slots <= 0:
+            raise ValueError("admit_read() needs read_slots > 0")
+        clock, sleep = self.svc.table.clock, self.svc.table.sleep
+        deadline = None if timeout is None else clock() + timeout
+        p = self._proc()
+        while True:
+            for s in range(self.read_slots):
+                lane = (p.pid + s) % self.read_slots
+                lease = self.svc.try_acquire(
+                    p, f"serve/readlane{lane}", self.ttl,
+                    mode=LeaseMode.SHARED)
+                if lease is not None:
+                    return lease
+            if deadline is not None and clock() > deadline:
+                raise TimeoutError(f"no read lane joinable in {timeout}s")
+            sleep(0.002)  # every lane is quiescing: wait out the drain
+
+    def quiesce(self, lane: int = 0, timeout: Optional[float] = None):
+        """Take an EXCLUSIVE lease on a read lane — the maintenance path.
+
+        Arms the table's writer-intent barrier on the lane: no new readers
+        join, the live cohort drains within one TTL, and the returned lease
+        excludes every reader until it is released (``complete``).
+        """
+        if not (0 <= lane < self.read_slots):
+            raise ValueError(f"lane {lane} out of range")
+        clock, sleep = self.svc.table.clock, self.svc.table.sleep
+        deadline = None if timeout is None else clock() + timeout
+        while True:
+            lease = self.svc.try_acquire(self._proc(), f"serve/readlane{lane}",
+                                         self.ttl)
+            if lease is not None:
+                return lease
+            if deadline is not None and clock() > deadline:
+                raise TimeoutError(f"read lane {lane} not drained in {timeout}s")
+            sleep(0.002)  # the drain barrier is armed; readers are leaving
 
     def keepalive(self, lease):
         """Renew mid-batch (call between prefill and decode, or per chunk).
@@ -112,8 +178,14 @@ class BatchAdmission:
         rows = self.svc.telemetry()
         return {
             "slots": self.num_slots,
+            "read_slots": self.read_slots,
             "grants": sum(r["grants"] for r in rows),
             "rejects": sum(r["rejects"] for r in rows),
+            "grants_shared": sum(r["grants_shared"] for r in rows),
+            "grants_exclusive": sum(r["grants_exclusive"] for r in rows),
+            "shared_joins": sum(r["shared_joins"] for r in rows),
+            "shared_releases": sum(r["shared_releases"] for r in rows),
+            "intent_blocks": sum(r["intent_blocks"] for r in rows),
             "expirations": sum(r["expirations"] for r in rows),
             "fast_renews": sum(r["fast_renews"] for r in rows),
             "fast_releases": sum(r["fast_releases"] for r in rows),

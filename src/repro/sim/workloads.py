@@ -5,8 +5,9 @@ Each client is a generator task on a :class:`~repro.sim.SimEngine`, driving a
 :class:`~repro.sim.SimFabricMemory`.  Everything — key choice, backoff,
 think time, the fabric's latency charges, the scheduler's tie-breaks — is
 derived from the run's seed, so a config produces **byte-identical** results
-every time: exact per-class RDMA/doorbell counts, exact grant/reject/expiry
-tallies, and a virtual-time throughput with zero run-to-run dispersion.
+every time: exact per-class (and per-mode) RDMA/doorbell counts, exact
+grant/reject/expiry tallies, and a virtual-time throughput with zero
+run-to-run dispersion.
 
 Clients use the table's **non-blocking** operations (``try_acquire`` /
 ``renew`` / ``release``) and express waiting as generator yields, which is
@@ -29,6 +30,18 @@ Workloads (mirroring, then extending, the threaded bench):
   hundreds of contenders storm the freed keys, and the woken zombies try to
   renew with stale leases.  The run asserts every zombie renewal is fenced
   off and grant tokens never regress.
+* ``read_heavy`` — the mode-aware workload: a ``1 - write_frac`` fraction of
+  transactions take SHARED leases (reader cohorts on the packed S/X word),
+  the rest take EXCLUSIVE.  ``home_frac`` of each client's draws come from
+  its own host's keys (zipfian within them — home readers are the paper's
+  zero-RDMA class), the rest from a global zipfian (remote shared traffic,
+  priced at one rCAS per join).  ``shared_reads=False`` degrades every
+  reader to EXCLUSIVE — the before/after baseline for the read:write sweep.
+* ``reader_flood`` — the writer-progress scenario: every client but one
+  hammers ONE key with shared leases; the lone writer periodically needs an
+  exclusive grant.  The run records each writer wait in virtual time and
+  asserts the drain protocol bounds it (a saturating reader flood cannot
+  starve a queued writer past ~a TTL).
 """
 
 from __future__ import annotations
@@ -40,7 +53,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 from repro.coord import ShardedLockTable
-from repro.coord.table import LOCAL, REMOTE
+from repro.coord.table import EXCLUSIVE, LOCAL, REMOTE, SHARED, LeaseMode
 
 from .engine import SimEngine
 from .fabric import FabricLatency, SimFabricMemory
@@ -48,7 +61,8 @@ from .fabric import FabricLatency, SimFabricMemory
 __all__ = ["SIM_WORKLOADS", "KEYS_PER_HOST", "SimResult", "jain",
            "keys_by_home", "run_lock_table_sim"]
 
-SIM_WORKLOADS = ("home", "uniform", "zipfian", "failover")
+SIM_WORKLOADS = ("home", "uniform", "zipfian", "failover", "read_heavy",
+                 "reader_flood")
 
 KEYS_PER_HOST = 8   # keyspace density; shared with the threaded bench
 HOLD = 10e-6        # virtual seconds a lease is held
@@ -67,10 +81,18 @@ def jain(xs: List[int]) -> float:
 
 
 class _RunState:
-    """Shared counters + safety invariants (steps are atomic: no locking)."""
+    """Shared counters + safety invariants (steps are atomic: no locking).
+
+    Token monotonicity is checked **per mode**: an EXCLUSIVE grant must
+    carry a token strictly larger than every token seen for the key (the
+    CS allocator never reuses one), while a SHARED grant carries its reader
+    generation's token — the last CS-allocated one — so equality with the
+    running maximum is legal but a *smaller* token is a regression.
+    """
 
     __slots__ = ("per_client", "total", "target", "last_token",
-                 "token_regressions", "zombie_renews")
+                 "token_regressions", "zombie_renews",
+                 "grants_by_mode", "writer_waits")
 
     def __init__(self, nclients: int, target: int):
         self.per_client = [0] * nclients
@@ -79,6 +101,8 @@ class _RunState:
         self.last_token: Dict[str, int] = {}
         self.token_regressions = 0
         self.zombie_renews = 0
+        self.grants_by_mode = {SHARED: 0, EXCLUSIVE: 0}
+        self.writer_waits: List[float] = []
 
     def done(self) -> bool:
         return self.total >= self.target
@@ -86,8 +110,10 @@ class _RunState:
     def granted(self, idx: int, lease) -> None:
         self.per_client[idx] += 1
         self.total += 1
+        self.grants_by_mode[lease.mode] += 1
         prev = self.last_token.get(lease.key, 0)
-        if lease.token <= prev:
+        if lease.token < prev or (lease.mode == EXCLUSIVE
+                                  and lease.token == prev):
             self.token_regressions += 1
         else:
             self.last_token[lease.key] = lease.token
@@ -162,6 +188,68 @@ def _acquire_release_client(table, p, rng, pick, st, idx, ttl):
         yield THINK
 
 
+def _mode_mix_client(table, p, rng, pick, st, idx, ttl, write_frac,
+                     shared_reads, hold):
+    """The read_heavy client: a seeded S/X mix over the picked keys.
+
+    ``hold`` is the lease-hold time — the work done under the lease (a scan
+    for readers, a mutation for writers).  It is the quantity S/X sharing
+    monetises: exclusive-only serialises every hot key's holds end-to-end,
+    shared mode overlaps the read holds.
+    """
+    backoff = BACKOFF
+    while not st.done():
+        is_write = rng.random() < write_frac
+        mode = EXCLUSIVE if (is_write or not shared_reads) else SHARED
+        lease = table.try_acquire(p, pick(rng), ttl, mode=mode)
+        if lease is None:
+            yield backoff * (0.5 + rng.random())
+            backoff = min(backoff * 2, BACKOFF_CAP)
+            continue
+        backoff = BACKOFF
+        st.granted(idx, lease)
+        yield hold
+        table.release(p, lease)
+        yield THINK
+
+
+def _flood_reader(table, p, rng, st, idx, key, ttl):
+    """A reader hammering one key with shared joins, as fast as it can."""
+    while not st.done():
+        lease = table.try_acquire(p, key, ttl, mode=SHARED)
+        if lease is None:
+            yield BACKOFF * (0.5 + rng.random())
+            continue
+        st.granted(idx, lease)
+        yield HOLD
+        table.release(p, lease)
+        yield THINK
+
+
+def _flood_writer(table, p, rng, st, idx, key, ttl):
+    """The queued writer: periodically needs EXCLUSIVE through the flood.
+
+    Each wait is recorded in virtual time; the drain barrier (armed by the
+    writer's first blocked critical section) must bound it near one TTL no
+    matter how saturating the reader flood is.
+    """
+    clock = table.clock
+    while not st.done():
+        yield 20 * HOLD  # between writes the readers own the key
+        t0 = clock()
+        while True:
+            lease = table.try_acquire(p, key, ttl, mode=EXCLUSIVE)
+            if lease is not None:
+                break
+            if st.done():
+                return
+            yield (ttl / 8) * (0.5 + rng.random())
+        st.writer_waits.append(clock() - t0)
+        st.granted(idx, lease)
+        yield HOLD
+        table.release(p, lease)
+
+
 def _failover_client(table, p, rng, pick, st, idx, ttl, crash_prob):
     hold = min(HOLD, ttl / 8)
     backoff = ttl / 4
@@ -196,7 +284,8 @@ def _failover_client(table, p, rng, pick, st, idx, ttl, crash_prob):
 class SimResult:
     """One deterministic sim run.  ``row()`` is the byte-stable record: it
     excludes wall-clock fields (and the live table), so two same-seed runs
-    compare equal — the CI determinism gate diffs exactly these rows."""
+    compare equal — the CI determinism gate diffs exactly these rows,
+    including every per-mode counter and per-mode per-class cost."""
 
     workload: str
     num_hosts: int
@@ -210,13 +299,29 @@ class SimResult:
     jain: float
     grants: int
     rejects: int
+    grants_shared: int
+    grants_exclusive: int
+    rejects_shared: int
+    rejects_exclusive: int
     expirations: int
     fast_renews: int
     fast_releases: int
+    shared_joins: int
+    shared_renews: int
+    shared_releases: int
+    shared_remote_grants: int
+    shared_acquire_rcas: int
+    upgrades: int
+    downgrades: int
+    intent_blocks: int
     repairs: int
     zombie_renews: int
     token_regressions: int
+    writer_grants: int
+    writer_max_wait: float
+    writer_mean_wait: float
     cost: Dict[str, Dict[str, int]]
+    mode_cost: Dict[str, Dict[str, int]]
     events: int
     spins: int
     wall_seconds: float
@@ -240,14 +345,21 @@ def run_lock_table_sim(
     zipf_s: float = 0.99,
     keys_per_host: int = KEYS_PER_HOST,
     crash_prob: float = 0.1,
+    write_frac: float = 0.05,
+    home_frac: float = 0.8,
+    shared_reads: bool = True,
+    hold: float = HOLD,
     max_events: Optional[int] = None,
 ) -> SimResult:
     """Run one workload to ``total_ops`` granted leases; fully deterministic.
 
-    Returns exact per-class operation counts (``cost``) plus virtual-time
-    throughput and fairness.  Raises if any safety invariant breaks: the
-    LOCAL class must never issue an RDMA op, grant tokens must be strictly
-    monotonic per key, and no zombie renewal may survive fencing.
+    Returns exact per-class and per-mode operation counts (``cost`` /
+    ``mode_cost``) plus virtual-time throughput and fairness.  Raises if any
+    safety invariant breaks: the LOCAL class must never issue an RDMA op,
+    writer grant tokens must be strictly monotonic per key (reader
+    generations may only equal the running maximum, never regress), no
+    zombie renewal may survive fencing, and in ``reader_flood`` the queued
+    writer's grant latency must stay bounded by the drain protocol.
     """
     if workload not in SIM_WORKLOADS:
         raise ValueError(f"unknown sim workload {workload!r}")
@@ -259,7 +371,7 @@ def run_lock_table_sim(
         clock=engine.clock, sleep=engine.sleep_inline, name=f"sim{seed}",
     )
     if ttl is None:
-        ttl = 300e-6 if workload == "failover" else 1.0
+        ttl = 300e-6 if workload in ("failover", "reader_flood") else 1.0
 
     universe = [f"k/{i}" for i in range(num_hosts * keys_per_host)]
     if workload == "home":
@@ -270,22 +382,49 @@ def run_lock_table_sim(
     elif workload == "zipfian":
         zipf = _zipf_picker(universe, zipf_s)
         pick_for = lambda h: zipf  # noqa: E731
+    elif workload == "read_heavy":
+        # home_frac of each client's draws are zipfian over its OWN host's
+        # keys (the zero-RDMA class), the rest zipfian over the universe
+        # (remote shared traffic — the one-rCAS joins the sweep prices).
+        per_host = keys_by_home(table, num_hosts, keys_per_host)
+        home_zipf = {h: _zipf_picker(ks, zipf_s)
+                     for h, ks in per_host.items()}
+        global_zipf = _zipf_picker(universe, zipf_s)
+
+        def pick_for(h):  # noqa: E306
+            hz = home_zipf[h]
+
+            def pick(rng: random.Random) -> str:
+                return hz(rng) if rng.random() < home_frac else global_zipf(rng)
+
+            return pick
+    elif workload == "reader_flood":
+        pick_for = None  # flood clients share one literal key
     else:  # failover: everyone storms a small hot set
         hot = universe[: max(4, num_hosts)]
         pick_for = lambda h: lambda rng: rng.choice(hot)  # noqa: E731
 
     nclients = num_hosts * clients_per_host
     st = _RunState(nclients, total_ops)
+    flood_key = universe[0]
     for idx in range(nclients):
         host = idx // clients_per_host
         p = mem.spawn(host)
         rng = random.Random(1_000_003 * seed + idx)
-        pick = pick_for(host)
         if workload == "failover":
-            task = _failover_client(table, p, rng, pick, st, idx, ttl,
-                                    crash_prob)
+            task = _failover_client(table, p, rng, pick_for(host), st, idx,
+                                    ttl, crash_prob)
+        elif workload == "read_heavy":
+            task = _mode_mix_client(table, p, rng, pick_for(host), st, idx,
+                                    ttl, write_frac, shared_reads, hold)
+        elif workload == "reader_flood":
+            if idx == 0:
+                task = _flood_writer(table, p, rng, st, idx, flood_key, ttl)
+            else:
+                task = _flood_reader(table, p, rng, st, idx, flood_key, ttl)
         else:
-            task = _acquire_release_client(table, p, rng, pick, st, idx, ttl)
+            task = _acquire_release_client(table, p, rng, pick_for(host), st,
+                                           idx, ttl)
         engine.spawn(task, delay=idx * 1e-7)  # deterministic arrival stagger
 
     engine.run(stop=st.done,
@@ -293,6 +432,7 @@ def run_lock_table_sim(
     wall = time.perf_counter() - wall0
 
     totals = table.class_totals()
+    mode_totals = table.mode_class_totals()
     if totals[LOCAL].rdma_ops:
         raise AssertionError(
             f"{workload}: LOCAL class issued {totals[LOCAL].rdma_ops} RDMA ops"
@@ -312,6 +452,33 @@ def run_lock_table_sim(
         )
 
     rows = table.telemetry()
+    grants_shared = sum(r["grants_shared"] for r in rows)
+    grants_exclusive = sum(r["grants_exclusive"] for r in rows)
+    if grants_shared + grants_exclusive != sum(r["grants"] for r in rows):
+        raise AssertionError(
+            f"{workload}: per-mode grant counters do not partition the "
+            f"total ({grants_shared} + {grants_exclusive} != "
+            f"{sum(r['grants'] for r in rows)})"
+        )
+    if workload in ("home", "uniform", "zipfian", "failover") and grants_shared:
+        raise AssertionError(
+            f"{workload}: exclusive-only workload produced {grants_shared} "
+            "shared grants"
+        )
+    writer_waits = st.writer_waits
+    if workload == "reader_flood":
+        if not writer_waits:
+            raise AssertionError("reader_flood: the writer never got a grant")
+        # The drain protocol's bound: intent is armed at the writer's first
+        # blocked CS, the cohort stops extending, and the writer wins within
+        # ~one TTL (+ polling slack).  10x is a loud failure margin, not a
+        # tight model.
+        if max(writer_waits) > 10 * ttl:
+            raise AssertionError(
+                f"reader_flood: writer starved — max wait "
+                f"{max(writer_waits):.6f}s vs ttl {ttl}"
+            )
+
     vsec = engine.clock.now
     return SimResult(
         workload=workload,
@@ -326,14 +493,35 @@ def run_lock_table_sim(
         jain=jain(st.per_client),
         grants=sum(r["grants"] for r in rows),
         rejects=sum(r["rejects"] for r in rows),
+        grants_shared=grants_shared,
+        grants_exclusive=grants_exclusive,
+        rejects_shared=sum(r["rejects_shared"] for r in rows),
+        rejects_exclusive=sum(r["rejects_exclusive"] for r in rows),
         expirations=sum(r["expirations"] for r in rows),
         fast_renews=sum(r["fast_renews"] for r in rows),
         fast_releases=sum(r["fast_releases"] for r in rows),
+        shared_joins=sum(r["shared_joins"] for r in rows),
+        shared_renews=sum(r["shared_renews"] for r in rows),
+        shared_releases=sum(r["shared_releases"] for r in rows),
+        shared_remote_grants=sum(r["shared_remote_grants"] for r in rows),
+        shared_acquire_rcas=sum(r["shared_acquire_rcas"] for r in rows),
+        upgrades=sum(r["upgrades"] for r in rows),
+        downgrades=sum(r["downgrades"] for r in rows),
+        intent_blocks=sum(r["intent_blocks"] for r in rows),
         repairs=sum(r["repairs"] for r in rows),
         zombie_renews=st.zombie_renews,
         token_regressions=st.token_regressions,
+        writer_grants=len(writer_waits),
+        writer_max_wait=max(writer_waits) if writer_waits else 0.0,
+        writer_mean_wait=(sum(writer_waits) / len(writer_waits)
+                          if writer_waits else 0.0),
         cost={"local": vars(totals[LOCAL]).copy(),
               "remote": vars(totals[REMOTE]).copy()},
+        mode_cost={
+            f"{mode.label}_{cls_name}": vars(mode_totals[mode][cls]).copy()
+            for mode in LeaseMode
+            for cls_name, cls in (("local", LOCAL), ("remote", REMOTE))
+        },
         events=engine.events,
         spins=engine.spins,
         wall_seconds=wall,

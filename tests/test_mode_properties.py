@@ -1,0 +1,170 @@
+"""Property test (satellite): writer fencing tokens stay strictly monotonic
+per key under arbitrary interleavings of shared grants, upgrades, expiries,
+releases, downgrades and zombie renewals.
+
+Hypothesis drives a random op sequence against one key of a mode-aware
+table on a fake clock.  The invariants checked after every step:
+
+* every EXCLUSIVE grant (acquire or upgrade) carries a token strictly
+  larger than every token previously seen for the key;
+* every SHARED grant carries a token no smaller than the largest WRITER
+  token seen (reader generations reuse the last allocated token, never an
+  older one);
+* a renewal never changes a lease's token (fencing identity is immutable);
+* a zombie renewal — renewing a lease whose key has since been re-granted
+  in exclusive mode — never succeeds once the token moved on.
+"""
+
+import dataclasses
+import random
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import AsymmetricMemory  # noqa: E402
+from repro.coord import LeaseMode, ShardedLockTable  # noqa: E402
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+KEY = "contested"
+TTL = 5.0
+
+# Op space: (kind, actor index, magnitude).  Magnitude seeds clock advances
+# and which held/retired lease an op targets.
+OPS = ("acquire_shared", "acquire_exclusive", "renew", "renew_zombie",
+       "release", "release_zombie", "upgrade", "downgrade", "advance")
+
+ops_strategy = st.lists(
+    st.tuples(st.sampled_from(OPS), st.integers(0, 2), st.integers(0, 7)),
+    min_size=4, max_size=40,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=ops_strategy, seed=st.integers(0, 2 ** 16))
+def test_writer_tokens_strictly_monotonic_under_mode_interleavings(ops, seed):
+    rng = random.Random(seed)
+    clock = FakeClock()
+    mem = AsymmetricMemory(3)
+    table = ShardedLockTable(mem, num_shards=2, clock=clock)
+    procs = [mem.spawn(h) for h in range(3)]
+
+    held = {i: [] for i in range(3)}     # live-ish lease objects per actor
+    retired = []                          # released/expired objects (zombies)
+    max_token = 0        # largest token ever seen on the key
+    max_writer_token = 0  # largest EXCLUSIVE token ever granted
+
+    def saw_grant(lease, exclusive):
+        nonlocal max_token, max_writer_token
+        if exclusive:
+            assert lease.token > max_token, (
+                f"writer token {lease.token} did not exceed max seen "
+                f"{max_token}")
+            max_writer_token = lease.token
+        else:
+            assert lease.token >= max_writer_token, (
+                f"reader generation token {lease.token} regressed below "
+                f"writer token {max_writer_token}")
+        max_token = max(max_token, lease.token)
+
+    for kind, actor, mag in ops:
+        p = procs[actor]
+        if kind == "advance":
+            clock.t += (mag + 1) * TTL / 6  # sometimes past expiry
+            continue
+        if kind == "acquire_shared":
+            lease = table.try_acquire(p, KEY, TTL, mode=LeaseMode.SHARED)
+            if lease is not None:
+                saw_grant(lease, exclusive=False)
+                held[actor].append(lease)
+        elif kind == "acquire_exclusive":
+            lease = table.try_acquire(p, KEY, TTL)
+            if lease is not None:
+                saw_grant(lease, exclusive=True)
+                held[actor].append(lease)
+        elif kind == "renew" and held[actor]:
+            lease = held[actor][mag % len(held[actor])]
+            renewed = table.renew(p, lease)
+            if renewed is not None:
+                assert renewed.token == lease.token, "renewal changed a token"
+                held[actor][held[actor].index(lease)] = renewed
+        elif kind == "renew_zombie" and retired:
+            owner, lease = retired[mag % len(retired)]
+            renewed = table.renew(procs[owner], lease)
+            if renewed is not None:
+                # Only legal if the token never moved on past this lease's
+                # generation — i.e. no exclusive grant fenced it out.
+                assert lease.token >= max_writer_token, (
+                    "a fenced-out zombie renewal succeeded")
+        elif kind == "release" and held[actor]:
+            lease = held[actor].pop(mag % len(held[actor]))
+            table.release(p, lease)
+            retired.append((actor, lease))
+        elif kind == "release_zombie" and retired:
+            owner, lease = retired[mag % len(retired)]
+            table.release(procs[owner], lease)  # must be harmless (no assert:
+            # the double release either no-ops or frees a still-current slot)
+        elif kind == "upgrade" and held[actor]:
+            shared = [l for l in held[actor] if l.mode == LeaseMode.SHARED]
+            if shared:
+                lease = shared[mag % len(shared)]
+                up = table.upgrade(p, lease)
+                if up is not None:
+                    saw_grant(up, exclusive=True)
+                    held[actor][held[actor].index(lease)] = up
+        elif kind == "downgrade" and held[actor]:
+            excl = [l for l in held[actor] if l.mode == LeaseMode.EXCLUSIVE]
+            if excl:
+                lease = excl[mag % len(excl)]
+                down = table.downgrade(p, lease)
+                if down is not None:
+                    assert down.token == lease.token, "downgrade minted a token"
+                    held[actor][held[actor].index(lease)] = down
+        # Retire anything whose own horizon lapsed (the zombie pool).
+        for i in range(3):
+            for lease in list(held[i]):
+                if clock.t >= lease.expires_at:
+                    held[i].remove(lease)
+                    retired.append((i, lease))
+
+    # Final sweep: the authoritative fence register never regressed either.
+    shard = table.shards[table.shard_of(KEY)]
+    state = shard.keys.get(KEY)
+    if state is not None:
+        fence = state.fence._value
+        assert fence >= max_writer_token
+        assert fence == max_token
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_forged_tokens_never_validate(seed):
+    """Fuzzed fencing: leases with perturbed tokens must never renew,
+    release, upgrade or downgrade successfully."""
+    rng = random.Random(seed)
+    clock = FakeClock()
+    mem = AsymmetricMemory(2)
+    table = ShardedLockTable(mem, num_shards=2, clock=clock)
+    p = mem.spawn(0)
+    mode = LeaseMode.SHARED if rng.random() < 0.5 else LeaseMode.EXCLUSIVE
+    lease = table.try_acquire(p, KEY, TTL, mode=mode)
+    assert lease is not None
+    delta = rng.choice([-2, -1, 1, 2, 100])
+    forged = dataclasses.replace(lease, token=lease.token + delta)
+    assert table.renew(p, forged) is None
+    assert table.release(p, forged) is False
+    if mode == LeaseMode.SHARED:
+        assert table.upgrade(p, forged) is None
+    else:
+        assert table.downgrade(p, forged) is None
+    # The genuine lease is untouched by the forgery attempts.
+    assert table.renew(p, lease) is not None

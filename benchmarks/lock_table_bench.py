@@ -272,10 +272,28 @@ _LAST = {"results": [], "seconds": None, "sim": None}  # for benchmarks.run --js
 SIM_HOSTS, SIM_CPH, SIM_SHARDS = 64, 16, 128
 SIM_OPS = {"home": 50_000, "uniform": 50_000,
            "zipfian": 100_000, "failover": 25_000,
-           "read_heavy": 50_000, "reader_flood": 20_000}
+           "read_heavy": 50_000, "reader_flood": 20_000,
+           "crash_restart": 20_000}
 SIM_SMOKE_OPS = {"home": 25_000, "uniform": 25_000,
                  "zipfian": 100_000, "failover": 10_000,
-                 "read_heavy": 25_000, "reader_flood": 10_000}
+                 "read_heavy": 25_000, "reader_flood": 10_000,
+                 "crash_restart": 8_000}
+
+# Recovery sweep (sim): the crash-recovery acceptance numbers, at a scale
+# (128 hosts) only the virtual-time engine reaches.  Host-level crashes on a
+# seeded schedule; the same seeded run twice — once with ledger reclaim, once
+# amnesiac — so the wedge/reclaim contrast is a like-for-like protocol delta.
+# TTL 1 ms with renewals mid-hold keeps leases in flight at the crash
+# instants; restart_delay = TTL/8 models a fast supervisor respawn.  The
+# acceptance gate: p99 lease-reclaim latency <= 0.1x TTL, while the amnesiac
+# baseline's re-entry latency sits near (or past) the full TTL wedge.
+REC_TTL = 1e-3
+REC_CFG = dict(num_hosts=128, clients_per_host=4, num_shards=256,
+               failover_ttl=REC_TTL, hot_keys=192, crash_hosts=32,
+               restart_delay=REC_TTL / 8, crash_warmup=2e-3,
+               crash_spacing=REC_TTL / 8)
+REC_OPS = 20_000
+REC_SMOKE_OPS = 8_000
 
 # Read:write ratio sweep (sim): the mode-aware acceptance numbers.  A hot
 # read-mostly working set — one home key per host shared by its 16 clients,
@@ -344,6 +362,64 @@ def run_rw_sweep(report, sim_seed=0, smoke=False):
     return sweep
 
 
+def run_recovery_sweep(report, sim_seed=0, smoke=False):
+    """Crash-recovery before/after: ledger reclaim vs the amnesiac wedge."""
+    ops = REC_SMOKE_OPS if smoke else REC_OPS
+    ttl = REC_CFG["failover_ttl"]
+    out = {"config": dict(REC_CFG, total_ops=ops)}
+    runs = {}
+    for label, reclaim in (("reclaim", True), ("amnesiac", False)):
+        r = run_lock_table_sim("crash_restart", total_ops=ops, seed=sim_seed,
+                               reclaim=reclaim, **REC_CFG)
+        runs[label] = r
+        out[label] = {
+            "virtual_throughput": r.virtual_throughput,
+            "ops": r.ops,
+            "crashes": r.crashes,
+            "kills": r.kills,
+            "recovered_leases": r.reclaims,
+            "recovery_p50_us": round(r.recovery_p50 * 1e6, 3),
+            "recovery_p99_us": round(r.recovery_p99 * 1e6, 3),
+            "recovery_max_us": round(r.recovery_max * 1e6, 3),
+            "reclaim_fast": r.reclaim_fast,
+            "reclaim_slow": r.reclaim_slow,
+            "reclaim_shared": r.reclaim_shared,
+            "reclaim_rejects": r.reclaim_rejects,
+            "orphan_probes": r.orphan_probes,
+            "orphan_adopts": r.orphan_adopts,
+            "recovery_events": r.recovery_events,
+        }
+        report(
+            f"lock_table/sim/recovery-{label}/hosts{REC_CFG['num_hosts']}"
+            f"x{REC_CFG['clients_per_host']}",
+            1e6 / max(r.virtual_throughput, 1e-9),
+            f"vthru={r.virtual_throughput:.0f}/s crashes={r.crashes} "
+            f"recovered={r.reclaims} "
+            f"p99={r.recovery_p99 * 1e6:.0f}us "
+            f"max={r.recovery_max * 1e6:.0f}us "
+            f"fast={r.reclaim_fast} slow={r.reclaim_slow} "
+            f"shared={r.reclaim_shared} orphan={r.orphan_adopts} "
+            f"ttl={ttl * 1e6:.0f}us",
+        )
+    rec, amn = runs["reclaim"], runs["amnesiac"]
+    if not rec.reclaims:
+        raise AssertionError(
+            "recovery sweep: no lease was ever reclaimed — the crash "
+            "schedule missed every in-flight lease (config bug)")
+    if rec.recovery_p99 > 0.1 * ttl:
+        raise AssertionError(
+            f"recovery sweep: p99 reclaim latency "
+            f"{rec.recovery_p99 * 1e6:.0f}us exceeds 0.1x ttl "
+            f"({0.1 * ttl * 1e6:.0f}us)")
+    if amn.reclaims and amn.recovery_p99 <= rec.recovery_p99:
+        raise AssertionError(
+            "recovery sweep: the amnesiac wedge came back FASTER than "
+            "ledger reclaim — the baseline is not measuring a wedge")
+    out["wedge_over_reclaim_p99"] = round(
+        amn.recovery_p99 / max(rec.recovery_p99, 1e-12), 2)
+    return out
+
+
 def run_sim(report, sim_seed=0, smoke=False):
     """The deterministic virtual-time sweep; returns (rows, wall_seconds).
 
@@ -355,10 +431,18 @@ def run_sim(report, sim_seed=0, smoke=False):
     ops_table = SIM_SMOKE_OPS if smoke else SIM_OPS
     rows, wall = {}, {}
     for workload in SIM_WORKLOADS:
+        kwargs = {}
+        if workload == "crash_restart":
+            # The 300 us failover TTL leaves nothing alive to reclaim by
+            # the time a restart lands; run this row at the recovery
+            # sweep's lease scale so its counters exercise the full path.
+            kwargs = dict(failover_ttl=REC_TTL, crash_warmup=2e-3,
+                          crash_spacing=REC_TTL / 8,
+                          restart_delay=REC_TTL / 8)
         r = run_lock_table_sim(
             workload, num_hosts=SIM_HOSTS, clients_per_host=SIM_CPH,
             num_shards=SIM_SHARDS, total_ops=ops_table[workload],
-            seed=sim_seed,
+            seed=sim_seed, **kwargs,
         )
         cfg = f"{workload}/hosts{SIM_HOSTS}x{SIM_CPH}/shards{SIM_SHARDS}"
         rows[cfg] = r.row()
@@ -372,6 +456,9 @@ def run_sim(report, sim_seed=0, smoke=False):
         if workload == "reader_flood":
             extra += (f"writer_grants={r.writer_grants} "
                       f"writer_max_wait={r.writer_max_wait * 1e6:.0f}us ")
+        if workload == "crash_restart":
+            extra += (f"crashes={r.crashes} recovered={r.reclaims} "
+                      f"recovery_p99={r.recovery_p99 * 1e6:.0f}us ")
         report(
             f"lock_table/sim/{cfg}",
             1e6 / max(r.virtual_throughput, 1e-9),  # virtual µs per op
@@ -419,6 +506,7 @@ def run(report, seconds=0.7, seeds=SEEDS, mode="both", sim_seed=0,
     if mode in ("sim", "both"):
         rows, wall = run_sim(report, sim_seed=sim_seed, smoke=smoke)
         sweep = run_rw_sweep(report, sim_seed=sim_seed, smoke=smoke)
+        recovery = run_recovery_sweep(report, sim_seed=sim_seed, smoke=smoke)
         _LAST["sim"] = {
             "seed": sim_seed,
             "config": {"hosts": SIM_HOSTS, "clients_per_host": SIM_CPH,
@@ -429,6 +517,7 @@ def run(report, seconds=0.7, seeds=SEEDS, mode="both", sim_seed=0,
                 "config": dict(RW_CFG, total_ops=RW_OPS),
                 "ratios": sweep,
             },
+            "recovery": recovery,
         }
 
 

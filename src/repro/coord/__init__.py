@@ -5,6 +5,9 @@ per-class cost optimality covers the whole keyspace; ``CoordinationService``
 wraps it together with named locks, elections and barriers.
 """
 
+from .faults import CRASH_POINTS, ClientCrash, FaultInjector  # noqa: F401
+from .ledger import (LeaseLedger, LedgerRecord, LedgerStore,  # noqa: F401
+                     LedgerView, RecoverableClient, replay_records)
 from .service import Barrier, CoordinationService  # noqa: F401
 from .table import (Lease, LeaseMode, LockShard, ShardedLockTable,  # noqa: F401
                     stable_key_hash)

@@ -1,0 +1,163 @@
+"""Deterministic fault injection: labeled crash points for the lease stack.
+
+Recovery code is only as trustworthy as the crashes it has survived, and
+real crashes land in the narrowest windows — after a grant CAS commits but
+before the client's ledger records it, between two shard groups of a batch,
+while a writer's drain barrier is armed.  This module makes those windows
+*first-class*: the lock table and the recoverable client wrapper call
+:meth:`FaultInjector.crash_point` at each labeled window, and an armed
+injector raises :class:`ClientCrash` there — synchronously, mid-protocol,
+exactly where a kill -9 would land.
+
+Two trigger styles, both deterministic:
+
+* :meth:`FaultInjector.at` — "crash the *nth* arrival at this label"
+  (optionally filtered to one pid).  The crash-point matrix test arms one
+  label per case and proves recovery from every window.
+* :meth:`FaultInjector.seeded` — a seeded Bernoulli draw per arrival, for
+  crash *storms*: same seed ⇒ the same crashes at the same arrivals, so a
+  CI rerun is byte-identical.
+
+Every firing is appended to :attr:`FaultInjector.fired` (label, pid,
+arrival index) — the determinism gate diffs this log across same-seed runs.
+
+Crash points sit **outside** ALock critical sections by design: a lease
+holder may die at any of them and the shard stays serviceable (leases
+expire; the CS itself is never wedged).  The catalog is
+:data:`CRASH_POINTS`; ``docs/recovery.md`` documents what each window
+leaves behind and how restart recovery repairs it.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["CRASH_POINTS", "ClientCrash", "FaultInjector"]
+
+
+# The labeled windows, in protocol order.  Each names the state a crash
+# there abandons (see docs/recovery.md for the per-window recovery story):
+#
+#   ledger.post_intent — the write-ahead intent is durable, the grant CAS
+#       has not run: restart finds a dangling intent and probes the word.
+#   grant.pre_ledger   — the grant CAS committed, the grant record did not:
+#       the lease exists under a dead pid with no ledger witness; restart's
+#       orphan probe adopts it via the holder register + fence check.
+#   renew.pre_cas      — a renewal was requested but never reached the word.
+#   renew.pre_ledger   — the renewal CAS landed, the ledger still holds the
+#       older witness: reclaim's fast CAS misses and the slow path
+#       revalidates against the (fresher) word.
+#   release.pre_cas    — a release never reached the word: the ledger says
+#       held, the word agrees — reclaim succeeds, the lease outlives the
+#       crash (safe: it was never released).
+#   release.pre_ledger — the release CAS landed, the tombstone did not: the
+#       ledger over-claims and reclaim fails cleanly (fence/word mismatch).
+#   batch.mid          — between two shard groups of acquire_batch: a prefix
+#       of the batch is held by a dead pid, unrecorded; dangling intents
+#       drive the orphan probe, key by key.
+#   drain.mid          — a writer died right after arming a reader-cohort
+#       drain barrier: the barrier lapses on its own (it is a deadline).
+#   upgrade.mid        — an upgrader died after arming the drain barrier
+#       mid-upgrade; its shared slot is still counted and reclaimable.
+CRASH_POINTS = (
+    "ledger.post_intent",
+    "grant.pre_ledger",
+    "renew.pre_cas",
+    "renew.pre_ledger",
+    "release.pre_cas",
+    "release.pre_ledger",
+    "batch.mid",
+    "drain.mid",
+    "upgrade.mid",
+)
+
+
+class ClientCrash(Exception):
+    """The injected process death.  Raised at a crash point (synchronously,
+    by an armed :class:`FaultInjector`) or thrown into a sim task by
+    :meth:`~repro.sim.SimEngine.kill` (asynchronously, at the task's next
+    dispatch).  Client code treats it the way a supervisor treats a dead
+    worker: abandon all in-memory state, restart, replay the ledger."""
+
+    def __init__(self, label: str, pid: Optional[int] = None):
+        super().__init__(f"injected crash at {label!r}"
+                         + (f" (pid {pid})" if pid is not None else ""))
+        self.label = label
+        self.pid = pid
+
+
+class FaultInjector:
+    """Arms crash points with deterministic triggers.
+
+    Thread-compatible in the same sense as the shard telemetry: arrivals
+    are counted under no lock (sim steps are atomic; the threaded stress
+    tests arm pid-filtered one-shots, which fire exactly once per filter
+    regardless of interleaving — the ``nth`` comparison is on the filter's
+    own monotone counter).
+    """
+
+    def __init__(self) -> None:
+        # label -> total arrivals observed (armed or not).
+        self.hits: Dict[str, int] = {}
+        # Firing log: (label, pid, arrival index at that label).
+        self.fired: List[Tuple[str, int, int]] = []
+        # One-shot triggers: (label, pid-or-None) -> arrival number to kill.
+        self._oneshots: Dict[Tuple[str, Optional[int]], int] = {}
+        # Per-filter arrival counters (pid-filtered triggers count their own
+        # arrivals; the global `hits` counts everyone's).
+        self._filter_hits: Dict[Tuple[str, Optional[int]], int] = {}
+        self._rng: Optional[random.Random] = None
+        self._prob = 0.0
+        self._labels: Optional[frozenset] = None
+
+    # ------------------------------------------------------------- arming
+    def at(self, label: str, nth: int = 1,
+           pid: Optional[int] = None) -> "FaultInjector":
+        """Crash the ``nth`` arrival at ``label`` (1-based), optionally only
+        counting arrivals by ``pid``.  Returns self for chaining."""
+        if label not in CRASH_POINTS:
+            raise ValueError(f"unknown crash point {label!r}")
+        if nth < 1:
+            raise ValueError("nth is 1-based")
+        self._oneshots[(label, pid)] = nth
+        return self
+
+    @classmethod
+    def seeded(cls, seed: int, prob: float,
+               labels: Optional[Tuple[str, ...]] = None) -> "FaultInjector":
+        """A crash storm: every arrival at an armed label dies with
+        probability ``prob``, drawn from a dedicated seeded stream (the
+        schedule depends only on ``seed`` and the arrival order, which the
+        sim engine already makes deterministic)."""
+        fi = cls()
+        fi._rng = random.Random(0x9E3779B1 * (seed + 1))
+        fi._prob = float(prob)
+        if labels is not None:
+            for lab in labels:
+                if lab not in CRASH_POINTS:
+                    raise ValueError(f"unknown crash point {lab!r}")
+            fi._labels = frozenset(labels)
+        return fi
+
+    # ------------------------------------------------------------- firing
+    def crash_point(self, label: str, pid: int) -> None:
+        """Called by instrumented code at each labeled window; raises
+        :class:`ClientCrash` when a trigger matches, else returns."""
+        n = self.hits.get(label, 0) + 1
+        self.hits[label] = n
+        for filt in ((label, None), (label, pid)):
+            want = self._oneshots.get(filt)
+            if want is None:
+                continue
+            fn = self._filter_hits.get(filt, 0) + 1
+            self._filter_hits[filt] = fn
+            if fn == want:
+                del self._oneshots[filt]
+                self.fired.append((label, pid, n))
+                raise ClientCrash(label, pid)
+        if (self._rng is not None and self._prob > 0.0
+                and (self._labels is None or label in self._labels)
+                and self._rng.random() < self._prob):
+            self.fired.append((label, pid, n))
+            raise ClientCrash(label, pid)

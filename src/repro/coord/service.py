@@ -37,6 +37,8 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.core import ALock, AsymmetricMemory, OpCounts, Process
 
+from .faults import FaultInjector
+from .ledger import LedgerStore, RecoverableClient
 from .table import Lease, LeaseMode, ShardedLockTable
 
 
@@ -52,6 +54,7 @@ class CoordinationService:
         clock=None,
         sleep=None,
         yield_point=None,
+        fault: Optional[FaultInjector] = None,
     ):
         self.num_hosts = num_hosts
         # One time source end-to-end: the memory's spin hooks, the table's
@@ -64,8 +67,12 @@ class CoordinationService:
         )
         self.table = ShardedLockTable(
             self.mem, num_shards=num_shards, init_budget=init_budget,
-            clock=clock, sleep=sleep, name="svc.table",
+            clock=clock, sleep=sleep, name="svc.table", fault=fault,
         )
+        # Durable lease ledgers, keyed by client NAME (the identity that
+        # survives a crash) — the restart re-entry API below hands a
+        # restarted client its predecessor's ledger to replay.
+        self.ledgers = LedgerStore()
         self._locks: Dict[str, ALock] = {}
         self._claims: Dict[str, object] = {}
         self._init_budget = init_budget
@@ -202,6 +209,36 @@ class CoordinationService:
             self._lease_cache.pop((p.pid, lease.key, lease.mode), None)
             self._cache_put(p, downgraded)
         return downgraded
+
+    # -------------------------------------------------------- crash recovery
+    def reclaim(self, p: Process, lease: Lease,
+                ttl: Optional[float] = None) -> Optional[Lease]:
+        """Crash-restart re-entry for one lease (see the table's docstring);
+        a successful reclaim primes the cache with the fresh witness."""
+        got = self.table.reclaim(p, lease, ttl)
+        if got is not None:
+            self._cache_put(p, got)
+        else:
+            self._lease_cache.pop((p.pid, lease.key, lease.mode), None)
+        return got
+
+    def recoverable(self, name: str, p: Process) -> RecoverableClient:
+        """A ledger-writing lease client under the durable identity
+        ``name``.  First start of an identity; after a crash, use
+        :meth:`restart` instead."""
+        return RecoverableClient(self.table, p, self.ledgers.ledger(name))
+
+    def restart(self, name: str, p: Process
+                ) -> tuple:
+        """Crash-restart re-entry for the client identity ``name``: rebind
+        its ledger to the new incarnation ``p``, replay it, and reclaim
+        every still-valid lease.  Returns ``(client, reclaimed)``; the
+        reclaimed leases are primed into the lease cache."""
+        client = RecoverableClient(self.table, p, self.ledgers.ledger(name))
+        reclaimed = client.restart(p)
+        for lease in reclaimed:
+            self._cache_put(p, lease)
+        return client, reclaimed
 
     def telemetry(self) -> List[Dict]:
         return self.table.telemetry()

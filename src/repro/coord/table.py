@@ -76,6 +76,8 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core import ALock, AsymmetricMemory, OpCounts, Process
 
+from .faults import FaultInjector
+
 LOCAL, REMOTE = 0, 1
 
 _NO_HOLDER = -1
@@ -219,6 +221,16 @@ class LockShard:
         self.downgrades = 0
         self.intent_blocks = 0       # shared ops refused by a writer barrier
         self.repairs = 0  # clobbered expiry mirrors repaired by a grant
+        # Crash-recovery counters (the ledger/reclaim stack).
+        self.reclaims = 0            # successful reclaims, any path
+        self.reclaim_fast = 0        # exclusive witness-CAS reclaims
+        self.reclaim_slow = 0        # exclusive word-probe reclaims
+        self.reclaim_shared = 0      # shared cohort-slot re-adoptions
+        self.reclaim_rejects = 0     # reclaim refused (expired/fenced out)
+        self.orphan_probes = 0       # dangling-intent probes run
+        self.orphan_adopts = 0       # probes that adopted a lost grant
+        self.reconstructions = 0     # keys audited by reconstruct_shard
+        self.reconstruct_resets = 0  # keys whose registers were re-seeded
         self._meta = threading.Lock()
 
 
@@ -233,6 +245,7 @@ class ShardedLockTable:
         clock: Optional[Callable[[], float]] = None,
         sleep: Optional[Callable[[float], None]] = None,
         name: str = "table",
+        fault: Optional[FaultInjector] = None,
     ):
         self.mem = mem
         self.num_hosts = mem.num_nodes
@@ -248,6 +261,7 @@ class ShardedLockTable:
         self.clock = clock or time.monotonic
         self.sleep = sleep or time.sleep
         self.name = name
+        self.fault = fault
         self.shards = [
             LockShard(mem, s, s % self.num_hosts, init_budget, name)
             for s in range(self.num_shards)
@@ -334,6 +348,15 @@ class ShardedLockTable:
                     )
                     shard.keys[key] = st
         return st
+
+    # ------------------------------------------------------ fault injection
+    def _crash_point(self, label: str, p: Process) -> None:
+        """A labeled crash window (see ``repro.coord.faults``).  Every call
+        site sits OUTSIDE the shard ALock's critical section: a holder may
+        die at any of them and the shard stays serviceable — leases expire
+        (or are reclaimed), the CS is never wedged."""
+        if self.fault is not None:
+            self.fault.crash_point(label, p.pid)
 
     # ---------------------------------------------------------- accounting
     def _account(self, shard: LockShard, p: Process, snap: tuple,
@@ -558,6 +581,7 @@ class ShardedLockTable:
         granted = []
         writes: List[tuple] = []
         blocked = False
+        armed_drain = False
         expirations = 0
         repairs = 0
         # Sample the clock BEFORE acquiring: every register read then happens
@@ -598,6 +622,7 @@ class ShardedLockTable:
                             # extends the cohort) past its current horizon —
                             # the writer's wait is bounded by one TTL.
                             writes.append(("write", st.intent, eexp))
+                            armed_drain = True
                         break
                     token = fence + 1  # CS-only allocator: never regresses
                     plan.append((key, st, (etok, readers, eexp), token,
@@ -673,6 +698,12 @@ class ShardedLockTable:
             if blocked:
                 shard.rejects += 1
                 shard.rejects_by_mode[LeaseMode.EXCLUSIVE] += 1
+        if armed_drain:
+            # The writer just armed a reader-cohort drain barrier and is
+            # about to wait outside the CS — the window where its death
+            # abandons the barrier (which lapses on its own: it is a
+            # deadline, not a lock).
+            self._crash_point("drain.mid", p)
         return granted, blocked
 
     def try_acquire(self, p: Process, key: str, ttl: float,
@@ -1003,6 +1034,12 @@ class ShardedLockTable:
             else:
                 shard.rejects += 1
                 shard.rejects_by_mode[LeaseMode.EXCLUSIVE] += 1
+        if upgraded is None and writes:
+            # The upgrader armed the drain barrier and will poll from
+            # outside the CS; its death here leaves the barrier to lapse
+            # and its shared slot counted until the slot's own horizon
+            # (reclaimable by a restarted incarnation).
+            self._crash_point("upgrade.mid", p)
         return upgraded
 
     def downgrade(self, p: Process, lease: Lease,
@@ -1041,6 +1078,306 @@ class ShardedLockTable:
             with shard._meta:
                 shard.downgrades += 1
         return downgraded
+
+    # ------------------------------------------------------ crash recovery
+    def reclaim(self, p: Process, lease: Lease,
+                ttl: Optional[float] = None) -> Optional[Lease]:
+        """Crash-restart re-entry: re-adopt a still-valid lease.
+
+        ``lease`` is the witness a restarted client replayed from its
+        ledger (see ``repro.coord.ledger``).  Reclaim never *extends* a
+        dead grant's reach: it succeeds only while the grant is still the
+        key's live generation, and a lease the world has moved past
+        (expired and re-granted, fenced out, cohort gone) returns ``None``
+        — the client re-acquires like anyone else.
+
+        **EXCLUSIVE fast path**: one fencing-token-checked CAS against the
+        ledger's witness ``(token, 0, expires_at)``, re-timing the lease to
+        ``now + ttl`` — zero simulated RDMA ops for a local holder, exactly
+        one rCAS for a remote one, same cost shape as a renewal.  This is
+        what makes restart re-entry ~three orders cheaper than the TTL
+        wedge.
+
+        **EXCLUSIVE word-probe path**: the witness can be stale-LOW (a
+        renewal's CAS landed but its ledger record died with the client),
+        so a missed fast CAS re-reads the authoritative word and CASes
+        against *it* — still CS-free.  Sound for the same reason the
+        renewal fast path is: fence tokens are never reused, so a word
+        still carrying OUR token with no readers IS our live grant, and
+        re-timing it is just a renewal.  Restart recovery therefore costs
+        reads and CASes (doorbells), never a shard ALock critical section.
+        Past the word's own expiry the lease is dead — reclaim never
+        resurrects.
+
+        **SHARED**: the crashed reader's cohort slot is still counted in
+        the packed word (nobody else may decrement it — the client-side
+        slot ledger forbids it), so reclaim re-adopts the slot under the
+        new incarnation and extends the cohort horizon like a renewal,
+        gated on the slot's OWN ``expires_at`` (the same no-resurrection
+        ABA posture as ``_shared_release``: past its horizon the slot died
+        with its generation) and refused while a writer drain barrier is
+        armed.
+
+        The reclaimed EXCLUSIVE lease keeps the *original* ``holder_pid``:
+        that pid is the grant's identity (the ``holder`` register still
+        names it, and pids are never reused), so the slow renew/release
+        validations keep working for the new incarnation.  SHARED reclaims
+        carry the new pid — cohort slots are owned per live process.
+        """
+        if ttl is None:
+            ttl = lease.ttl
+        shard = self.shards[lease.shard]
+        st = self._key_state(shard, lease.key)
+        if lease.mode == LeaseMode.SHARED:
+            return self._shared_reclaim(p, shard, st, lease, ttl)
+        snap = p.counts.as_tuple()
+        got: Optional[Lease] = None
+        fast = False
+        try:
+            now = self.clock()
+            if now < lease.expires_at:
+                witness = (lease.token, 0, lease.expires_at)
+                observed = self.mem.auto_cas(
+                    p, st.expires, witness, (lease.token, 0, now + ttl)
+                )
+                if observed == witness:
+                    got = Lease(lease.key, lease.shard, lease.holder_pid,
+                                lease.token, now + ttl, ttl,
+                                LeaseMode.EXCLUSIVE)
+                    fast = True
+            if got is None:
+                for _ in range(_FAST_ATTEMPTS):
+                    now = self.clock()
+                    packed = self.mem.auto_read(p, st.expires)
+                    etok, readers, eexp = packed
+                    if (etok != lease.token or readers != 0
+                            or eexp <= _FREE_AT or now >= eexp):
+                        break  # expired, re-granted, or a reader generation
+                    if self.mem.auto_cas(
+                        p, st.expires, packed, (lease.token, 0, now + ttl)
+                    ) == packed:
+                        got = Lease(lease.key, lease.shard, lease.holder_pid,
+                                    lease.token, now + ttl, ttl,
+                                    LeaseMode.EXCLUSIVE)
+                        break
+                    self.mem.yield_point()  # lost a word race: re-read
+        finally:
+            self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
+        with shard._meta:
+            if got is not None:
+                shard.reclaims += 1
+                if fast:
+                    shard.reclaim_fast += 1
+                else:
+                    shard.reclaim_slow += 1
+            else:
+                shard.reclaim_rejects += 1
+        return got
+
+    def _shared_reclaim(self, p: Process, shard: LockShard, st: _KeyState,
+                        lease: Lease, ttl: float) -> Optional[Lease]:
+        snap = p.counts.as_tuple()
+        got: Optional[Lease] = None
+        try:
+            for _ in range(_FAST_ATTEMPTS):
+                now = self.clock()
+                if now >= lease.expires_at:
+                    break  # the slot's horizon passed: it died with the
+                    # generation (no resurrection — the ABA guard that
+                    # keeps a reclaim from decrementing, later, a
+                    # successor generation that reused the token)
+                packed, fence, barrier = self._shared_read(p, shard, st)
+                etok, readers, eexp = packed
+                if now < barrier:
+                    break  # writer draining: no extensions, no re-adoption
+                if (etok != lease.token or etok != fence or readers <= 0
+                        or now >= eexp):
+                    break  # generation moved on, clobbered, or expired
+                new = (etok, readers, max(eexp, now + ttl))
+                if self.mem.auto_cas(p, st.expires, packed, new) == packed:
+                    got = Lease(lease.key, lease.shard, p.pid, etok,
+                                now + ttl, ttl, LeaseMode.SHARED)
+                    break
+                self.mem.yield_point()  # lost to another shared CAS: retry
+        finally:
+            self._account(shard, p, snap, LeaseMode.SHARED)
+        if got is not None:
+            self._slot_join(p, lease.key, got.token, got.expires_at)
+        with shard._meta:
+            if got is not None:
+                shard.reclaims += 1
+                shard.reclaim_shared += 1
+            else:
+                shard.reclaim_rejects += 1
+        return got
+
+    def reclaim_orphan(self, p: Process, key: str,
+                       dead_pids: Sequence[int],
+                       ttl: float) -> Optional[Lease]:
+        """Adopt a live EXCLUSIVE grant left by a dead incarnation.
+
+        The one crash window reclaim-by-witness cannot cover: the grant
+        CAS committed but the client died before its ledger recorded the
+        token (``grant.pre_ledger``, or mid-batch).  The restarted client
+        knows only that an *intent* is dangling — but the ``holder``
+        register names the grantee, and pids are never reused, so under
+        the shard ALock a live word whose holder is one of the caller's
+        dead pids is provably the caller's lost grant.  The CAS re-times
+        it and the holder register is re-pointed at the new incarnation.
+
+        Probe cost is one CS per dangling intent — proportional to what
+        was in flight at the crash, not to the keyspace (the adaptive
+        recovery-cost shape of Dhoked & Mittal's RME transformation).
+        """
+        if ttl <= 0:
+            raise ValueError("ttl must be > 0")
+        dead = set(dead_pids)
+        shard = self.shards[self.shard_of(key)]
+        st = self._key_state(shard, key)
+        snap = p.counts.as_tuple()
+        got: Optional[Lease] = None
+        writes = None
+        try:
+            if dead:
+                shard.alock.lock(p)
+                try:
+                    now = self.clock()
+                    holder, (etok, readers, eexp), fence, _barrier = \
+                        self._read_key_state(p, shard, st)
+                    if (
+                        holder in dead
+                        and etok == fence
+                        and readers == 0
+                        and _FREE_AT < eexp
+                        and now < eexp
+                    ):
+                        if self.mem.auto_cas(
+                            p, st.expires, (etok, readers, eexp),
+                            (etok, 0, now + ttl),
+                        ) == (etok, readers, eexp):
+                            writes = [("write", st.holder, p.pid)]
+                            got = Lease(key, shard.index, p.pid, etok,
+                                        now + ttl, ttl, LeaseMode.EXCLUSIVE)
+                finally:
+                    shard.alock.unlock(p, piggyback=writes)
+        finally:
+            self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
+        with shard._meta:
+            shard.orphan_probes += 1
+            if got is not None:
+                shard.orphan_adopts += 1
+                shard.reclaims += 1
+        return got
+
+    def reconstruct_shard(self, p: Process, shard_index: int,
+                          records: Iterable, fence_slack: int = 16,
+                          ) -> Dict[str, int]:
+        """Audit-and-repair one shard's registers after a home-host restart.
+
+        ``records`` is the merged record stream from surviving clients'
+        ledgers (duck-typed: anything with ``op``/``key``/``token``/
+        ``expires_at`` — see ``repro.coord.ledger.LedgerRecord``).  For
+        every ledgered key homed on this shard, under the shard ALock:
+
+        * **intact** — the fence register matches the word's generation and
+          is at least the largest token any ledger has seen: nothing to do.
+        * **fence_repaired** — the word still carries a ledger-live lease
+          but the fence register lagged (lost with the host): the fence is
+          re-seeded from the word, preserving the lease (its holder can
+          still reclaim it).
+        * **reset** — anything else (word and fence disagree with the
+          ledgers): the key is re-seeded FREE under a fence advanced past
+          everything observed **plus ``fence_slack``**, covering grants
+          that died unrecorded in the pre-ledger window — so no
+          post-reconstruction grant can ever reuse a token some downstream
+          resource has already honored.
+
+        Returns the per-action counts.  Token monotonicity is the one
+        invariant reconstruction must preserve at all costs; availability
+        of individual leases is sacrificed whenever the state cannot be
+        trusted (a reset key's holder simply re-acquires).
+        """
+        shard = self.shards[shard_index]
+        ledger_max: Dict[str, int] = {}
+        grants: Dict[str, Dict[int, tuple]] = {}
+        tombs: Dict[str, set] = {}
+        for rec in records:
+            key = rec.key
+            if not key or rec.op not in ("grant", "reclaim", "renew",
+                                         "release", "lost"):
+                continue
+            if self.shard_of(key) != shard_index:
+                continue
+            if rec.token > ledger_max.get(key, 0):
+                ledger_max[key] = rec.token
+            if rec.op in ("grant", "reclaim"):
+                grants.setdefault(key, {})[rec.token] = (rec.token,
+                                                         rec.expires_at)
+            elif rec.op == "renew":
+                cur = grants.get(key, {}).get(rec.token)
+                if cur is not None and rec.expires_at > cur[1]:
+                    grants[key][rec.token] = (rec.token, rec.expires_at)
+            else:  # release / lost
+                tombs.setdefault(key, set()).add(rec.token)
+        report = {"intact": 0, "fence_repaired": 0, "reset": 0}
+        for key in sorted(ledger_max):
+            # The plausibly-live generation: the largest untombstoned grant
+            # (cross-ledger merge order is not time order, so selection is
+            # by token — tokens ARE the time order).
+            live_tok = max(
+                (t for t in grants.get(key, {}) if t not in tombs.get(key, set())),
+                default=None,
+            )
+            st = self._key_state(shard, key)
+            snap = p.counts.as_tuple()
+            writes: List[tuple] = []
+            action = "reset"
+            try:
+                shard.alock.lock(p)
+                try:
+                    now = self.clock()
+                    _holder, (etok, readers, eexp), fence, _barrier = \
+                        self._read_key_state(p, shard, st)
+                    lmax = ledger_max[key]
+                    word_live = _FREE_AT < eexp and now < eexp
+                    if etok == fence and fence >= lmax:
+                        action = "intact"  # registers survived the restart
+                    elif (live_tok is not None and etok == live_tok
+                          and word_live and fence <= etok and etok >= lmax):
+                        # The word is authoritative for a ledger-live lease;
+                        # only the fence register lagged.  Re-seed it from
+                        # the word — the lease stays reclaimable.
+                        writes = [("write", st.fence, etok)]
+                        action = "fence_repaired"
+                    else:
+                        nf = max(fence, etok, lmax) + fence_slack
+                        packed = (etok, readers, eexp)
+                        # CAS, not write (the word is CAS-only: a CS-free
+                        # shared join can land between read and commit);
+                        # a lost race re-reads and retries — the joiner
+                        # reused the same untrusted generation, which is
+                        # exactly what the reset must displace.
+                        for _ in range(_FAST_ATTEMPTS):
+                            if self.mem.auto_cas(
+                                p, st.expires, packed, (nf, 0, _FREE_AT),
+                            ) == packed:
+                                writes = [
+                                    ("write", st.fence, nf),
+                                    ("write", st.holder, _NO_HOLDER),
+                                    ("write", st.intent, _FREE_AT),
+                                ]
+                                break
+                            packed = self.mem.auto_read(p, st.expires)
+                            self.mem.yield_point()
+                finally:
+                    shard.alock.unlock(p, piggyback=writes or None)
+            finally:
+                self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
+            report[action] += 1
+        with shard._meta:
+            shard.reconstructions += sum(report.values())
+            shard.reconstruct_resets += report["reset"]
+        return report
 
     # --------------------------------------------------------------- batches
     def batch_order(self, keys: Iterable[str]) -> List[str]:
@@ -1094,6 +1431,12 @@ class ShardedLockTable:
                             )
                         self.sleep(poll)
                 i = j
+                if i < n:
+                    # Between two shard groups: a prefix of the batch is
+                    # held; death here abandons it under a dead pid (the
+                    # recoverable client's dangling intents drive the
+                    # orphan probe on restart).
+                    self._crash_point("batch.mid", p)
         except TimeoutError:
             for lease in held:
                 self.release(p, lease)
@@ -1328,6 +1671,15 @@ class ShardedLockTable:
                     "downgrades": shard.downgrades,
                     "intent_blocks": shard.intent_blocks,
                     "repairs": shard.repairs,
+                    "reclaims": shard.reclaims,
+                    "reclaim_fast": shard.reclaim_fast,
+                    "reclaim_slow": shard.reclaim_slow,
+                    "reclaim_shared": shard.reclaim_shared,
+                    "reclaim_rejects": shard.reclaim_rejects,
+                    "orphan_probes": shard.orphan_probes,
+                    "orphan_adopts": shard.orphan_adopts,
+                    "reconstructions": shard.reconstructions,
+                    "reconstruct_resets": shard.reconstruct_resets,
                     "local": shard.stats[LOCAL].snapshot(),
                     "remote": shard.stats[REMOTE].snapshot(),
                     "shared_local":

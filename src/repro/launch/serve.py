@@ -29,7 +29,7 @@ import numpy as np
 
 from ..compat import set_mesh
 from ..configs import ShapeConfig, get_config
-from ..coord import CoordinationService, LeaseMode
+from ..coord import CoordinationService, LeaseMode, RecoverableClient
 from ..data import SyntheticLMDataset
 from ..models import Model, input_specs
 from .mesh import make_mesh
@@ -57,6 +57,17 @@ class BatchAdmission:
     it (:meth:`quiesce`): the table's writer-intent barrier stops new joins,
     the cohort drains within one TTL, and readers resume the moment the
     maintenance lease is released.
+
+    **Named workers and crash recovery**: a server thread that admits under a
+    ``worker`` name goes through a ledgered
+    :class:`~repro.coord.RecoverableClient`, so every slot admission leaves a
+    durable trail.  When a worker thread dies mid-batch and its supervisor
+    starts a replacement, the new thread calls :meth:`recover` with the same
+    name: the predecessor's ledger replays and every still-valid slot lease
+    is *reclaimed* via the fencing-checked CAS — the replacement resumes the
+    batch (same slot, same fencing token) instead of waiting out the TTL or
+    double-granting capacity.  Anonymous admissions (no ``worker``) keep the
+    bare fast path.
     """
 
     def __init__(self, num_slots: int = 4, ttl: float = 30.0,
@@ -74,6 +85,11 @@ class BatchAdmission:
         self.read_slots = read_slots
         self.ttl = ttl
         self._tls = threading.local()
+        # Ledgered clients by worker name (the identity that survives a
+        # thread death).  A name is bound to one live thread at a time;
+        # rebinding happens through recover().
+        self._workers: Dict[str, RecoverableClient] = {}
+        self._wlock = threading.Lock()
 
     def _proc(self):
         # One coordination Process per server thread: the MCS queue keys its
@@ -84,7 +100,31 @@ class BatchAdmission:
             p = self._tls.p = self.svc.host_process(0)
         return p
 
-    def admit(self, timeout: Optional[float] = None):
+    def _worker(self, worker: str) -> RecoverableClient:
+        with self._wlock:
+            rc = self._workers.get(worker)
+            if rc is None:
+                rc = self._workers[worker] = self.svc.recoverable(
+                    f"serve/{worker}", self._proc())
+            return rc
+
+    def recover(self, worker: str):
+        """Crash-restart re-entry for a named worker thread.
+
+        The replacement thread (same ``worker`` name, fresh coordination
+        process) replays its predecessor's ledger and reclaims every slot
+        lease that is still valid — fencing-checked, so a lease the table
+        already re-granted comes back as lost, never double-held.  Returns
+        the reclaimed leases; the worker resumes those batches (or
+        ``complete``\\ s them) under the original fencing tokens.
+        """
+        client, reclaimed = self.svc.restart(f"serve/{worker}", self._proc())
+        with self._wlock:
+            self._workers[worker] = client
+        return reclaimed
+
+    def admit(self, timeout: Optional[float] = None,
+              worker: Optional[str] = None):
         """Take an EXCLUSIVE lease on any free write slot (round-robin scan,
         then block).
 
@@ -92,13 +132,20 @@ class BatchAdmission:
         clock/sleep pair, so an admission gate over a sim-backed (or
         fake-clock) table times out in that table's time base instead of
         wall time.
+
+        With a ``worker`` name the admission is ledgered (see
+        :meth:`recover`); anonymous admissions take the bare path.
         """
         clock, sleep = self.svc.table.clock, self.svc.table.sleep
         deadline = None if timeout is None else clock() + timeout
+        rc = self._worker(worker) if worker is not None else None
         while True:
             for s in range(self.num_slots):
-                lease = self.svc.try_acquire(self._proc(), f"serve/slot{s}",
-                                             self.ttl)
+                key = f"serve/slot{s}"
+                if rc is not None:
+                    lease = rc.try_acquire(key, self.ttl)
+                else:
+                    lease = self.svc.try_acquire(self._proc(), key, self.ttl)
                 if lease is not None:
                     return lease
             if deadline is not None and clock() > deadline:
@@ -153,7 +200,7 @@ class BatchAdmission:
                 raise TimeoutError(f"read lane {lane} not drained in {timeout}s")
             sleep(0.002)  # the drain barrier is armed; readers are leaving
 
-    def keepalive(self, lease):
+    def keepalive(self, lease, worker: Optional[str] = None):
         """Renew mid-batch (call between prefill and decode, or per chunk).
 
         Rides the lock table's renewal fast path: one fencing-token-checked
@@ -162,7 +209,10 @@ class BatchAdmission:
         simulated RDMA operations (``stats()['fast_renews']`` counts the
         fast-path hits; ``local_rdma_ops`` stays 0).
         """
-        renewed = self.svc.renew(self._proc(), lease)
+        if worker is not None:
+            renewed = self._worker(worker).renew(lease)
+        else:
+            renewed = self.svc.renew(self._proc(), lease)
         if renewed is None:
             raise RuntimeError(
                 f"admission lease on {lease.key} lost (token {lease.token}); "
@@ -170,7 +220,9 @@ class BatchAdmission:
             )
         return renewed
 
-    def complete(self, lease) -> bool:
+    def complete(self, lease, worker: Optional[str] = None) -> bool:
+        if worker is not None:
+            return self._worker(worker).release(lease)
         return self.svc.release(self._proc(), lease)
 
     def stats(self) -> Dict:
@@ -189,6 +241,12 @@ class BatchAdmission:
             "expirations": sum(r["expirations"] for r in rows),
             "fast_renews": sum(r["fast_renews"] for r in rows),
             "fast_releases": sum(r["fast_releases"] for r in rows),
+            "reclaims": sum(r["reclaims"] for r in rows),
+            "reclaim_fast": sum(r["reclaim_fast"] for r in rows),
+            "reclaim_rejects": sum(r["reclaim_rejects"] for r in rows),
+            "orphan_probes": sum(r["orphan_probes"] for r in rows),
+            "orphan_adopts": sum(r["orphan_adopts"] for r in rows),
+            "workers": len(self._workers),
             "local_rdma_ops": totals[0].rdma_ops,
             "local_ops": totals[0].local_ops,
         }

@@ -66,7 +66,7 @@ from __future__ import annotations
 import heapq
 import itertools
 import random
-from typing import Callable, Generator, List, Optional, Tuple
+from typing import Callable, Dict, Generator, List, Optional, Tuple
 
 __all__ = ["SimEngine", "SimLivelockError", "VirtualClock"]
 
@@ -119,8 +119,12 @@ class SimEngine:
         self._live = 0
         self.events = 0   # task steps dispatched
         self.spins = 0    # total yield_point invocations
+        self.kills = 0    # exceptions delivered via kill()
         self._step_spins = 0
         self._step_slept = 0.0
+        # Pending crash deliveries: task -> exception, thrown into the task
+        # at its next dispatch (see kill()).
+        self._interrupts: Dict[Generator, BaseException] = {}
 
     # ------------------------------------------------------------- scheduling
     def spawn(self, task: Generator, delay: float = 0.0) -> Generator:
@@ -139,6 +143,22 @@ class SimEngine:
         heapq.heappush(
             self._heap, (at, self._rng.random(), next(self._seq), task)
         )
+
+    def kill(self, task: Generator, exc: BaseException) -> None:
+        """Deliver ``exc`` into ``task`` at its **next dispatch** (thrown at
+        the yield where the task is parked), modeling a process crash.
+
+        Delivery-at-dispatch keeps the crash deterministic and honest: a
+        step is atomic, so a process cannot die *mid-step* from the
+        outside — it dies the next time it would have acted, which is what
+        a silently-dead host looks like to the rest of the cluster.  (For
+        crashes *inside* a protocol window, use the synchronous
+        ``FaultInjector`` crash points instead — the two compose.)  The
+        task must catch the exception to survive as a restarted client;
+        an uncaught delivery propagates out of :meth:`run`, turning an
+        unhandled crash into a visible test failure.  Killing the same
+        task again before it runs replaces the pending exception."""
+        self._interrupts[task] = exc
 
     @property
     def live_tasks(self) -> int:
@@ -222,8 +242,13 @@ class SimEngine:
             dispatched += 1
             self._step_spins = 0
             self._step_slept = 0.0
+            exc = self._interrupts.pop(task, None)
             try:
-                delay = next(task)
+                if exc is not None:
+                    self.kills += 1
+                    delay = task.throw(exc)
+                else:
+                    delay = next(task)
             except StopIteration:
                 self._live -= 1
                 continue

@@ -42,6 +42,18 @@ Workloads (mirroring, then extending, the threaded bench):
   exclusive grant.  The run records each writer wait in virtual time and
   asserts the drain protocol bounds it (a saturating reader flood cannot
   starve a queued writer past ~a TTL).
+* ``crash_restart`` — the recovery workload: ledger-writing clients
+  (:class:`~repro.coord.RecoverableClient`) run a seeded mix of single-key,
+  batch, and shared/upgrade transactions over a hot key set while a
+  **crash reaper** kills every client task on a seeded schedule of hosts
+  (:meth:`~repro.sim.SimEngine.kill` delivers :class:`ClientCrash` at the
+  victims' next dispatch).  Each victim restarts after ``restart_delay``
+  and — with ``reclaim=True`` — replays its ledger and reclaims its
+  still-valid leases via the fencing-checked CAS; with ``reclaim=False``
+  it rejoins amnesiac and the run measures the full-TTL wedge instead
+  (the before/after pair the recovery benchmark reports).  Per-lease
+  recovery latencies and per-restart recovery events are recorded in
+  virtual time; fencing-token monotonicity is asserted throughout.
 """
 
 from __future__ import annotations
@@ -52,7 +64,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
-from repro.coord import ShardedLockTable
+from repro.coord import (ClientCrash, FaultInjector, LedgerStore,
+                         RecoverableClient, ShardedLockTable)
 from repro.coord.table import EXCLUSIVE, LOCAL, REMOTE, SHARED, LeaseMode
 
 from .engine import SimEngine
@@ -62,13 +75,21 @@ __all__ = ["SIM_WORKLOADS", "KEYS_PER_HOST", "SimResult", "jain",
            "keys_by_home", "run_lock_table_sim"]
 
 SIM_WORKLOADS = ("home", "uniform", "zipfian", "failover", "read_heavy",
-                 "reader_flood")
+                 "reader_flood", "crash_restart")
 
 KEYS_PER_HOST = 8   # keyspace density; shared with the threaded bench
 HOLD = 10e-6        # virtual seconds a lease is held
 THINK = 5e-6        # virtual think time between transactions
 BACKOFF = 20e-6     # initial reject backoff (doubles, capped)
 BACKOFF_CAP = 2e-3
+
+
+def _pct(xs: List[float], q: float) -> float:
+    """The q-quantile (nearest-rank) of ``xs``; 0.0 for an empty list."""
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    return ys[min(len(ys) - 1, int(q * len(ys)))]
 
 
 def jain(xs: List[int]) -> float:
@@ -92,7 +113,9 @@ class _RunState:
 
     __slots__ = ("per_client", "total", "target", "last_token",
                  "token_regressions", "zombie_renews",
-                 "grants_by_mode", "writer_waits")
+                 "grants_by_mode", "writer_waits",
+                 "crashes", "reclaims", "recovery_latencies",
+                 "recovery_events")
 
     def __init__(self, nclients: int, target: int):
         self.per_client = [0] * nclients
@@ -103,6 +126,12 @@ class _RunState:
         self.zombie_renews = 0
         self.grants_by_mode = {SHARED: 0, EXCLUSIVE: 0}
         self.writer_waits: List[float] = []
+        # Crash-recovery accounting (crash_restart workload).
+        self.crashes = 0
+        self.reclaims = 0
+        self.recovery_latencies: List[float] = []
+        # One entry per completed restart: [client idx, leases recovered].
+        self.recovery_events: List[List[int]] = []
 
     def done(self) -> bool:
         return self.total >= self.target
@@ -117,6 +146,13 @@ class _RunState:
             self.token_regressions += 1
         else:
             self.last_token[lease.key] = lease.token
+
+    def recovered(self, idx: int, latency: float) -> None:
+        """One lease recovered after a restart (reclaimed, or re-acquired
+        past the wedge in the amnesiac baseline) — NOT a grant: a reclaim
+        keeps its token, so it must not feed the monotonicity check."""
+        self.reclaims += 1
+        self.recovery_latencies.append(latency)
 
 
 # ------------------------------------------------------------- key pickers
@@ -279,6 +315,129 @@ def _failover_client(table, p, rng, pick, st, idx, ttl, crash_prob):
         yield THINK
 
 
+def _recoverable_client(mem, table, store, host, idx, rng, pick, st, ttl,
+                        restart_delay, reclaim):
+    """The crash_restart client: a ledger-writing mix of single-key, batch
+    and shared/upgrade transactions, structured as a state machine whose
+    every ``yield`` sits inside the ``try`` — a :class:`ClientCrash` can
+    land at ANY parked yield (the reaper) or synchronously inside a table
+    call (a FaultInjector crash point) and is always funneled into the
+    crashed state.  Restart either replays-and-reclaims (``reclaim=True``)
+    or rejoins amnesiac and measures the wedge (``reclaim=False``)."""
+    clock = table.clock
+    p = mem.spawn(host)
+    rc = RecoverableClient(table, p, store.ledger(f"client/{idx}"))
+    hold = min(HOLD, ttl / 8)
+    backoff = ttl / 4
+    state = "run"   # "run" | "down" | ("wedge", t0, keys)
+    while True:
+        try:
+            if st.done():
+                return
+            if state == "down":
+                yield restart_delay  # the host is dark
+                p = mem.spawn(host)  # a fresh incarnation (new pid)
+                if reclaim:
+                    t0 = clock()
+                    got = rc.restart(p)
+                    now = clock()
+                    for lease in got:
+                        st.recovered(idx, now - t0)
+                        rc.release(lease)  # resume with a clean slate
+                    st.recovery_events.append([idx, len(got)])
+                    state = "run"
+                else:
+                    # Amnesiac baseline: the restarted client must wait
+                    # out its dead incarnation's leases like a stranger.
+                    # The ledger is used only to MEASURE (which keys the
+                    # corpse still holds), never to recover.
+                    t0 = clock()
+                    view = rc.ledger.replay()
+                    keys = sorted(
+                        k for k, r in view.live.items()
+                        if r.mode == int(EXCLUSIVE) and r.expires_at > t0)
+                    rc.adopt_process(p)
+                    if keys:
+                        state = ("wedge", t0, keys)
+                    else:
+                        st.recovery_events.append([idx, 0])
+                        state = "run"
+                continue
+            if isinstance(state, tuple):
+                _tag, t0, keys = state
+                lease = table.try_acquire(p, keys[0], ttl)
+                if lease is not None:
+                    st.recovered(idx, clock() - t0)
+                    table.release(p, lease)
+                    keys.pop(0)
+                    if not keys:
+                        st.recovery_events.append([idx, 0])
+                        state = "run"
+                else:
+                    yield (ttl / 16) * (0.5 + rng.random())
+                continue
+            # ----- normal operation: a mix that exercises every window
+            r = rng.random()
+            if r < 0.15:  # multi-key batch (mid-batch crash window)
+                keys = sorted({pick(rng) for _ in range(3)})
+                try:
+                    # The timeout must stay well inside the TTL: a batch
+                    # that polls past it returns leases already aging out,
+                    # and nothing valid would be left to crash-recover.
+                    leases = rc.acquire_batch(keys, ttl, timeout=ttl / 2)
+                except TimeoutError:
+                    yield backoff * (0.5 + rng.random())
+                    continue
+                for lease in leases:
+                    st.granted(idx, lease)
+                yield hold
+                for lease in leases:
+                    rc.release(lease)
+                yield THINK
+            elif r < 0.40:  # shared join, sometimes upgraded
+                lease = rc.try_acquire(pick(rng), ttl, mode=SHARED)
+                if lease is None:
+                    yield backoff * (0.5 + rng.random())
+                    continue
+                st.granted(idx, lease)
+                yield hold
+                if rng.random() < 0.25:
+                    up = rc.upgrade(lease)
+                    if up is not None:
+                        st.granted(idx, up)
+                        lease = up
+                        yield hold
+                rc.release(lease)
+                yield THINK
+            else:  # single exclusive with a renewal (the failover shape)
+                lease = rc.try_acquire(pick(rng), ttl)
+                if lease is None:
+                    yield backoff * (0.5 + rng.random())
+                    continue
+                st.granted(idx, lease)
+                yield hold
+                renewed = rc.renew(lease)
+                if renewed is not None:
+                    yield hold
+                    rc.release(renewed)
+                yield THINK
+        except ClientCrash:
+            st.crashes += 1
+            state = "down"
+
+
+def _crash_reaper(engine, schedule, tasks_by_host):
+    """Kills every client task of each scheduled host at its crash time.
+    The schedule is seeded data, so two same-seed runs kill the same tasks
+    at the same instants — the determinism the CI crash gate diffs."""
+    for t, host in schedule:
+        dt = t - engine.clock.now
+        if dt > 0:
+            yield dt
+        for task in tasks_by_host[host]:
+            engine.kill(task, ClientCrash("host.crash", pid=host))
+
+
 # ------------------------------------------------------------------ runner
 @dataclass
 class SimResult:
@@ -320,6 +479,19 @@ class SimResult:
     writer_grants: int
     writer_max_wait: float
     writer_mean_wait: float
+    crashes: int
+    kills: int
+    reclaims: int
+    recovery_p50: float
+    recovery_p99: float
+    recovery_max: float
+    recovery_events: List[List[int]]
+    reclaim_fast: int
+    reclaim_slow: int
+    reclaim_shared: int
+    reclaim_rejects: int
+    orphan_probes: int
+    orphan_adopts: int
     cost: Dict[str, Dict[str, int]]
     mode_cost: Dict[str, Dict[str, int]]
     events: int
@@ -349,6 +521,14 @@ def run_lock_table_sim(
     home_frac: float = 0.8,
     shared_reads: bool = True,
     hold: float = HOLD,
+    hot_keys: Optional[int] = None,
+    failover_ttl: float = 300e-6,
+    fault: Optional[FaultInjector] = None,
+    crash_hosts: int = 8,
+    crash_warmup: Optional[float] = None,
+    crash_spacing: Optional[float] = None,
+    restart_delay: Optional[float] = None,
+    reclaim: bool = True,
     max_events: Optional[int] = None,
 ) -> SimResult:
     """Run one workload to ``total_ops`` granted leases; fully deterministic.
@@ -369,9 +549,14 @@ def run_lock_table_sim(
     table = ShardedLockTable(
         mem, num_shards=num_shards or 2 * num_hosts,
         clock=engine.clock, sleep=engine.sleep_inline, name=f"sim{seed}",
+        fault=fault,
     )
     if ttl is None:
-        ttl = 300e-6 if workload in ("failover", "reader_flood") else 1.0
+        # The short-lease workloads share one tunable TTL (``failover_ttl``)
+        # instead of a hardcoded constant, so the recovery sweeps can scale
+        # lease lifetime without forking the workload.
+        short = ("failover", "reader_flood", "crash_restart")
+        ttl = failover_ttl if workload in short else 1.0
 
     universe = [f"k/{i}" for i in range(num_hosts * keys_per_host)]
     if workload == "home":
@@ -400,17 +585,33 @@ def run_lock_table_sim(
             return pick
     elif workload == "reader_flood":
         pick_for = None  # flood clients share one literal key
-    else:  # failover: everyone storms a small hot set
-        hot = universe[: max(4, num_hosts)]
+    else:  # failover / crash_restart: everyone storms a small hot set
+        # The hot-set size is a workload parameter (``hot_keys``), not a
+        # baked-in constant — the recovery sweep narrows it to sharpen
+        # contention on the crashed holders' keys.
+        hot = universe[: (hot_keys or max(4, num_hosts))]
         pick_for = lambda h: lambda rng: rng.choice(hot)  # noqa: E731
 
     nclients = num_hosts * clients_per_host
     st = _RunState(nclients, total_ops)
     flood_key = universe[0]
+    store = LedgerStore()
+    if restart_delay is None:
+        restart_delay = ttl / 4
+    tasks_by_host: Dict[int, List] = {h: [] for h in range(num_hosts)}
     for idx in range(nclients):
         host = idx // clients_per_host
-        p = mem.spawn(host)
         rng = random.Random(1_000_003 * seed + idx)
+        if workload == "crash_restart":
+            # The recoverable client spawns its own Process (and respawns
+            # one per restart); the reaper needs the task handle to kill.
+            task = _recoverable_client(mem, table, store, host, idx, rng,
+                                       pick_for(host), st, ttl,
+                                       restart_delay, reclaim)
+            tasks_by_host[host].append(task)
+            engine.spawn(task, delay=idx * 1e-7)
+            continue
+        p = mem.spawn(host)
         if workload == "failover":
             task = _failover_client(table, p, rng, pick_for(host), st, idx,
                                     ttl, crash_prob)
@@ -426,6 +627,17 @@ def run_lock_table_sim(
             task = _acquire_release_client(table, p, rng, pick_for(host), st,
                                            idx, ttl)
         engine.spawn(task, delay=idx * 1e-7)  # deterministic arrival stagger
+
+    if workload == "crash_restart":
+        # The crash schedule is seeded data, independent of the engine RNG:
+        # host choice and crash instants depend only on the run seed.
+        crash_rng = random.Random(0xC0FFEE * (seed + 1))
+        victims = crash_rng.sample(range(num_hosts),
+                                   min(crash_hosts, num_hosts))
+        warmup = crash_warmup if crash_warmup is not None else 20 * ttl
+        spacing = crash_spacing if crash_spacing is not None else ttl / 2
+        schedule = [(warmup + i * spacing, h) for i, h in enumerate(victims)]
+        engine.spawn(_crash_reaper(engine, schedule, tasks_by_host))
 
     engine.run(stop=st.done,
                max_events=max_events or (200 * total_ops + 500_000))
@@ -515,6 +727,20 @@ def run_lock_table_sim(
         writer_max_wait=max(writer_waits) if writer_waits else 0.0,
         writer_mean_wait=(sum(writer_waits) / len(writer_waits)
                           if writer_waits else 0.0),
+        crashes=st.crashes,
+        kills=engine.kills,
+        reclaims=st.reclaims,
+        recovery_p50=_pct(st.recovery_latencies, 0.50),
+        recovery_p99=_pct(st.recovery_latencies, 0.99),
+        recovery_max=(max(st.recovery_latencies)
+                      if st.recovery_latencies else 0.0),
+        recovery_events=st.recovery_events,
+        reclaim_fast=sum(r["reclaim_fast"] for r in rows),
+        reclaim_slow=sum(r["reclaim_slow"] for r in rows),
+        reclaim_shared=sum(r["reclaim_shared"] for r in rows),
+        reclaim_rejects=sum(r["reclaim_rejects"] for r in rows),
+        orphan_probes=sum(r["orphan_probes"] for r in rows),
+        orphan_adopts=sum(r["orphan_adopts"] for r in rows),
         cost={"local": vars(totals[LOCAL]).copy(),
               "remote": vars(totals[REMOTE]).copy()},
         mode_cost={

@@ -1,0 +1,62 @@
+"""Fault-injection matrix: kill a holder at EVERY labeled crash point and
+assert the stack recovers with zero fencing violations, zero zombie grants,
+and recovery latency under the TTL — all in virtual time.
+
+The sim runner itself raises on token regressions and zombie renews, so a
+clean return already certifies fencing; the assertions below pin the
+counters explicitly so a silently-weakened runner cannot pass.
+"""
+
+import json
+
+import pytest
+
+from repro.coord import CRASH_POINTS, FaultInjector
+from repro.sim import run_lock_table_sim
+
+TTL = 1e-3
+CFG = dict(num_hosts=8, clients_per_host=4, total_ops=3000, seed=5,
+           failover_ttl=TTL, crash_warmup=2e-3, crash_spacing=TTL / 8,
+           restart_delay=TTL / 8)
+
+# upgrade.mid is the rarest window (~19 arrivals in this config); keep its
+# trigger early so the one-shot reliably fires.
+_NTH = {"upgrade.mid": 3}
+
+
+@pytest.mark.parametrize("label", CRASH_POINTS)
+def test_holder_killed_at_crash_point_recovers(label):
+    fi = FaultInjector().at(label, nth=_NTH.get(label, 5))
+    r = run_lock_table_sim("crash_restart", fault=fi, **CFG)
+    assert fi.fired, f"crash point {label} never armed in this workload"
+    assert all(lab == label for lab, _pid, _n in fi.fired)
+    # Fencing safety: no token ever moved backwards, no fenced-out zombie
+    # renewed past its horizon.
+    assert r.token_regressions == 0
+    assert r.zombie_renews == 0
+    # Liveness: injected crashes on top of the host-crash schedule still
+    # leave the table serving grants, and restarted holders re-enter by
+    # reclaiming inside the TTL instead of wedging on expiry.
+    assert r.ops > 0 and r.crashes > 0
+    if r.reclaims:
+        assert r.recovery_max < TTL
+
+
+def test_matrix_runs_are_seed_deterministic():
+    label = "release.pre_cas"
+    rows = []
+    for _ in range(2):
+        fi = FaultInjector().at(label, nth=5)
+        r = run_lock_table_sim("crash_restart", fault=fi, **CFG)
+        rows.append((json.dumps(r.row(), sort_keys=True), tuple(fi.fired)))
+    assert rows[0] == rows[1]
+
+
+def test_seeded_crash_storm_stays_safe():
+    # Beyond one-shots: a Bernoulli storm over every label at once.
+    fi = FaultInjector.seeded(21, prob=0.002)
+    r = run_lock_table_sim("crash_restart", fault=fi, **CFG)
+    assert fi.fired  # the storm actually bit
+    assert r.token_regressions == 0 and r.zombie_renews == 0
+    if r.reclaims:
+        assert r.recovery_max < TTL

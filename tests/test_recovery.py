@@ -1,0 +1,426 @@
+"""Crash-recoverable lease stack: ledger replay, reclaim, orphan probes,
+shard reconstruction, engine kill delivery, and the recovery workload."""
+
+import json
+
+import pytest
+
+from repro.core import AsymmetricMemory
+from repro.coord import (CRASH_POINTS, ClientCrash, CoordinationService,
+                         FaultInjector, LeaseLedger, LedgerStore, LeaseMode,
+                         RecoverableClient, ShardedLockTable, replay_records)
+from repro.sim import SimEngine, run_lock_table_sim
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def make_stack(num_hosts=4, num_shards=8, clock=None, fault=None):
+    mem = AsymmetricMemory(num_hosts)
+    table = ShardedLockTable(mem, num_shards=num_shards, clock=clock,
+                             fault=fault)
+    return mem, table, LedgerStore()
+
+
+# ------------------------------------------------------------------- ledger
+def test_replay_folds_grant_renew_release():
+    led = LeaseLedger("c")
+    led.append("session", pid=1)
+    led.append("intent", key="a", ttl=5.0, pid=1)
+    led.append("grant", key="a", shard=0, token=3, mode=1, expires_at=10.0,
+               ttl=5.0, pid=1)
+    led.append("renew", key="a", shard=0, token=3, mode=1, expires_at=15.0,
+               ttl=5.0, pid=1)
+    view = led.replay()
+    assert view.live["a"].expires_at == 15.0
+    assert "a" not in view.intents
+    assert view.pids == [1]
+    led.append("release", key="a", token=3)
+    assert led.replay().live == {}
+
+
+def test_replay_renew_for_other_token_is_ignored():
+    led = LeaseLedger("c")
+    led.append("grant", key="a", token=3, expires_at=10.0)
+    led.append("renew", key="a", token=2, expires_at=99.0)  # stale stream
+    assert led.replay().live["a"].expires_at == 10.0
+
+
+def test_replay_release_for_other_token_keeps_live():
+    led = LeaseLedger("c")
+    led.append("grant", key="a", token=3, expires_at=10.0)
+    led.append("release", key="a", token=2)
+    assert led.replay().live["a"].token == 3
+
+
+def test_replay_is_idempotent_and_duplication_tolerant():
+    led = LeaseLedger("c")
+    led.append("session", pid=1)
+    led.append("intent", key="a", ttl=5.0, pid=1)
+    led.append("grant", key="a", token=1, expires_at=10.0, ttl=5.0, pid=1)
+    led.append("intent", key="b", ttl=5.0, pid=1)
+    v1, v2 = led.replay(), led.replay()
+    assert v1.live.keys() == v2.live.keys()
+    assert v1.intents.keys() == v2.intents.keys()
+    # Crash-retry append: re-appending the most recent record changes nothing.
+    recs = list(led.records)
+    dup = replay_records(recs + [recs[-1]])
+    assert dup.live.keys() == v1.live.keys()
+    assert dup.intents.keys() == v1.intents.keys()
+    assert dup.pids == v1.pids
+
+
+def test_ledger_jsonl_round_trip(tmp_path):
+    led = LeaseLedger("c")
+    led.append("session", pid=7)
+    led.append("grant", key="x", shard=2, token=9, mode=0, expires_at=1.5,
+               ttl=0.5, pid=7)
+    path = str(tmp_path / "ledger.jsonl")
+    led.dump_jsonl(path)
+    back = LeaseLedger.load_jsonl(path, name="c")
+    assert back.records == led.records
+    # The reloaded ledger appends after the highest persisted seq.
+    rec = back.append("release", key="x", token=9)
+    assert rec.seq == led.records[-1].seq + 1
+
+
+def test_ledger_rejects_unknown_op():
+    with pytest.raises(ValueError):
+        LeaseLedger("c").append("frobnicate")
+
+
+# ------------------------------------------------------------------ reclaim
+def test_reclaim_fast_path_keeps_token_and_retimes():
+    clock = FakeClock()
+    mem, table, store = make_stack(clock=clock)
+    p1 = mem.spawn(0)
+    rc = RecoverableClient(table, p1, store.ledger("c"))
+    lease = rc.try_acquire("k", ttl=10.0)
+    clock.advance(4.0)  # crash; restart well inside the lease
+    got = rc.restart(mem.spawn(0))
+    assert [l.key for l in got] == ["k"]
+    assert got[0].token == lease.token
+    assert got[0].holder_pid == p1.pid  # grant identity survives restart
+    assert got[0].expires_at == clock() + 10.0
+    rows = table.telemetry()
+    assert sum(r["reclaim_fast"] for r in rows) == 1
+    assert sum(r["reclaim_rejects"] for r in rows) == 0
+
+
+def test_reclaim_word_probe_covers_stale_low_witness():
+    # A renewal whose CAS landed but whose ledger record died with the
+    # client: the ledger witness expires EARLIER than the word.  The fast
+    # CAS misses; the CS-free word probe must still reclaim.
+    clock = FakeClock()
+    mem, table, store = make_stack(clock=clock)
+    p1 = mem.spawn(0)
+    rc = RecoverableClient(table, p1, store.ledger("c"))
+    lease = rc.try_acquire("k", ttl=10.0)
+    clock.advance(5.0)
+    assert table.renew(p1, lease) is not None  # bypass rc: record "lost"
+    clock.advance(7.0)  # ledger witness (exp t=10) is stale; word lives to 15
+    got = rc.restart(mem.spawn(0))
+    assert [l.key for l in got] == ["k"]
+    assert got[0].token == lease.token
+    rows = table.telemetry()
+    assert sum(r["reclaim_slow"] for r in rows) == 1
+
+
+def test_reclaim_rejects_expired_lease():
+    clock = FakeClock()
+    mem, table, store = make_stack(clock=clock)
+    rc = RecoverableClient(table, mem.spawn(0), store.ledger("c"))
+    rc.try_acquire("k", ttl=10.0)
+    clock.advance(11.0)  # past the word's own expiry: dead, no resurrection
+    got = rc.restart(mem.spawn(0))
+    assert got == []
+    assert "k" not in rc.ledger.replay().live  # tombstoned as lost
+    rows = table.telemetry()
+    assert sum(r["reclaim_rejects"] for r in rows) == 1
+    assert sum(r["reclaims"] for r in rows) == 0
+
+
+def test_reclaim_rejects_regranted_key_and_never_wedges_successor():
+    clock = FakeClock()
+    mem, table, store = make_stack(clock=clock)
+    rc = RecoverableClient(table, mem.spawn(0), store.ledger("c"))
+    rc.try_acquire("k", ttl=10.0)
+    clock.advance(11.0)
+    stranger = mem.spawn(1)
+    s_lease = table.try_acquire(stranger, "k", ttl=10.0)
+    assert s_lease is not None  # expired: re-granted with a larger token
+    got = rc.restart(mem.spawn(0))
+    assert got == []  # fencing: the world moved past our grant
+    assert table.renew(stranger, s_lease) is not None  # successor unharmed
+
+
+def test_shared_reclaim_readopts_cohort_slot():
+    clock = FakeClock()
+    mem, table, store = make_stack(clock=clock)
+    rc = RecoverableClient(table, mem.spawn(0), store.ledger("c"))
+    other = mem.spawn(1)
+    mine = rc.try_acquire("k", ttl=10.0, mode=LeaseMode.SHARED)
+    assert table.try_acquire(other, "k", ttl=10.0,
+                             mode=LeaseMode.SHARED) is not None
+    clock.advance(4.0)
+    p2 = mem.spawn(0)
+    got = rc.restart(p2)
+    assert [l.key for l in got] == ["k"]
+    assert got[0].mode == LeaseMode.SHARED
+    assert got[0].token == mine.token  # same reader generation
+    assert got[0].holder_pid == p2.pid  # slots are owned per live process
+    # The re-adopted slot is a real slot: release decrements the cohort.
+    assert rc.release(got[0])
+    rows = table.telemetry()
+    assert sum(r["reclaim_shared"] for r in rows) == 1
+
+
+def test_shared_reclaim_rejects_past_slot_horizon():
+    clock = FakeClock()
+    mem, table, store = make_stack(clock=clock)
+    rc = RecoverableClient(table, mem.spawn(0), store.ledger("c"))
+    rc.try_acquire("k", ttl=10.0, mode=LeaseMode.SHARED)
+    clock.advance(11.0)  # the slot died with its horizon
+    assert rc.restart(mem.spawn(0)) == []
+
+
+# ------------------------------------------------------------ orphan probes
+def test_orphan_probe_adopts_unrecorded_grant():
+    # Crash between the grant CAS and the grant record: the lease exists
+    # under a dead pid with no ledger witness beyond the dangling intent.
+    fi = FaultInjector().at("grant.pre_ledger")
+    clock = FakeClock()
+    mem = AsymmetricMemory(4)
+    table = ShardedLockTable(mem, num_shards=8, clock=clock, fault=fi)
+    store = LedgerStore()
+    p1 = mem.spawn(0)
+    rc = RecoverableClient(table, p1, store.ledger("c"))
+    with pytest.raises(ClientCrash):
+        rc.try_acquire("k", ttl=10.0)
+    view = rc.ledger.replay()
+    assert view.live == {} and "k" in view.intents
+    clock.advance(2.0)
+    p2 = mem.spawn(0)
+    got = rc.restart(p2)
+    assert [l.key for l in got] == ["k"]
+    assert got[0].holder_pid == p2.pid  # adopted under the new incarnation
+    assert "k" not in rc.ledger.replay().intents  # intent resolved
+    rows = table.telemetry()
+    assert sum(r["orphan_adopts"] for r in rows) == 1
+
+
+def test_orphan_probe_resolves_never_granted_intent():
+    # Crash after the intent, before the CAS: the probe finds a free (or
+    # stranger-held) word and resolves the intent without adopting.
+    fi = FaultInjector().at("ledger.post_intent")
+    mem = AsymmetricMemory(4)
+    table = ShardedLockTable(mem, num_shards=8, fault=fi)
+    store = LedgerStore()
+    rc = RecoverableClient(table, mem.spawn(0), store.ledger("c"))
+    with pytest.raises(ClientCrash):
+        rc.try_acquire("k", ttl=10.0)
+    got = rc.restart(mem.spawn(0))
+    assert got == []
+    assert rc.ledger.replay().intents == {}
+    rows = table.telemetry()
+    assert sum(r["orphan_probes"] for r in rows) == 1
+    assert sum(r["orphan_adopts"] for r in rows) == 0
+
+
+def test_orphan_probe_never_adopts_a_strangers_lease():
+    fi = FaultInjector().at("ledger.post_intent")
+    mem = AsymmetricMemory(4)
+    table = ShardedLockTable(mem, num_shards=8, fault=fi)
+    store = LedgerStore()
+    rc = RecoverableClient(table, mem.spawn(0), store.ledger("c"))
+    with pytest.raises(ClientCrash):
+        rc.try_acquire("k", ttl=60.0)
+    stranger = mem.spawn(1)
+    s_lease = table.try_acquire(stranger, "k", ttl=60.0)
+    assert s_lease is not None
+    got = rc.restart(mem.spawn(0))
+    assert got == []
+    assert table.renew(stranger, s_lease) is not None
+
+
+# ----------------------------------------------------------- fault injector
+def test_fault_injector_nth_and_pid_filters():
+    fi = FaultInjector().at("renew.pre_cas", nth=2, pid=7)
+    fi.crash_point("renew.pre_cas", 3)   # other pid: not counted
+    fi.crash_point("renew.pre_cas", 7)   # pid 7 arrival #1
+    with pytest.raises(ClientCrash):
+        fi.crash_point("renew.pre_cas", 7)  # arrival #2 fires
+    fi.crash_point("renew.pre_cas", 7)   # one-shot: disarmed
+    assert fi.fired == [("renew.pre_cas", 7, 3)]
+    assert fi.hits["renew.pre_cas"] == 4
+
+
+def test_fault_injector_seeded_storm_is_reproducible():
+    def storm():
+        fi = FaultInjector.seeded(11, prob=0.5)
+        for i in range(50):
+            try:
+                fi.crash_point(CRASH_POINTS[i % len(CRASH_POINTS)], i)
+            except ClientCrash:
+                pass
+        return fi.fired
+
+    assert storm() == storm()
+    assert storm()  # prob 0.5 over 50 arrivals: fires
+
+
+def test_fault_injector_rejects_unknown_label():
+    with pytest.raises(ValueError):
+        FaultInjector().at("nonsense.window")
+
+
+# --------------------------------------------------------------- engine.kill
+def test_engine_kill_delivers_at_next_dispatch():
+    engine = SimEngine(seed=0)
+    log = []
+
+    def victim():
+        while True:
+            try:
+                yield 1.0
+                log.append("step")
+            except ClientCrash:
+                log.append("crash")
+                yield 5.0  # restart pause
+
+    task = engine.spawn(victim())
+
+    def reaper():
+        yield 2.5
+        engine.kill(task, ClientCrash("host.crash"))
+
+    engine.spawn(reaper())
+    engine.run(until=20.0)
+    assert "crash" in log
+    assert engine.kills == 1
+    assert log.index("crash") == 2  # steps at t=1,2 ran before delivery
+
+
+def test_engine_kill_uncaught_propagates_out_of_run():
+    engine = SimEngine(seed=0)
+
+    def victim():
+        while True:
+            yield 1.0
+
+    task = engine.spawn(victim())
+    engine.kill(task, ClientCrash("host.crash"))
+    with pytest.raises(ClientCrash):
+        engine.run(until=10.0)
+
+
+# ------------------------------------------------- service + reconstruction
+def test_service_restart_reclaims_and_caches():
+    clock = FakeClock()
+    svc = CoordinationService(num_hosts=4, num_shards=8, clock=clock)
+    p1 = svc.host_process(0)
+    client = svc.recoverable("worker", p1)
+    lease = client.try_acquire("job", ttl=10.0)
+    clock.advance(3.0)
+    p2 = svc.host_process(0)
+    client2, reclaimed = svc.restart("worker", p2)
+    assert [l.key for l in reclaimed] == ["job"]
+    assert reclaimed[0].token == lease.token
+    assert client2.release(reclaimed[0])
+
+
+def test_reconstruct_shard_reseeds_fence_past_every_witness():
+    # Home-host death: rebuild a shard's key registers from the surviving
+    # clients' ledgers.  The reconstructed fence must exceed every token
+    # any ledger ever witnessed, so no post-reconstruction grant can reuse
+    # a token a downstream fencing check may have seen.
+    clock = FakeClock()
+    mem, table, store = make_stack(num_shards=2, clock=clock)
+    rcs = [RecoverableClient(table, mem.spawn(h % 4),
+                             store.ledger(f"c{h}")) for h in range(3)]
+    keys = [f"key-{i}" for i in range(12)]
+    max_token = {}
+    for rnd in range(3):
+        for i, rc in enumerate(rcs):
+            for key in keys[i::3]:
+                lease = rc.try_acquire(key, ttl=5.0)
+                if lease is not None:
+                    max_token[key] = max(max_token.get(key, 0), lease.token)
+                    if rnd % 2 == 0:
+                        rc.release(lease)
+        clock.advance(6.0)  # expire the held ones between rounds
+    p = mem.spawn(0)
+    for shard_index in range(table.num_shards):
+        report = table.reconstruct_shard(p, shard_index,
+                                         store.all_records())
+        assert set(report) >= {"intact", "fence_repaired", "reset"}
+    # Every key's next grant must carry a token beyond anything witnessed.
+    clock.advance(100.0)
+    g = mem.spawn(1)
+    for key in keys:
+        lease = table.try_acquire(g, key, ttl=5.0)
+        assert lease is not None
+        assert lease.token > max_token.get(key, 0)
+
+
+def test_batch_admission_worker_recovery():
+    import threading
+
+    from repro.launch.serve import BatchAdmission
+
+    adm = BatchAdmission(num_slots=2, ttl=60.0)
+    box = {}
+
+    def worker():
+        box["lease"] = adm.admit(worker="w0")
+
+    t = threading.Thread(target=worker)
+    t.start()
+    t.join()
+
+    def replacement():
+        box["reclaimed"] = adm.recover("w0")
+
+    t2 = threading.Thread(target=replacement)
+    t2.start()
+    t2.join()
+    (lease,), reclaimed = (box["lease"],), box["reclaimed"]
+    assert [l.key for l in reclaimed] == [lease.key]
+    assert reclaimed[0].token == lease.token  # resumed, not re-queued
+    assert adm.complete(reclaimed[0], worker="w0")
+    s = adm.stats()
+    assert s["reclaims"] == 1 and s["local_rdma_ops"] == 0
+
+
+# --------------------------------------------------------------- sim smoke
+def test_crash_restart_sim_is_deterministic_and_recovers():
+    cfg = dict(num_hosts=8, clients_per_host=4, total_ops=2500, seed=3,
+               failover_ttl=1e-3, crash_warmup=2e-3, crash_spacing=1e-3 / 8,
+               restart_delay=1e-3 / 8)
+    a = run_lock_table_sim("crash_restart", **cfg)
+    b = run_lock_table_sim("crash_restart", **cfg)
+    assert json.dumps(a.row(), sort_keys=True) == \
+        json.dumps(b.row(), sort_keys=True)
+    assert a.crashes > 0 and a.kills > 0
+    assert a.reclaims > 0  # restarts reclaim rather than wait out the TTL
+    assert a.recovery_max < 1e-3  # every recovery beat the TTL wedge
+    assert a.token_regressions == 0 and a.zombie_renews == 0
+
+
+def test_crash_restart_amnesiac_baseline_pays_the_wedge():
+    cfg = dict(num_hosts=8, clients_per_host=4, total_ops=2500, seed=3,
+               failover_ttl=1e-3, crash_warmup=2e-3, crash_spacing=1e-3 / 8,
+               restart_delay=1e-3 / 8)
+    rec = run_lock_table_sim("crash_restart", reclaim=True, **cfg)
+    amn = run_lock_table_sim("crash_restart", reclaim=False, **cfg)
+    assert rec.reclaims > 0
+    if amn.reclaims:  # the wedge: re-entry waits out expiry + contention
+        assert amn.recovery_p99 > rec.recovery_p99

@@ -1,0 +1,189 @@
+"""Property tests (satellite): ledger replay is an idempotent,
+duplication-tolerant fold, and writer fencing tokens stay monotonic across
+crash / restart-reclaim / expiry / zombie interleavings.
+
+Runs under Hypothesis when it is installed; the container ships without it,
+so the same properties also run as a seeded inline fuzz (deterministic
+seeds, identical drivers) — the hypothesis path simply widens the search
+when available instead of skipping the invariants entirely.
+"""
+
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import AsymmetricMemory
+from repro.coord import (LeaseMode, LedgerStore, RecoverableClient,
+                         ShardedLockTable, replay_records)
+from repro.coord.ledger import LeaseLedger
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _view_key(view):
+    return (sorted(view.live.items()), sorted(view.intents.items()),
+            view.pids)
+
+
+# ----------------------------------------------------- replay fold property
+def _random_records(rng: random.Random) -> LeaseLedger:
+    """An arbitrary (not necessarily protocol-legal) record stream: replay
+    must stay a well-defined pure fold even over garbage orderings."""
+    led = LeaseLedger("fuzz")
+    keys = ["a", "b", "c"]
+    for _ in range(rng.randrange(1, 40)):
+        op = rng.choice(("session", "intent", "grant", "reclaim", "renew",
+                         "release", "lost", "resolve"))
+        led.append(op, key=rng.choice(keys), shard=rng.randrange(4),
+                   token=rng.randrange(1, 6),
+                   mode=rng.choice((int(LeaseMode.SHARED),
+                                    int(LeaseMode.EXCLUSIVE))),
+                   expires_at=rng.uniform(0.0, 10.0),
+                   ttl=rng.uniform(0.1, 2.0), pid=rng.randrange(4))
+    return led
+
+
+def _check_replay_fold(rng: random.Random) -> None:
+    led = _random_records(rng)
+    base = _view_key(led.replay())
+    # Pure: replaying again gives the same view.
+    assert _view_key(led.replay()) == base
+    # Crash-retry tolerant: duplicating ANY record in place is a no-op —
+    # a client that died before learning its append landed may re-append.
+    recs = led.records
+    for i in range(len(recs)):
+        doubled = recs[: i + 1] + [recs[i]] + recs[i + 1:]
+        assert _view_key(replay_records(doubled)) == base, (
+            f"duplicating record {i} ({recs[i].op}) changed the view")
+    # Prefix-extensible: replay of a prefix then the suffix records agrees
+    # with one full fold (no hidden cross-record state).
+    if len(recs) > 1:
+        cut = rng.randrange(1, len(recs))
+        assert _view_key(replay_records(recs[:cut] + recs[cut:])) == base
+
+
+# -------------------------------------------- token monotonicity property
+def _check_token_monotonic(rng: random.Random) -> None:
+    """Drive a real table through a random interleaving of grants, renews,
+    releases, expiries, crash-restarts (reclaiming and amnesiac) and zombie
+    renewals; check the fencing invariants after every step."""
+    clock = FakeClock()
+    mem = AsymmetricMemory(4)
+    table = ShardedLockTable(mem, num_shards=4, clock=clock)
+    store = LedgerStore()
+    keys = ["k0", "k1"]
+    ttl = 10.0
+
+    clients = []  # [rc, held: {key: lease}]
+    for i in range(3):
+        rc = RecoverableClient(table, mem.spawn(i % 4),
+                               store.ledger(f"c{i}"))
+        clients.append([rc, {}])
+
+    max_tok = {k: 0 for k in keys}   # largest writer token ever granted
+    graveyard = []                   # (rc_owner_index, stale lease copies)
+
+    for _ in range(120):
+        i = rng.randrange(len(clients))
+        rc, held = clients[i]
+        act = rng.random()
+        if act < 0.30:  # acquire (mostly exclusive, some shared)
+            key = rng.choice(keys)
+            if key in held:
+                continue
+            mode = LeaseMode.SHARED if rng.random() < 0.25 \
+                else LeaseMode.EXCLUSIVE
+            lease = rc.try_acquire(key, ttl, mode=mode)
+            if lease is None:
+                continue
+            if mode == LeaseMode.EXCLUSIVE:
+                assert lease.token > max_tok[key], (
+                    "exclusive grant reused a fencing token")
+                max_tok[key] = lease.token
+            else:
+                assert lease.token >= max_tok[key], (
+                    "reader generation fell behind the writer fence")
+            held[key] = lease
+        elif act < 0.45:  # renew: fencing identity is immutable
+            if not held:
+                continue
+            key = rng.choice(sorted(held))
+            renewed = rc.renew(held[key])
+            if renewed is None:
+                del held[key]
+            else:
+                assert renewed.token == held[key].token
+                held[key] = renewed
+        elif act < 0.60:  # release
+            if not held:
+                continue
+            key = rng.choice(sorted(held))
+            rc.release(held.pop(key))
+        elif act < 0.72:  # time passes (sometimes past expiry)
+            clock.advance(rng.choice((1.0, 4.0, ttl + 1.0)))
+        elif act < 0.90:  # crash + restart
+            for key, lease in held.items():
+                graveyard.append(lease)  # the dead incarnation's handles
+            held.clear()
+            p2 = mem.spawn(rng.randrange(4))
+            if rng.random() < 0.7:  # recovery path: replay + reclaim
+                for lease in rc.restart(p2):
+                    # Reclaim resumes the SAME grant: token equality, never
+                    # a fresh allocation, never a regression.
+                    assert lease.token <= max_tok[lease.key]
+                    held[lease.key] = lease
+            else:  # amnesiac path: rejoins as a stranger
+                rc.adopt_process(p2)
+        else:  # zombie renewal: a fenced-out handle must stay dead
+            if not graveyard:
+                continue
+            stale = rng.choice(graveyard)
+            if max_tok[stale.key] > stale.token:
+                zombie_p = mem.spawn(0)
+                assert table.renew(zombie_p, stale) is None, (
+                    "zombie renewed past a newer fencing token")
+
+    # Final sweep: every zombie whose key moved on is permanently fenced.
+    zp = mem.spawn(0)
+    for stale in graveyard:
+        if max_tok[stale.key] > stale.token:
+            assert table.renew(zp, stale) is None
+
+
+# --------------------------------------------------------------- test glue
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 2 ** 32 - 1))
+    def test_replay_fold_properties(seed):
+        _check_replay_fold(random.Random(seed))
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2 ** 32 - 1))
+    def test_fencing_tokens_monotonic_across_crashes(seed):
+        _check_token_monotonic(random.Random(seed))
+
+else:
+
+    @pytest.mark.parametrize("seed", range(60))
+    def test_replay_fold_properties(seed):
+        _check_replay_fold(random.Random(seed))
+
+    @pytest.mark.parametrize("seed", range(40))
+    def test_fencing_tokens_monotonic_across_crashes(seed):
+        _check_token_monotonic(random.Random(seed))

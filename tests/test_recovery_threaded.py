@@ -1,0 +1,212 @@
+"""Threaded stress (satellite): kill and restart REAL client threads —
+mid-acquire_batch and mid-reader-cohort — under a fuzzing scheduler.
+Restarted clients must *reclaim* their leases (same fencing tokens) rather
+than re-queue, and S/X exclusion must hold throughout.
+"""
+
+import random
+import threading
+import time
+
+import pytest
+
+from repro.core import AsymmetricMemory, make_scheduler
+from repro.coord import (ClientCrash, FaultInjector, LeaseMode, LedgerStore,
+                         RecoverableClient, ShardedLockTable)
+
+SHARED, EXCLUSIVE = LeaseMode.SHARED, LeaseMode.EXCLUSIVE
+TTL = 120.0  # real-clock tests: far longer than any test's wall time
+
+
+def _distinct_shard_keys(table, count, prefix="k"):
+    """Keys on pairwise distinct shards, so a batch spans several shard
+    groups and the batch.mid crash window actually opens."""
+    keys, seen = [], set()
+    i = 0
+    while len(keys) < count:
+        key = f"{prefix}/{i}"
+        i += 1
+        s = table.shard_of(key)
+        if s not in seen:
+            seen.add(s)
+            keys.append(key)
+    return keys
+
+
+def test_thread_killed_mid_batch_restarts_and_reclaims():
+    rng = random.Random(7)
+    mem = AsymmetricMemory(2, sched=make_scheduler(rng, 0.1))
+    fi = FaultInjector()
+    table = ShardedLockTable(mem, num_shards=8, fault=fi)
+    store = LedgerStore()
+    keys = _distinct_shard_keys(table, 5)
+
+    p1 = mem.spawn(0)
+    fi.at("batch.mid", nth=1, pid=p1.pid)
+    rc = RecoverableClient(table, p1, store.ledger("victim"))
+    box = {}
+
+    def victim():
+        try:
+            rc.acquire_batch(keys, TTL)
+            box["crashed"] = False
+        except ClientCrash:
+            box["crashed"] = True
+
+    t = threading.Thread(target=victim)
+    t.start()
+    t.join()
+    assert box["crashed"], "batch.mid never fired — keys span one shard?"
+    # The dead thread holds a PREFIX of the batch at the word level with
+    # no grant records — only dangling intents.  A stranger must still be
+    # excluded from the held prefix.
+    view = rc.ledger.replay()
+    assert view.live == {} and set(view.intents) == set(keys)
+
+    p2 = mem.spawn(1)
+    got_box = {}
+
+    def replacement():
+        got_box["leases"] = rc.restart(p2)
+
+    t2 = threading.Thread(target=replacement)
+    t2.start()
+    t2.join()
+    got = got_box["leases"]
+    assert got, "restart reclaimed nothing from the abandoned prefix"
+    assert len(got) < len(keys)  # a prefix, not the full batch
+    rows = table.telemetry()
+    assert sum(r["orphan_adopts"] for r in rows) == len(got)
+    # Reclaimed, not re-queued: the words still carry the original grants,
+    # so a stranger is fenced out until WE release.
+    stranger = mem.spawn(0)
+    for lease in got:
+        assert table.try_acquire(stranger, lease.key, TTL) is None
+        assert rc.release(lease)
+        assert table.try_acquire(stranger, lease.key, TTL) is not None
+    # Intents past the crash point were resolved, never granted: free.
+    for key in set(keys) - {l.key for l in got}:
+        assert key not in rc.ledger.replay().intents
+
+
+def test_reader_dies_mid_cohort_and_readopts_slot():
+    rng = random.Random(11)
+    mem = AsymmetricMemory(2, sched=make_scheduler(rng, 0.1))
+    table = ShardedLockTable(mem, num_shards=4)
+    store = LedgerStore()
+    key = "cohort"
+
+    survivor = mem.spawn(1)
+    s_lease = table.try_acquire(survivor, key, TTL, mode=SHARED)
+    assert s_lease is not None
+
+    rc = RecoverableClient(table, mem.spawn(0), store.ledger("reader"))
+    box = {}
+
+    def reader():
+        box["lease"] = rc.try_acquire(key, TTL, mode=SHARED)
+        # ... and dies mid-cohort: no release, thread just ends.
+
+    t = threading.Thread(target=reader)
+    t.start()
+    t.join()
+    dead = box["lease"]
+    assert dead is not None
+
+    p2 = mem.spawn(0)
+    got_box = {}
+
+    def replacement():
+        got_box["leases"] = rc.restart(p2)
+
+    t2 = threading.Thread(target=replacement)
+    t2.start()
+    t2.join()
+    (lease,) = got_box["leases"]
+    assert lease.mode == SHARED
+    assert lease.token == dead.token  # same reader generation: reclaimed
+    # The cohort (survivor + re-adopted slot) still excludes writers...
+    w = mem.spawn(1)
+    assert table.try_acquire(w, key, TTL) is None
+    # ...and the re-adopted slot is a REAL slot: both releases drain it.
+    assert rc.release(lease)
+    assert table.try_acquire(w, key, TTL) is None  # survivor still in
+    assert table.release(survivor, s_lease)
+    assert table.try_acquire(w, key, TTL) is not None
+
+
+@pytest.mark.parametrize("seed", [1, 2])
+def test_crash_restart_stress_holds_sx_exclusion(seed):
+    """Workers crash (abandon their lease), restart, and must RECLAIM the
+    same grant — token preserved — while S/X exclusion holds across every
+    interleaving the fuzzing scheduler can produce."""
+    rng = random.Random(seed)
+    mem = AsymmetricMemory(1, sched=make_scheduler(rng, 0.15))
+    table = ShardedLockTable(mem, num_shards=2)
+    store = LedgerStore()
+    key = "stressed"
+    state = {"readers": 0, "writers": 0, "violations": 0,
+             "reclaims": 0, "token_mismatch": 0}
+    mu = threading.Lock()
+
+    def worker(widx):
+        r = random.Random(1000 * seed + widx)
+        rc = RecoverableClient(table, mem.spawn(0),
+                               store.ledger(f"w{widx}"))
+        for _ in range(12):
+            exclusive = r.random() < 0.4
+            mode = EXCLUSIVE if exclusive else SHARED
+            lease = None
+            deadline = time.monotonic() + 60.0
+            while lease is None and time.monotonic() < deadline:
+                lease = rc.try_acquire(key, TTL, mode=mode)
+                if lease is None:
+                    time.sleep(0.0005)
+            assert lease is not None
+            with mu:
+                if exclusive:
+                    state["writers"] += 1
+                    if state["writers"] != 1 or state["readers"] != 0:
+                        state["violations"] += 1
+                else:
+                    state["readers"] += 1
+                    if state["writers"] != 0:
+                        state["violations"] += 1
+            time.sleep(0.001)
+            if exclusive and r.random() < 0.5:
+                # Crash: abandon the lease, restart, reclaim.  The word is
+                # never released in between, so the exclusion bookkeeping
+                # stays exactly as it was — any overlap is a violation.
+                # Only writers crash here: a reader that dies while a
+                # writer is DRAINING is refused re-adoption (the barrier
+                # rule) and its slot waits out the horizon — correct, but
+                # a 120s-TTL wedge this real-clock test cannot sit out.
+                # Reader death mid-cohort is covered above.
+                got = rc.restart(mem.spawn(0))
+                with mu:
+                    state["reclaims"] += len(got)
+                    if (len(got) != 1 or got[0].key != key
+                            or got[0].token != lease.token):
+                        state["token_mismatch"] += 1
+                lease = got[0] if got else lease
+            with mu:
+                if exclusive:
+                    if state["writers"] != 1 or state["readers"] != 0:
+                        state["violations"] += 1
+                    state["writers"] -= 1
+                else:
+                    if state["writers"] != 0:
+                        state["violations"] += 1
+                    state["readers"] -= 1
+            rc.release(lease)
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(5)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert state["violations"] == 0, state
+    assert state["token_mismatch"] == 0, state
+    assert state["reclaims"] > 0, "no worker ever exercised crash-restart"
+    rows = table.telemetry()
+    assert sum(r["reclaims"] for r in rows) == state["reclaims"]

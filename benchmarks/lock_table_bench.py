@@ -36,12 +36,13 @@ perf trajectory.
 
 import argparse
 import json
+import os
 import random
 import threading
 import time
 
 from repro.core import AsymmetricMemory, make_scheduler
-from repro.coord import LeaseMode, ShardedLockTable
+from repro.coord import InflationPolicy, LeaseMode, ShardedLockTable
 from repro.coord.table import LOCAL, REMOTE
 from repro.sim import SIM_WORKLOADS, run_lock_table_sim
 from repro.sim.workloads import KEYS_PER_HOST, jain as _jain, keys_by_home
@@ -214,6 +215,9 @@ def _bench(num_hosts, num_shards, workload, seconds=0.4, seed=0):
     return {
         "workload": workload,
         "shards": num_shards,
+        # Threaded throughput scales with available cores; record the box
+        # so a row is never compared against a baseline from another shape.
+        "cpu_count": os.cpu_count(),
         "throughput": total / seconds,
         "jain": _jain(counts),
         "local_rdma": totals[LOCAL].rdma_ops,
@@ -267,17 +271,22 @@ _LAST = {"results": [], "seconds": None, "sim": None}  # for benchmarks.run --js
 
 # Sim-mode sweep: the scale the threaded bench cannot reach (its practical
 # ceiling is 4 hosts × 2 threads).  The zipfian config is the acceptance
-# sweep — 64×16 clients, 10⁵ simulated lease ops — and runs at full size
-# even under --smoke; the other workloads shrink their op targets there.
+# sweep — 64×16 sticky hot-key clients with lock inflation ON — and runs
+# at full size even under --smoke; the other workloads shrink their op
+# targets there.
 SIM_HOSTS, SIM_CPH, SIM_SHARDS = 64, 16, 128
 SIM_OPS = {"home": 50_000, "uniform": 50_000,
-           "zipfian": 100_000, "failover": 25_000,
+           "zipfian": 20_000, "failover": 25_000,
            "read_heavy": 50_000, "reader_flood": 20_000,
            "crash_restart": 20_000}
 SIM_SMOKE_OPS = {"home": 25_000, "uniform": 25_000,
-                 "zipfian": 100_000, "failover": 10_000,
+                 "zipfian": 20_000, "failover": 10_000,
                  "read_heavy": 25_000, "reader_flood": 10_000,
                  "crash_restart": 8_000}
+# The zipfian rows park hundreds of sticky clients on a handful of keys;
+# their event budget is queue/backoff polling, not ops, so the default
+# per-op event cap is far too tight for them.
+ZIPF_MAX_EVENTS = 120_000_000
 
 # Recovery sweep (sim): the crash-recovery acceptance numbers, at a scale
 # (128 hosts) only the virtual-time engine reaches.  Host-level crashes on a
@@ -307,6 +316,109 @@ RW_CFG = dict(num_hosts=16, clients_per_host=16, num_shards=32,
 RW_OPS = 10_000
 RW_RATIOS = (0.5, 0.9, 0.95, 0.99)       # read fraction per ratio row
 RW_SMOKE_RATIOS = (0.95,)                # CI keeps just the acceptance row
+
+
+# Inflation sweep (sim): the contention-adaptive lock-inflation acceptance
+# numbers.  The SAME seeded zipfian run twice — once on the bare CAS word,
+# once with the default InflationPolicy — so the delta is a like-for-like
+# protocol comparison.  Gates: the hottest key's p99 acquire latency
+# improves >= 2x, its per-remote-acquire rCAS drops to a bounded constant
+# (direct handoff: one witness CAS + one budget write per grant, plus the
+# amortised enqueue), and a uniform workload is unchanged within noise
+# (zero inflations: the policy costs one attribute check when cold).
+INFL_OPS = 20_000
+INFL_P99_GATE = 2.0          # off/on hot-key p99 ratio floor
+INFL_RCAS_CAP = 16           # max rCAS any single hot acquire may pay
+INFL_UNIFORM_TOL = 0.02      # uniform throughput delta tolerance (2 %)
+
+
+def run_inflation_sweep(report, sim_seed=0, smoke=False):
+    """Hot-key inflation before/after: the CAS word vs the per-key queue.
+
+    Returns ``(out, on_run)`` — the ON leg is the same configuration as
+    ``run_sim``'s zipfian row, so the caller reuses it there instead of
+    paying the densest simulation twice.
+    """
+    out = {"config": dict(num_hosts=SIM_HOSTS, clients_per_host=SIM_CPH,
+                          num_shards=SIM_SHARDS, total_ops=INFL_OPS,
+                          policy="default")}
+    runs = {}
+    for label, pol in (("off", None), ("on", InflationPolicy())):
+        r = run_lock_table_sim(
+            "zipfian", num_hosts=SIM_HOSTS, clients_per_host=SIM_CPH,
+            num_shards=SIM_SHARDS, total_ops=INFL_OPS, seed=sim_seed,
+            inflation=pol, max_events=ZIPF_MAX_EVENTS)
+        runs[label] = r
+        out[label] = {
+            "virtual_throughput": r.virtual_throughput,
+            "ops": r.ops,
+            "hot_acquire_p50_us": round(r.hot_acquire_p50 * 1e6, 3),
+            "hot_acquire_p99_us": round(r.hot_acquire_p99 * 1e6, 3),
+            "hot_acquire_max_us": round(r.hot_acquire_max * 1e6, 3),
+            "hot_rcas_mean": round(r.hot_rcas_mean, 3),
+            "hot_rcas_max": r.hot_rcas_max,
+            "hot_grants": r.hot_grants,
+            "inflations": r.inflations,
+            "deflations": r.deflations,
+            "queue_enqueues": r.queue_enqueues,
+            "queue_grants": r.queue_grants,
+            "queue_handoffs": r.queue_handoffs,
+            "queue_bypasses": r.queue_bypasses,
+            "inflation_events": r.inflation_events,
+            "hot_key_report": r.hot_key_report,
+        }
+        report(
+            f"lock_table/sim/inflation-{label}/hosts{SIM_HOSTS}x{SIM_CPH}",
+            1e6 / max(r.virtual_throughput, 1e-9),
+            f"vthru={r.virtual_throughput:.0f}/s "
+            f"hot_p99={r.hot_acquire_p99 * 1e6:.0f}us "
+            f"hot_rcas_max={r.hot_rcas_max} "
+            f"infl={r.inflations} defl={r.deflations} "
+            f"handoffs={r.queue_handoffs} wall={r.wall_seconds:.1f}s",
+        )
+    off, on = runs["off"], runs["on"]
+    p99_ratio = off.hot_acquire_p99 / max(on.hot_acquire_p99, 1e-12)
+    out["hot_p99_speedup"] = round(p99_ratio, 3)
+    out["throughput_ratio"] = round(
+        on.virtual_throughput / max(off.virtual_throughput, 1e-9), 3)
+    if not on.inflations:
+        raise AssertionError(
+            "inflation sweep: the zipfian hot keys never inflated — the "
+            "policy thresholds no longer match the workload's heat")
+    if p99_ratio < INFL_P99_GATE:
+        raise AssertionError(
+            f"inflation sweep: hot-key p99 improved only {p99_ratio:.2f}x "
+            f"(gate {INFL_P99_GATE}x): "
+            f"off={off.hot_acquire_p99 * 1e6:.0f}us "
+            f"on={on.hot_acquire_p99 * 1e6:.0f}us")
+    if on.hot_rcas_max > INFL_RCAS_CAP:
+        raise AssertionError(
+            f"inflation sweep: a hot acquire paid {on.hot_rcas_max} rCAS "
+            f"(cap {INFL_RCAS_CAP}) — the queue is not bounding remote ops")
+    # Uniform traffic must not pay for the hot path's machinery.
+    uni = {}
+    for label, pol in (("off", None), ("on", InflationPolicy())):
+        u = run_lock_table_sim(
+            "uniform", num_hosts=SIM_HOSTS, clients_per_host=SIM_CPH,
+            num_shards=SIM_SHARDS, total_ops=INFL_OPS, seed=sim_seed,
+            inflation=pol)
+        uni[label] = u
+        out[f"uniform_{label}"] = {
+            "virtual_throughput": u.virtual_throughput,
+            "inflations": u.inflations,
+        }
+    delta = abs(uni["on"].virtual_throughput - uni["off"].virtual_throughput)
+    rel = delta / max(uni["off"].virtual_throughput, 1e-9)
+    out["uniform_throughput_delta"] = round(rel, 6)
+    if uni["on"].inflations:
+        raise AssertionError(
+            f"inflation sweep: uniform traffic inflated "
+            f"{uni['on'].inflations} keys — thresholds far too hot")
+    if rel > INFL_UNIFORM_TOL:
+        raise AssertionError(
+            f"inflation sweep: uniform throughput moved {rel * 100:.2f}% "
+            f"with inflation enabled (tolerance {INFL_UNIFORM_TOL * 100}%)")
+    return out, on
 
 
 def run_rw_sweep(report, sim_seed=0, smoke=False):
@@ -420,18 +532,30 @@ def run_recovery_sweep(report, sim_seed=0, smoke=False):
     return out
 
 
-def run_sim(report, sim_seed=0, smoke=False):
+def run_sim(report, sim_seed=0, smoke=False, zipf_run=None):
     """The deterministic virtual-time sweep; returns (rows, wall_seconds).
 
     ``rows`` contains only seed-determined fields (exact counters, virtual
     throughput, event counts) — two runs with the same seed must compare
     equal, which the CI determinism gate enforces.  Wall-clock durations
-    live in the separate ``wall_seconds`` dict.
+    live in the separate ``wall_seconds`` dict.  ``zipf_run`` lets the
+    caller hand in the inflation sweep's ON leg (identical configuration)
+    so the densest simulation is not paid twice.
     """
     ops_table = SIM_SMOKE_OPS if smoke else SIM_OPS
     rows, wall = {}, {}
     for workload in SIM_WORKLOADS:
         kwargs = {}
+        r = None
+        if workload == "zipfian":
+            # The acceptance configuration: sticky hot-key clients over an
+            # inflating table.  (Without inflation this config's CAS storm
+            # is the OFF leg of run_inflation_sweep, not a standing row.)
+            if zipf_run is not None and ops_table[workload] == INFL_OPS:
+                r = zipf_run  # identical config: reuse the sweep's ON leg
+            else:
+                kwargs = dict(inflation=InflationPolicy(),
+                              max_events=ZIPF_MAX_EVENTS)
         if workload == "crash_restart":
             # The 300 us failover TTL leaves nothing alive to reclaim by
             # the time a restart lands; run this row at the recovery
@@ -439,11 +563,12 @@ def run_sim(report, sim_seed=0, smoke=False):
             kwargs = dict(failover_ttl=REC_TTL, crash_warmup=2e-3,
                           crash_spacing=REC_TTL / 8,
                           restart_delay=REC_TTL / 8)
-        r = run_lock_table_sim(
-            workload, num_hosts=SIM_HOSTS, clients_per_host=SIM_CPH,
-            num_shards=SIM_SHARDS, total_ops=ops_table[workload],
-            seed=sim_seed, **kwargs,
-        )
+        if r is None:
+            r = run_lock_table_sim(
+                workload, num_hosts=SIM_HOSTS, clients_per_host=SIM_CPH,
+                num_shards=SIM_SHARDS, total_ops=ops_table[workload],
+                seed=sim_seed, **kwargs,
+            )
         cfg = f"{workload}/hosts{SIM_HOSTS}x{SIM_CPH}/shards{SIM_SHARDS}"
         rows[cfg] = r.row()
         wall[cfg] = round(r.wall_seconds, 3)
@@ -504,7 +629,10 @@ def run(report, seconds=0.7, seeds=SEEDS, mode="both", sim_seed=0,
                     f"fastrenew={r['fast_renews']} localRDMA=0",
                 )
     if mode in ("sim", "both"):
-        rows, wall = run_sim(report, sim_seed=sim_seed, smoke=smoke)
+        inflation, zipf_on = run_inflation_sweep(report, sim_seed=sim_seed,
+                                                 smoke=smoke)
+        rows, wall = run_sim(report, sim_seed=sim_seed, smoke=smoke,
+                             zipf_run=zipf_on)
         sweep = run_rw_sweep(report, sim_seed=sim_seed, smoke=smoke)
         recovery = run_recovery_sweep(report, sim_seed=sim_seed, smoke=smoke)
         _LAST["sim"] = {
@@ -518,6 +646,7 @@ def run(report, seconds=0.7, seeds=SEEDS, mode="both", sim_seed=0,
                 "ratios": sweep,
             },
             "recovery": recovery,
+            "inflation": inflation,
         }
 
 
@@ -542,8 +671,13 @@ def json_payload(results, seconds, sim=None):
             "keys_per_host": KEYS_PER_HOST,
             "batch_keys": BATCH_KEYS,
             "remote_delay_us": REMOTE_DELAY * 1e6,
+            "cpu_count": os.cpu_count(),
         },
         "baseline_pre_pr": BASELINE,
+        # BASELINE was recorded on the 2-core CI container; threaded
+        # speedup-vs-baseline ratios from any other shape measure the box,
+        # not the protocol.
+        "baseline_comparable": os.cpu_count() == 2,
         "current": current,
         "speedup_vs_baseline": speedups,
     }

@@ -6,6 +6,7 @@ wraps it together with named locks, elections and barriers.
 """
 
 from .faults import CRASH_POINTS, ClientCrash, FaultInjector  # noqa: F401
+from .inflation import ContentionEstimator, InflationPolicy  # noqa: F401
 from .ledger import (LeaseLedger, LedgerRecord, LedgerStore,  # noqa: F401
                      LedgerView, RecoverableClient, replay_records)
 from .service import Barrier, CoordinationService  # noqa: F401

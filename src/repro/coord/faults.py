@@ -60,6 +60,14 @@ __all__ = ["CRASH_POINTS", "ClientCrash", "FaultInjector"]
 #       drain barrier: the barrier lapses on its own (it is a deadline).
 #   upgrade.mid        — an upgrader died after arming the drain barrier
 #       mid-upgrade; its shared slot is still counted and reclaimable.
+#   inflate.mid        — the waiter that swung a key into queued (inflated)
+#       mode died right after the mode CAS: the key stays inflated with a
+#       queue the dead pid never joined — it serves through the inflated
+#       path and deflates when cool (no fencing state was abandoned).
+#   deflate.mid        — an inflated-mode holder died after its release CAS
+#       but before passing the queue on: its cohort's head never gets the
+#       handoff, distrusts the queue after the staleness deadline, and
+#       bypasses to the word (the bypass grant deflates the key).
 CRASH_POINTS = (
     "ledger.post_intent",
     "grant.pre_ledger",
@@ -70,6 +78,8 @@ CRASH_POINTS = (
     "batch.mid",
     "drain.mid",
     "upgrade.mid",
+    "inflate.mid",
+    "deflate.mid",
 )
 
 

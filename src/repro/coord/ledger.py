@@ -81,10 +81,15 @@ class LedgerRecord:
     expires_at: float = 0.0
     ttl: float = 0.0
     pid: int = -1
+    # The word's inflation mode bit at record time (int for JSONL
+    # stability): reclaim's fast-path witness must encode it or a reclaim
+    # of an inflated-mode grant would never match the word.
+    inflated: int = 0
 
     def as_lease(self) -> Lease:
         return Lease(self.key, self.shard, self.pid, self.token,
-                     self.expires_at, self.ttl, LeaseMode(self.mode))
+                     self.expires_at, self.ttl, LeaseMode(self.mode),
+                     bool(self.inflated))
 
 
 @dataclass
@@ -112,11 +117,11 @@ class LeaseLedger:
     def append(self, op: str, *, key: str = "", shard: int = -1,
                token: int = 0, mode: int = int(LeaseMode.EXCLUSIVE),
                expires_at: float = 0.0, ttl: float = 0.0,
-               pid: int = -1) -> LedgerRecord:
+               pid: int = -1, inflated: int = 0) -> LedgerRecord:
         if op not in _OPS:
             raise ValueError(f"unknown ledger op {op!r}")
         rec = LedgerRecord(self._seq, op, key, shard, token, int(mode),
-                           expires_at, ttl, pid)
+                           expires_at, ttl, pid, int(inflated))
         self._seq += 1
         self.records.append(rec)
         return rec
@@ -125,7 +130,8 @@ class LeaseLedger:
         return self.append(op, key=lease.key, shard=lease.shard,
                            token=lease.token, mode=int(lease.mode),
                            expires_at=lease.expires_at, ttl=lease.ttl,
-                           pid=lease.holder_pid)
+                           pid=lease.holder_pid,
+                           inflated=int(lease.inflated))
 
     # -------------------------------------------------------------- replay
     def replay(self) -> LedgerView:

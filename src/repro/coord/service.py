@@ -38,6 +38,7 @@ from typing import Dict, List, Optional, Sequence
 from repro.core import ALock, AsymmetricMemory, OpCounts, Process
 
 from .faults import FaultInjector
+from .inflation import InflationPolicy
 from .ledger import LedgerStore, RecoverableClient
 from .table import Lease, LeaseMode, ShardedLockTable
 
@@ -55,6 +56,8 @@ class CoordinationService:
         sleep=None,
         yield_point=None,
         fault: Optional[FaultInjector] = None,
+        inflation: Optional[InflationPolicy] = None,
+        seed: int = 0,
     ):
         self.num_hosts = num_hosts
         # One time source end-to-end: the memory's spin hooks, the table's
@@ -68,6 +71,7 @@ class CoordinationService:
         self.table = ShardedLockTable(
             self.mem, num_shards=num_shards, init_budget=init_budget,
             clock=clock, sleep=sleep, name="svc.table", fault=fault,
+            inflation=inflation, seed=seed,
         )
         # Durable lease ledgers, keyed by client NAME (the identity that
         # survives a crash) — the restart re-entry API below hands a
@@ -245,6 +249,12 @@ class CoordinationService:
 
     def class_totals(self) -> Dict[int, OpCounts]:
         return self.table.class_totals()
+
+    def hot_keys(self, k: int = 10) -> List[List]:
+        return self.table.hot_keys(k)
+
+    def inflation_log(self) -> List[List]:
+        return self.table.inflation_log()
 
     # ------------------------------------------------------------ named locks
     def lock(self, name: str, home_host: int = 0) -> ALock:

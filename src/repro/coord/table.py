@@ -68,15 +68,18 @@ from __future__ import annotations
 
 import enum
 import hashlib
+import random
 import threading
 import time
 from dataclasses import dataclass
 from functools import lru_cache
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
-from repro.core import ALock, AsymmetricMemory, OpCounts, Process
+from repro.core import (ALock, AsymmetricMemory, InflatedKeyQueue, OpCounts,
+                        Process)
 
 from .faults import FaultInjector
+from .inflation import ContentionEstimator, InflationPolicy
 
 LOCAL, REMOTE = 0, 1
 
@@ -94,6 +97,70 @@ _FREE_AT = 0.0
 # retry never happens; under threads the cap converts a pathological
 # contention storm into a clean reject instead of an unbounded spin.
 _FAST_ATTEMPTS = 64
+
+# Seeded exponential backoff for the blocking acquire loops: `poll` is the
+# base, doubling per reject up to this many base intervals, with +-50%
+# seeded jitter — the thundering-herd fix for threaded hot keys, routed
+# through the injected clock/RNG so the sim stays deterministic.
+_BACKOFF_CAP_POLLS = 32
+
+
+# --------------------------------------------------------- word mode encoding
+# The packed word stays one register, (token, readers, expires_at); the
+# inflation mode bit rides the READERS field as a two's-complement style
+# encoding: readers >= 0 is the classic deflated key with that many live
+# readers, readers < 0 is an INFLATED key carrying (-readers - 1) live
+# readers (so -1 = inflated + zero readers).  Properties this buys:
+#
+# * the word stays CAS-only and exactly as wide — every existing witness
+#   tuple still works, and the mode transition is ONE CAS that changes
+#   neither token nor expiry (an atomic mode swing);
+# * every deflated-mode fast-path witness has readers == 0 (or > 0 for
+#   cohorts), so it can NEVER accidentally match an inflated word: a
+#   zombie whose key inflated under it falls off the fast path and lands
+#   in the fully-validated slow path, exactly like a fenced-out zombie;
+# * shared reader cohorts keep working while inflated — joins/leaves
+#   increment/decrement through the encoding, the writer drain barrier is
+#   unchanged.
+def _infl(readers: int) -> bool:
+    """Is this readers-field value inflated-mode?"""
+    return readers < 0
+
+
+def _dec(readers: int) -> int:
+    """Decoded live-reader count, either mode."""
+    return -readers - 1 if readers < 0 else readers
+
+
+def _enc(count: int, inflated: bool) -> int:
+    """Encode a live-reader count into the given mode."""
+    return -count - 1 if inflated else count
+
+
+# Fencing-token block reserved by the FIRST critical-section grant on an
+# inflated key (not at inflation itself — the pre-inflation holder's lease
+# still witnesses ``fence == token`` and must stay releasable): the fence
+# register jumps to ``token + _INFL_RESERVE`` (the epoch's CEILING) and the
+# direct-handoff chain allocates word tokens UNDER it (each handoff CAS
+# writes token + 1, chained through the word itself, so monotonicity needs
+# no register round-trip).  Every later CS grant on the inflated key
+# allocates ceiling + 1 and re-reserves.  2^20 handoffs per reservation:
+# far past any queue tenure, and exhaustion just falls back to a CS grant.
+_INFL_RESERVE = 1 << 20
+
+
+def _trusted(etok: int, fence: int, readers: int) -> bool:
+    """Mirror-trust check for the packed word against the fence register.
+
+    Deflated: exact match (any skew means a zombie's piggybacked writes hit
+    the mirror — untrusted, repaired via the CS).  Inflated: the fence
+    register holds the inflation epoch's reserved ceiling and word tokens
+    are allocated *under* it by the direct-handoff chain, so trusted means
+    ``etok <= fence``.  A deflated word under a still-raised fence
+    (etok < fence, readers >= 0) is the post-deflation state: deliberately
+    untrusted, so the next CS grant repairs it with token ``ceiling + 1``
+    — which is how the fence mirror re-synchronises after an epoch."""
+    return etok <= fence if _infl(readers) else etok == fence
 
 
 class LeaseMode(enum.IntEnum):
@@ -152,6 +219,14 @@ class Lease:
     expires_at: float
     ttl: float
     mode: LeaseMode = LeaseMode.EXCLUSIVE
+    # The key's word was in inflated (queued) mode when this lease was
+    # granted/renewed: the fast-path witnesses must encode the mode bit
+    # (readers == -1, not 0) or they would never match the word again.
+    inflated: bool = False
+
+    def witness(self) -> tuple:
+        """The fast-path CAS witness for an EXCLUSIVE lease."""
+        return (self.token, _enc(0, self.inflated), self.expires_at)
 
 
 class _KeyState:
@@ -181,15 +256,30 @@ class _KeyState:
     clears it.  A stale barrier (the writer timed out or was beaten to the
     grant) simply lapses — no cleanup protocol, same posture as the leases
     themselves.
+
+    ``infl`` / ``infl_epoch`` are host-side inflation metadata (like shard
+    placement and the client slot ledger — never part of the simulated
+    protocol state): the live :class:`~repro.core.InflatedKeyQueue` for an
+    inflated key, or ``None``.  The word's mode bit is authoritative; the
+    queue object is the advisory FIFO hung off it, discarded wholesale on
+    deflation (the epoch counter keeps discarded-queue register names from
+    aliasing a later inflation's).
     """
 
-    __slots__ = ("holder", "expires", "fence", "intent")
+    __slots__ = ("holder", "expires", "fence", "intent", "infl", "infl_epoch",
+                 "infl_ceiling")
 
     def __init__(self, mem: AsymmetricMemory, node: int, name: str):
         self.holder = mem.alloc(node, f"{name}.holder", _NO_HOLDER)
         self.expires = mem.alloc(node, f"{name}.expires", (0, 0, _FREE_AT))
         self.fence = mem.alloc(node, f"{name}.fence", 0)
         self.intent = mem.alloc(node, f"{name}.intent", _FREE_AT)
+        self.infl: Optional[InflatedKeyQueue] = None
+        self.infl_epoch = 0
+        # Largest word token the current inflation epoch may allocate via
+        # direct handoff (== the value the fence register was raised to).
+        # Home-shard metadata, maintained under the shard CS.
+        self.infl_ceiling = 0
 
 
 class LockShard:
@@ -231,6 +321,17 @@ class LockShard:
         self.orphan_adopts = 0       # probes that adopted a lost grant
         self.reconstructions = 0     # keys audited by reconstruct_shard
         self.reconstruct_resets = 0  # keys whose registers were re-seeded
+        # Contention-adaptive inflation counters (PR 7).
+        self.inflations = 0          # words swung into queued (MCS) mode
+        self.deflations = 0          # words swung back, orderly or not
+        self.queue_enqueues = 0      # split-phase MCS enqueues
+        self.queue_grants = 0        # grants issued via the inflated path
+        self.queue_handoffs = 0      # inflated releases that passed the queue
+        self.queue_bypasses = 0      # stale-queue fallbacks to the word
+        # Per-key blocked-attempt tally (satellite: hot-key report).  Guarded
+        # by _meta like every other meta counter; keys only ever accumulate —
+        # the table's hot_keys() merges and ranks across shards.
+        self.key_retries: Dict[str, int] = {}
         self._meta = threading.Lock()
 
 
@@ -246,6 +347,8 @@ class ShardedLockTable:
         sleep: Optional[Callable[[float], None]] = None,
         name: str = "table",
         fault: Optional[FaultInjector] = None,
+        inflation: Optional[InflationPolicy] = None,
+        seed: int = 0,
     ):
         self.mem = mem
         self.num_hosts = mem.num_nodes
@@ -281,6 +384,28 @@ class ShardedLockTable:
         # with their horizon, like the service lease cache.
         self._slots: Dict[int, Dict[str, List]] = {}
         self._slots_guard = threading.Lock()
+        # Contention-adaptive inflation (None = feature off: one attribute
+        # check per exclusive acquire, nothing else — zero cost when idle).
+        self.inflation = inflation
+        self._estimator = (ContentionEstimator(inflation)
+                           if inflation is not None else None)
+        self._init_budget = init_budget
+        # Inflate/deflate event log: [t, action, key, token, reason] rows,
+        # appended in decision order.  Decisions are pure functions of the
+        # seeded event sequence + virtual clock, so two same-seed sim runs
+        # produce byte-identical logs (a CI determinism gate diffs them).
+        self._infl_events: List[List] = []
+        self._infl_guard = threading.Lock()
+        # Blocking-acquire backoff RNG: seeded so the sim's sleep schedule
+        # (hence every downstream decision) is a function of the seed.
+        self._rng = random.Random(seed)
+        # Client-side queue-wait ledger, the inflated-mode sibling of
+        # ``_slots``: pid -> {key: [queue, last_progress_at, holding]}.
+        # Same access contract (a pid is single-threaded, the guard covers
+        # only outer-dict insertion).  An entry whose queue is no longer the
+        # key's installed one belongs to a discarded epoch and is dropped.
+        self._waits: Dict[int, Dict[str, List]] = {}
+        self._waits_guard = threading.Lock()
 
     _SLOTS_SWEEP = 1024
 
@@ -290,6 +415,19 @@ class ShardedLockTable:
             with self._slots_guard:
                 slots = self._slots.setdefault(p.pid, {})
         return slots
+
+    def _pid_waits(self, p: Process) -> Dict[str, List]:
+        waits = self._waits.get(p.pid)
+        if waits is None:
+            with self._waits_guard:
+                waits = self._waits.setdefault(p.pid, {})
+        return waits
+
+    def _log_infl_event(self, now: float, action: str, key: str,
+                        token: int, reason: str) -> None:
+        with self._infl_guard:
+            self._infl_events.append(
+                [round(now, 9), action, key, token, reason])
 
     def _slot_join(self, p: Process, key: str, token: int,
                    horizon: float) -> None:
@@ -441,23 +579,24 @@ class ShardedLockTable:
                 if now < barrier:
                     intent_block = True  # a writer is draining this key
                     break
-                if etok != fence:
+                if not _trusted(etok, fence, readers):
                     repair = True  # untrusted mirror: go repair via the CS
                     break
+                dec, infl = _dec(readers), _infl(readers)
                 free = eexp <= _FREE_AT
                 live = (not free) and now < eexp
-                if live and readers == 0:
+                if live and dec == 0:
                     break  # a live writer holds the key
-                if live:  # join the live reader cohort
-                    new = (etok, readers + 1, max(eexp, now + ttl))
+                if live:  # join the live reader cohort (either mode)
+                    new = (etok, _enc(dec + 1, infl), max(eexp, now + ttl))
                 else:     # open a fresh generation over free/expired state
-                    new = (etok, 1, now + ttl)
+                    new = (etok, _enc(1, infl), now + ttl)
                 observed = self.mem.auto_cas(p, st.expires, packed, new)
                 if not local:
                     rcas_posted += 1
                 if observed == packed:
                     lease = Lease(key, shard.index, p.pid, etok, now + ttl,
-                                  ttl, LeaseMode.SHARED)
+                                  ttl, LeaseMode.SHARED, infl)
                     expired_over = (not free) and not live
                     break
                 self.mem.yield_point()  # lost to another shared CAS: retry
@@ -508,7 +647,7 @@ class ShardedLockTable:
                     blocked_by_intent = True
                 else:
                     free = eexp <= _FREE_AT
-                    clobbered = etok != fence
+                    clobbered = not _trusted(etok, fence, readers)
                     if free or clobbered or now >= eexp:
                         token = fence + 1
                         # CAS, not write: a CS-free join can land between
@@ -524,6 +663,16 @@ class ShardedLockTable:
                                 ("write", st.intent, _FREE_AT),
                             ]
                             repaired = clobbered
+                            # A repair grant re-seeds the word DEFLATED
+                            # (the state was untrusted — disorderly events
+                            # always reset queue state rather than trust it).
+                            if st.infl is not None:
+                                st.infl = None
+                                self._estimator.mark_deflated(key, now)
+                                self._log_infl_event(now, "deflate", key,
+                                                     token, "repair")
+                                with shard._meta:
+                                    shard.deflations += 1
                     # else: someone re-granted cleanly while we queued for
                     # the CS — report a reject; the caller's retry will join.
             finally:
@@ -581,6 +730,8 @@ class ShardedLockTable:
         granted = []
         writes: List[tuple] = []
         blocked = False
+        blocked_key: Optional[str] = None
+        inflated_key: Optional[Tuple[str, int]] = None
         armed_drain = False
         expirations = 0
         repairs = 0
@@ -609,24 +760,78 @@ class ShardedLockTable:
                     vals = [(flat[2 * i], flat[2 * i + 1])
                             for i in range(len(states))]
                 # Verdict pass: the grantable prefix in global order.
-                plan = []  # (key, st, packed-as-read, new token, clobbered, free)
+                plan = []  # (key, st, packed, new token, clobbered, free, enc0)
                 for key, st, ((etok, readers, eexp), fence) in zip(
                         keys, states, vals):
                     free = eexp <= _FREE_AT
-                    clobbered = etok != fence  # zombie CAS hit the mirror
+                    # Untrusted mirror: a zombie CAS hit it, or the word is
+                    # freshly deflated under a still-raised epoch ceiling.
+                    clobbered = not _trusted(etok, fence, readers)
                     if not free and not clobbered and now < eexp:
                         blocked = True
-                        if readers > 0:
+                        blocked_key = key
+                        if _dec(readers) > 0:
                             # A live reader cohort: arm the drain barrier so
                             # no new reader joins (and no shared renewal
                             # extends the cohort) past its current horizon —
                             # the writer's wait is bounded by one TTL.
                             writes.append(("write", st.intent, eexp))
                             armed_drain = True
+                        elif (self._estimator is not None
+                                and not _infl(readers)):
+                            # Blocked on a live writer-held deflated word:
+                            # the contention signal the estimator feeds on.
+                            self._estimator.note(key, now)
+                            if (st.infl is None
+                                    and self._estimator.should_inflate(
+                                        key, now)):
+                                # Install the queue BEFORE the mode CAS: a
+                                # concurrent step must never observe an
+                                # inflated word with no queue behind it.
+                                st.infl_epoch += 1
+                                st.infl = InflatedKeyQueue(
+                                    self.mem, shard.home_host,
+                                    self._init_budget,
+                                    f"{self.name}.s{shard.index}"
+                                    f".k{stable_key_hash(key):016x}"
+                                    f".iq{st.infl_epoch}")
+                                # One CAS swings the mode: token and expiry
+                                # untouched, readers 0 -> -1 (inflated, no
+                                # readers).  Losing (to the holder's renew /
+                                # release CAS) reverts cleanly — the next
+                                # blocked attempt re-decides.
+                                if self.mem.auto_cas(
+                                    p, st.expires, (etok, readers, eexp),
+                                    (etok, _enc(0, True), eexp),
+                                ) == (etok, readers, eexp):
+                                    self._estimator.mark_inflated(key, now)
+                                    inflated_key = (key, etok)
+                                    # No token-block reservation yet: the
+                                    # pre-inflation holder's lease still
+                                    # witnesses ``fence == token``, and
+                                    # raising the fence here would strand
+                                    # its release until TTL expiry.  The
+                                    # ceiling stays at the current token
+                                    # (zero direct-handoff headroom) until
+                                    # the FIRST critical-section grant on
+                                    # the inflated key reserves the block.
+                                    st.infl_ceiling = etok
+                                else:
+                                    st.infl = None
+                        break
+                    if st.infl is not None and not st.infl.empty(p):
+                        # FIFO discipline: an inflated key's grant order is
+                        # owned by its queue — a CS transaction must not
+                        # jump live waiters (the inflated acquire path is
+                        # the only granting entry while the queue is
+                        # populated).
+                        blocked = True
+                        blocked_key = key
                         break
                     token = fence + 1  # CS-only allocator: never regresses
                     plan.append((key, st, (etok, readers, eexp), token,
-                                 clobbered, free))
+                                 clobbered, free,
+                                 _enc(0, st.infl is not None)))
                 # Commit pass: every packed-word mutation is a CAS against
                 # the value this transaction read — the CS excludes other
                 # critical sections but NOT the CS-free shared joins, so a
@@ -638,13 +843,14 @@ class ShardedLockTable:
                     if local:
                         won = [
                             self.mem.cas(p, st.expires, packed,
-                                         (token, 0, now + ttl)) == packed
-                            for (_k, st, packed, token, _c, _f) in plan
+                                         (token, enc0, now + ttl)) == packed
+                            for (_k, st, packed, token, _c, _f, enc0) in plan
                         ]
                     else:
                         obs = self.mem.post_batch(p, [
-                            ("cas", st.expires, packed, (token, 0, now + ttl))
-                            for (_k, st, packed, token, _c, _f) in plan
+                            ("cas", st.expires, packed,
+                             (token, enc0, now + ttl))
+                            for (_k, st, packed, token, _c, _f, enc0) in plan
                         ])
                         won = [o == packed
                                for o, (_k, _s, packed, *_r) in zip(obs, plan)]
@@ -656,8 +862,8 @@ class ShardedLockTable:
                     # vanishing remote-window can beat the rollback, and a
                     # clobbered word is repaired by the next grant).
                     rollback = [
-                        ("cas", st.expires, (token, 0, now + ttl), packed)
-                        for i, (_k, st, packed, token, _c, _f)
+                        ("cas", st.expires, (token, enc0, now + ttl), packed)
+                        for i, (_k, st, packed, token, _c, _f, enc0)
                         in enumerate(plan)
                         if i > cut and won[i]
                     ]
@@ -669,17 +875,24 @@ class ShardedLockTable:
                             self.mem.post_batch(p, rollback)
                     if cut < len(plan):
                         blocked = True
-                    for key, st, packed, token, clobbered, free in plan[:cut]:
+                        blocked_key = plan[cut][0]
+                    for (key, st, packed, token, clobbered, free,
+                         enc0) in plan[:cut]:
                         if clobbered:
                             repairs += 1  # untrusted mirror: repaired
                         elif not free:
                             expirations += 1  # grant over an expired lease
                         granted.append(
                             Lease(key, shard.index, p.pid, token, now + ttl,
-                                  ttl, LeaseMode.EXCLUSIVE)
+                                  ttl, LeaseMode.EXCLUSIVE, _infl(enc0))
                         )
+                        fence_val = token
+                        if _infl(enc0):
+                            # A CS grant on a still-inflated key re-reserves
+                            # the direct-handoff token block above it.
+                            st.infl_ceiling = fence_val = token + _INFL_RESERVE
                         writes += [
-                            ("write", st.fence, token),
+                            ("write", st.fence, fence_val),
                             ("write", st.holder, p.pid),
                             ("write", st.intent, _FREE_AT),  # barrier served
                         ]
@@ -695,9 +908,22 @@ class ShardedLockTable:
             shard.grants_by_mode[LeaseMode.EXCLUSIVE] += len(granted)
             shard.expirations += expirations
             shard.repairs += repairs
+            if inflated_key is not None:
+                shard.inflations += 1
             if blocked:
                 shard.rejects += 1
                 shard.rejects_by_mode[LeaseMode.EXCLUSIVE] += 1
+                if blocked_key is not None:
+                    shard.key_retries[blocked_key] = \
+                        shard.key_retries.get(blocked_key, 0) + 1
+        if inflated_key is not None:
+            self._log_infl_event(now, "inflate", inflated_key[0],
+                                 inflated_key[1], "hot")
+            # The inflater is a (blocked) waiter, not a holder: its death
+            # here leaves a freshly inflated key whose queue it never
+            # joined — the key serves normally through the inflated path
+            # and deflates when cool.
+            self._crash_point("inflate.mid", p)
         if armed_drain:
             # The writer just armed a reader-cohort drain barrier and is
             # about to wait outside the CS — the window where its death
@@ -730,8 +956,317 @@ class ShardedLockTable:
         shard = self.shards[self.shard_of(key)]
         if mode == LeaseMode.SHARED:
             return self._shared_acquire(p, shard, key, ttl)
+        if self.inflation is not None:
+            st = shard.keys.get(key)
+            if st is not None and st.infl is not None:
+                return self._inflated_acquire(p, shard, key, st, ttl)
         granted, _ = self._acquire_group(p, shard, (key,), ttl, mode)
         return granted[0] if granted else None
+
+    # ------------------------------------------------- inflated (queued) mode
+    def _inflated_acquire(self, p: Process, shard: LockShard, key: str,
+                          st: _KeyState, ttl: float) -> Optional[Lease]:
+        """One non-blocking attempt on an inflated key, through its queue.
+
+        First call enqueues into the caller's class cohort (local clients:
+        machine-local CAS, 0 RDMA; remote clients: one rCAS + at most one
+        rWrite — the bounded constant the queue buys).  Subsequent calls
+        poll: ``parked`` waiters return ``None`` after ONE local read (the
+        whole point — no shard CS, no word CAS, no remote op per retry);
+        the cohort head attempts the grant.  A head whose handoff never
+        comes (dead predecessor, discarded epoch) distrusts the queue after
+        ``stale_after_ttls`` TTLs and bypasses to the word directly.
+        """
+        q = st.infl
+        if q is None:
+            # Deflated between the routing check and here: normal path.
+            granted, _ = self._acquire_group(p, shard, (key,), ttl)
+            return granted[0] if granted else None
+        waits = self._pid_waits(p)
+        ws = waits.get(key)
+        if ws is not None and ws[0] is not q:
+            del waits[key]  # a discarded epoch's wait: start over
+            ws = None
+        snap = p.counts.as_tuple()
+        enqueued = False
+        bypass = False
+        blocked = False
+        lease: Optional[Lease] = None
+        try:
+            if ws is None:
+                leader = q.enqueue(p)
+                waits[key] = [q, self.clock(), False]
+                enqueued = True
+                if not leader:
+                    blocked = True
+                    return None  # parked behind a predecessor: poll later
+            else:
+                verdict = q.poll(p)
+                if verdict == "granted":
+                    # The predecessor handed the lock over directly: the
+                    # word already carries our token — consume the payload
+                    # and walk away holding, zero word ops, zero CS.
+                    grant = q.take_grant(p)
+                    now = self.clock()
+                    if grant is not None and now < grant[1]:
+                        token, expires = grant
+                        ws[1] = now
+                        ws[2] = True
+                        lease = Lease(key, shard.index, p.pid, token,
+                                      expires, ttl, LeaseMode.EXCLUSIVE,
+                                      True)
+                        return lease
+                    # Stamped before we looked, expired before we woke: the
+                    # word has (or will) move on without us — fall back to
+                    # an ordinary entitled attempt next poll.
+                    ws[1] = self.clock()
+                    blocked = True
+                    return None
+                if verdict == "defer":
+                    ws[1] = self.clock()  # the queue is live: not stale
+                    blocked = True
+                    return None
+                if verdict == "parked":
+                    if (self.clock() - ws[1]
+                            < self.inflation.stale_after_ttls * ttl):
+                        blocked = True
+                        return None
+                    bypass = True  # wedged queue: probe the word directly
+                else:
+                    ws[1] = self.clock()
+        finally:
+            self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
+            if enqueued or blocked or lease is not None:
+                with shard._meta:
+                    if enqueued:
+                        shard.queue_enqueues += 1
+                    if blocked:
+                        # Queue-mode pressure shows up in the same per-key
+                        # retry counter the deflated CAS lottery feeds, so
+                        # the hot-key report sees inflated keys too.
+                        shard.key_retries[key] = \
+                            shard.key_retries.get(key, 0) + 1
+                    if lease is not None:
+                        shard.grants += 1
+                        shard.grants_by_mode[LeaseMode.EXCLUSIVE] += 1
+                        shard.queue_grants += 1
+        return self._inflated_grant(p, shard, key, st, ttl, q, bypass)
+
+    def _inflated_grant(self, p: Process, shard: LockShard, key: str,
+                        st: _KeyState, ttl: float, q: InflatedKeyQueue,
+                        bypass: bool) -> Optional[Lease]:
+        """The cohort head's grant attempt: cheap word pre-check, then the
+        ordinary fully-validated critical-section grant.
+
+        ``bypass`` is the disorderly exit: a stale head stops trusting the
+        queue, and its grant (if the word really is free/expired) re-seeds
+        the key DEFLATED and discards the whole queue — every other waiter
+        notices its wait entry points at a dead epoch and starts over.
+        """
+        snap = p.counts.as_tuple()
+        local = p.node == shard.home_host
+        lease: Optional[Lease] = None
+        expired_over = False
+        repaired = False
+        discarded: Optional[Tuple[float, int]] = None
+        try:
+            if not bypass:
+                # Pre-check outside the CS: an entitled head polling a
+                # still-live holder must not pay a critical section per
+                # poll (that is the deflated path's failure mode).
+                now = self.clock()
+                if local:
+                    packed = self.mem.read(p, st.expires)
+                    fence = self.mem.read(p, st.fence)
+                else:
+                    packed, fence = self.mem.post_batch(
+                        p, [("read", st.expires), ("read", st.fence)])
+                etok, readers, eexp = packed
+                if (_trusted(etok, fence, readers)
+                        and _FREE_AT < eexp and now < eexp):
+                    return None  # live holder: stay entitled, poll again
+            shard.alock.lock(p)
+            writes: List[tuple] = []
+            try:
+                now = self.clock()
+                _holder, (etok, readers, eexp), fence, _barrier = \
+                    self._read_key_state(p, shard, st)
+                free = eexp <= _FREE_AT
+                clobbered = not _trusted(etok, fence, readers)
+                if not free and not clobbered and now < eexp:
+                    if _dec(readers) > 0:
+                        # Reader cohort under the inflated word: arm the
+                        # writer drain barrier, same bounded wait as the
+                        # deflated path.
+                        writes.append(("write", st.intent, eexp))
+                else:
+                    token = fence + 1
+                    keep = st.infl is q and not bypass
+                    if self.mem.auto_cas(
+                        p, st.expires, (etok, readers, eexp),
+                        (token, _enc(0, keep), now + ttl),
+                    ) == (etok, readers, eexp):
+                        lease = Lease(key, shard.index, p.pid, token,
+                                      now + ttl, ttl, LeaseMode.EXCLUSIVE,
+                                      keep)
+                        fence_val = token
+                        if keep:
+                            # Still inflated: re-reserve the direct-handoff
+                            # block (a bypass grant deflates, so its plain
+                            # ``token`` write re-syncs the mirror instead).
+                            st.infl_ceiling = fence_val = token + _INFL_RESERVE
+                        writes = [
+                            ("write", st.fence, fence_val),
+                            ("write", st.holder, p.pid),
+                            ("write", st.intent, _FREE_AT),
+                        ]
+                        repaired = clobbered
+                        expired_over = (not free) and not clobbered
+                        if bypass and st.infl is q:
+                            # Disorderly deflation: the queue is gone the
+                            # moment the deflated grant lands.
+                            st.infl = None
+                            self._estimator.mark_deflated(key, now)
+                            discarded = (now, token)
+            finally:
+                shard.alock.unlock(p, piggyback=writes or None)
+        finally:
+            self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
+        if lease is not None:
+            waits = self._pid_waits(p)
+            ws = waits.get(key)
+            if lease.inflated and ws is not None and ws[0] is q:
+                ws[2] = True  # holding via the queue: release must pass it
+            elif ws is not None and ws[0] is q:
+                del waits[key]  # granted deflated: no queue obligation
+        if discarded is not None:
+            self._log_infl_event(discarded[0], "deflate", key,
+                                 discarded[1], "bypass")
+        with shard._meta:
+            if lease is not None:
+                shard.grants += 1
+                shard.grants_by_mode[LeaseMode.EXCLUSIVE] += 1
+                shard.queue_grants += 1
+                if expired_over:
+                    shard.expirations += 1
+                if repaired:
+                    shard.repairs += 1
+                if discarded is not None:
+                    shard.queue_bypasses += 1
+                    shard.deflations += 1
+            else:
+                shard.rejects += 1
+                shard.rejects_by_mode[LeaseMode.EXCLUSIVE] += 1
+                shard.key_retries[key] = shard.key_retries.get(key, 0) + 1
+        return lease
+
+    def _inflated_release(self, p: Process, shard: LockShard, st: _KeyState,
+                          lease: Lease) -> Optional[bool]:
+        """Direct lock handoff — the inflated hot path's whole payoff.
+
+        A queue-entitled holder with a successor parked behind it does not
+        free the word at all: ONE witness CAS moves the word straight to
+        ``(token + 1, inflated, now + ttl)`` — ownership transferred, token
+        chain advanced — and the cohort pass (the budget write the handoff
+        was making anyway) carries ``(token, expires_at)`` to the successor,
+        whose next poll returns the lease without touching the word or the
+        shard CS.  Remote-holder cost: 1 rCAS + 1 rWrite per handoff,
+        regardless of contention; the thundering re-grant (pre-check + CS +
+        grant CAS per waiter) vanishes.
+
+        Returns ``None`` when direct handoff does not apply — no successor,
+        the cohort-budget fairness rule owes the other cohort a free word
+        to CAS for, the epoch's token reservation ran out, the lease is
+        already expired, or the caller is not queue-entitled — and the
+        ordinary release path (free the word, then pass plain entitlement
+        via :meth:`_inflated_handoff`) takes over.
+        """
+        q = st.infl
+        waits = self._pid_waits(p)
+        ws = waits.get(lease.key)
+        if (q is None or ws is None or ws[0] is not q or not ws[2]):
+            return None  # not holding via the live queue epoch
+        snap = p.counts.as_tuple()
+        passed: Optional[int] = None
+        try:
+            now = self.clock()
+            if (now >= lease.expires_at
+                    or lease.token + 1 > st.infl_ceiling
+                    or not q.can_direct(p)):
+                return None
+            token = lease.token + 1
+            expires = now + lease.ttl
+            witness = lease.witness()
+            if self.mem.auto_cas(
+                p, st.expires, witness,
+                (token, _enc(0, True), expires),
+            ) != witness:
+                return None  # superseded (zombie): ordinary path cleans up
+            del waits[lease.key]
+            # The window where a holder dies having moved the word to its
+            # successor's token but never written the successor's budget:
+            # the successor stalls parked, distrusts the queue after the
+            # staleness deadline, and bypasses to the (by then expired)
+            # word — the bypass grant deflates the key.
+            self._crash_point("deflate.mid", p)
+            q.pass_grant(p, token, expires)
+            passed = token
+            return True
+        finally:
+            self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
+            with shard._meta:
+                if passed is not None:
+                    shard.fast_releases += 1
+                    shard.queue_handoffs += 1
+
+    def _inflated_handoff(self, p: Process, shard: LockShard, st: _KeyState,
+                          key: str, lease: Lease) -> None:
+        """After releasing an inflated-mode grant: pass the queue on, and
+        deflate if the key has cooled.
+
+        The releaser hands its cohort's entitlement to its successor (one
+        local write — FIFO, no thundering herd) or drains the cohort.  When
+        its own cohort drained, the other cohort is empty too, the policy's
+        hysteresis says cold, and the word still carries the release value,
+        ONE CAS swings the mode bit off — the queue object is discarded
+        wholesale (a new epoch allocates fresh registers).
+        """
+        self._crash_point("deflate.mid", p)
+        q = st.infl
+        waits = self._pid_waits(p)
+        ws = waits.get(key)
+        if ws is not None and ws[0] is not q:
+            del waits[key]
+            return
+        if ws is None or not ws[2] or q is None:
+            return  # not holding via the queue (pre-inflation holder, or
+            # a reclaimed incarnation): nothing to pass — waiters poll the
+            # word and self-heal via the staleness bypass if stranded.
+        snap = p.counts.as_tuple()
+        deflated: Optional[Tuple[float, int]] = None
+        try:
+            drained = q.release(p)
+            del waits[key]
+            now = self.clock()
+            if (drained and st.infl is q and q.empty(p)
+                    and self._estimator.should_deflate(key, now)):
+                released_word = (lease.token, _enc(0, True), _FREE_AT)
+                if self.mem.auto_cas(
+                    p, st.expires, released_word,
+                    (lease.token, 0, _FREE_AT),
+                ) == released_word:
+                    st.infl = None
+                    self._estimator.mark_deflated(key, now)
+                    deflated = (now, lease.token)
+        finally:
+            self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
+            if deflated is not None:
+                self._log_infl_event(deflated[0], "deflate", key,
+                                     deflated[1], "cool")
+            with shard._meta:
+                shard.queue_handoffs += 1
+                if deflated is not None:
+                    shard.deflations += 1
 
     def acquire(self, p: Process, key: str, ttl: float,
                 timeout: Optional[float] = None,
@@ -739,19 +1274,26 @@ class ShardedLockTable:
                 mode: LeaseMode = LeaseMode.EXCLUSIVE) -> Lease:
         """Blocking acquire: retry ``try_acquire`` until granted or timeout.
 
-        ``poll`` backs off between attempts — every retry is a full shard
-        ALock transaction (remote ops for remote clients), so spinning at
-        full rate would burn a core *and* inflate the REMOTE-class telemetry
-        with retry traffic.
+        Rejected attempts back off with seeded-jitter binary exponential
+        delay: base ``poll``, doubling per consecutive reject up to
+        ``poll * _BACKOFF_CAP_POLLS``, each sleep scaled by a seeded
+        uniform in [0.5, 1.5).  Every retry is a full table transaction
+        (remote ops for remote clients), so fixed-interval polling under a
+        hot key synchronises the herd — all losers re-arrive together —
+        while the jittered doubling spreads them out.  Both the clock and
+        the RNG are injected/seeded, so the sim schedule stays a pure
+        function of the seed.
         """
         deadline = None if timeout is None else self.clock() + timeout
+        delay = poll
         while True:
             lease = self.try_acquire(p, key, ttl, mode=mode)
             if lease is not None:
                 return lease
             if deadline is not None and self.clock() > deadline:
                 raise TimeoutError(f"lease on {key!r} not granted in {timeout}s")
-            self.sleep(poll)
+            self.sleep(delay * (0.5 + self._rng.random()))
+            delay = min(delay * 2.0, poll * _BACKOFF_CAP_POLLS)
 
     def renew(self, p: Process, lease: Lease, ttl: Optional[float] = None) -> Optional[Lease]:
         """Extend a still-valid lease; ``None`` if it was lost (fencing).
@@ -783,16 +1325,17 @@ class ShardedLockTable:
         try:
             now = self.clock()
             if now < lease.expires_at:
-                witness = (lease.token, 0, lease.expires_at)
+                witness = lease.witness()
                 observed = self.mem.auto_cas(
-                    p, st.expires, witness, (lease.token, 0, now + ttl)
+                    p, st.expires, witness,
+                    (lease.token, _enc(0, lease.inflated), now + ttl)
                 )
                 if observed == witness:
                     with shard._meta:
                         shard.fast_renews += 1
                     return Lease(lease.key, lease.shard, lease.holder_pid,
                                  lease.token, now + ttl, ttl,
-                                 LeaseMode.EXCLUSIVE)
+                                 LeaseMode.EXCLUSIVE, lease.inflated)
             shard.alock.lock(p)
             renewed = None
             try:
@@ -809,18 +1352,22 @@ class ShardedLockTable:
                     holder == lease.holder_pid
                     and fence == lease.token
                     and etok == fence
-                    and readers == 0
+                    and _dec(readers) == 0
                     and _FREE_AT < eexp
                     and now < eexp
                 ):
-                    # CAS against the read value (the word is CAS-only).
+                    # CAS against the read value (the word is CAS-only);
+                    # the readers field is written back as observed, so a
+                    # renewal never flips the mode bit — a holder whose key
+                    # inflated under it renews fine and learns the mode.
                     if self.mem.auto_cas(
                         p, st.expires, (etok, readers, eexp),
-                        (lease.token, 0, now + ttl),
+                        (lease.token, readers, now + ttl),
                     ) == (etok, readers, eexp):
                         renewed = Lease(lease.key, lease.shard,
                                         lease.holder_pid, lease.token,
-                                        now + ttl, ttl, LeaseMode.EXCLUSIVE)
+                                        now + ttl, ttl, LeaseMode.EXCLUSIVE,
+                                        _infl(readers))
             finally:
                 shard.alock.unlock(p)
             return renewed
@@ -844,13 +1391,14 @@ class ShardedLockTable:
                 if now < barrier:
                     intent_block = True  # writer draining: stop extending
                     break
-                if (etok != lease.token or etok != fence or readers <= 0
-                        or now >= eexp):
+                if (etok != lease.token or etok != fence
+                        or _dec(readers) <= 0 or now >= eexp):
                     break  # generation moved on, clobbered, or expired
                 new = (etok, readers, max(eexp, now + ttl))
                 if self.mem.auto_cas(p, st.expires, packed, new) == packed:
                     renewed = Lease(lease.key, lease.shard, lease.holder_pid,
-                                    etok, now + ttl, ttl, LeaseMode.SHARED)
+                                    etok, now + ttl, ttl, LeaseMode.SHARED,
+                                    _infl(readers))
                     break
                 self.mem.yield_point()  # lost to another shared CAS: retry
         finally:
@@ -887,11 +1435,17 @@ class ShardedLockTable:
         st = self._key_state(shard, lease.key)
         if lease.mode == LeaseMode.SHARED:
             return self._shared_release(p, shard, st, lease)
+        if lease.inflated and self.inflation is not None:
+            handled = self._inflated_release(p, shard, st, lease)
+            if handled is not None:
+                return handled
         snap = p.counts.as_tuple()
+        handoff = lease.inflated
         try:
-            witness = (lease.token, 0, lease.expires_at)
+            witness = lease.witness()
             observed = self.mem.auto_cas(
-                p, st.expires, witness, (lease.token, 0, _FREE_AT)
+                p, st.expires, witness,
+                (lease.token, _enc(0, lease.inflated), _FREE_AT)
             )
             if observed == witness:
                 with shard._meta:
@@ -899,6 +1453,7 @@ class ShardedLockTable:
                 return True
             shard.alock.lock(p)
             released = False
+            infl_word = False
             writes = None
             try:
                 holder, (etok, readers, eexp), fence, _barrier = \
@@ -911,21 +1466,29 @@ class ShardedLockTable:
                 if (
                     holder == lease.holder_pid
                     and fence == lease.token
-                    and readers == 0
+                    and _dec(readers) == 0
                     and not (etok == fence and eexp <= _FREE_AT)
                 ):
-                    # CAS against the read value (the word is CAS-only).
+                    # CAS against the read value (the word is CAS-only);
+                    # the readers field carries the mode bit through —
+                    # a release never deflates by accident.
                     if self.mem.auto_cas(
                         p, st.expires, (etok, readers, eexp),
-                        (lease.token, 0, _FREE_AT),
+                        (lease.token, readers, _FREE_AT),
                     ) == (etok, readers, eexp):
                         writes = [("write", st.holder, _NO_HOLDER)]
                         released = True
+                        infl_word = _infl(readers)
             finally:
                 shard.alock.unlock(p, piggyback=writes)
+            handoff = handoff or (released and infl_word)
             return released
         finally:
             self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
+            if handoff:
+                # Outside the ops accounting above: the handoff does its
+                # own snapshot (its queue ops must not be double-counted).
+                self._inflated_handoff(p, shard, st, lease.key, lease)
 
     def _shared_release(self, p: Process, shard: LockShard, st: _KeyState,
                         lease: Lease) -> bool:
@@ -947,10 +1510,11 @@ class ShardedLockTable:
                 else:
                     packed = self.mem.rread(p, st.expires)
                 etok, readers, eexp = packed
-                if etok != lease.token or readers <= 0:
+                dec, infl = _dec(readers), _infl(readers)
+                if etok != lease.token or dec <= 0:
                     break  # the generation moved on: nothing to release
-                new = (etok, readers - 1,
-                       eexp if readers > 1 else _FREE_AT)
+                new = (etok, _enc(dec - 1, infl),
+                       eexp if dec > 1 else _FREE_AT)
                 if self.mem.auto_cas(p, st.expires, packed, new) == packed:
                     released = True
                     break
@@ -996,17 +1560,18 @@ class ShardedLockTable:
                 now = self.clock()
                 _holder, (etok, readers, eexp), fence, _barrier = \
                     self._read_key_state(p, shard, st)
-                if (etok == fence == lease.token and readers >= 1
+                if (etok == fence == lease.token and _dec(readers) >= 1
                         and _FREE_AT < eexp and now < eexp
                         and now < lease.expires_at):
-                    if readers == 1:  # the sole live reader is us
+                    if _dec(readers) == 1:  # the sole live reader is us
                         token = fence + 1
+                        infl = _infl(readers)
                         # CAS, not write: a CS-free join can slip in between
                         # the read and this commit — it must not be stomped
                         # into a phantom reader under our exclusive grant.
                         if self.mem.auto_cas(
                             p, st.expires, (etok, readers, eexp),
-                            (token, 0, now + ttl),
+                            (token, _enc(0, infl), now + ttl),
                         ) == (etok, readers, eexp):
                             writes = [
                                 ("write", st.fence, token),
@@ -1015,7 +1580,7 @@ class ShardedLockTable:
                             ]
                             upgraded = Lease(lease.key, lease.shard, p.pid,
                                              token, now + ttl, ttl,
-                                             LeaseMode.EXCLUSIVE)
+                                             LeaseMode.EXCLUSIVE, infl)
                         else:  # a joiner beat us: drain them first
                             writes = [("write", st.intent, eexp)]
                     else:  # drain the rest of the cohort first
@@ -1062,14 +1627,15 @@ class ShardedLockTable:
         try:
             now = self.clock()
             if now < lease.expires_at:
-                witness = (lease.token, 0, lease.expires_at)
+                witness = lease.witness()
                 observed = self.mem.auto_cas(
-                    p, st.expires, witness, (lease.token, 1, now + ttl)
+                    p, st.expires, witness,
+                    (lease.token, _enc(1, lease.inflated), now + ttl)
                 )
                 if observed == witness:
                     downgraded = Lease(lease.key, lease.shard, p.pid,
                                        lease.token, now + ttl, ttl,
-                                       LeaseMode.SHARED)
+                                       LeaseMode.SHARED, lease.inflated)
         finally:
             self._account(shard, p, snap, LeaseMode.SHARED)
         if downgraded is not None:
@@ -1077,6 +1643,12 @@ class ShardedLockTable:
                             downgraded.expires_at)
             with shard._meta:
                 shard.downgrades += 1
+            if lease.inflated:
+                # The writer slot is gone: pass the queue entitlement on
+                # (the word is reader-held, so the deflate CAS inside the
+                # handoff can never fire — successors drain the cohort via
+                # the intent barrier like any queued writer).
+                self._inflated_handoff(p, shard, st, lease.key, lease)
         return downgraded
 
     # ------------------------------------------------------ crash recovery
@@ -1100,8 +1672,12 @@ class ShardedLockTable:
 
         **EXCLUSIVE word-probe path**: the witness can be stale-LOW (a
         renewal's CAS landed but its ledger record died with the client),
-        so a missed fast CAS re-reads the authoritative word and CASes
-        against *it* — still CS-free.  Sound for the same reason the
+        so a missed fast CAS probes the authoritative word and CASes
+        against *it* — still CS-free, and the probe reuses the failed
+        CAS's own observation (a CAS returns the word), so a dead lease
+        costs exactly the one rCAS that discovered it and a stale-LOW
+        reclaim costs two, with a fresh read doorbell paid only when the
+        witness was already expired and no CAS was attempted.  Sound for the same reason the
         renewal fast path is: fence tokens are never reused, so a word
         still carrying OUR token with no readers IS our live grant, and
         re-timing it is just a renewal.  Restart recovery therefore costs
@@ -1135,32 +1711,46 @@ class ShardedLockTable:
         fast = False
         try:
             now = self.clock()
+            packed = None
             if now < lease.expires_at:
-                witness = (lease.token, 0, lease.expires_at)
+                witness = lease.witness()
                 observed = self.mem.auto_cas(
-                    p, st.expires, witness, (lease.token, 0, now + ttl)
+                    p, st.expires, witness,
+                    (lease.token, _enc(0, lease.inflated), now + ttl)
                 )
                 if observed == witness:
                     got = Lease(lease.key, lease.shard, lease.holder_pid,
                                 lease.token, now + ttl, ttl,
-                                LeaseMode.EXCLUSIVE)
+                                LeaseMode.EXCLUSIVE, lease.inflated)
                     fast = True
+                else:
+                    # A failed CAS *returns* the word: the probe below
+                    # starts from that observation instead of paying a
+                    # fresh read doorbell for the same value.
+                    packed = observed
             if got is None:
                 for _ in range(_FAST_ATTEMPTS):
                     now = self.clock()
-                    packed = self.mem.auto_read(p, st.expires)
+                    if packed is None:
+                        packed = self.mem.auto_read(p, st.expires)
                     etok, readers, eexp = packed
-                    if (etok != lease.token or readers != 0
+                    if (etok != lease.token or _dec(readers) != 0
                             or eexp <= _FREE_AT or now >= eexp):
                         break  # expired, re-granted, or a reader generation
-                    if self.mem.auto_cas(
-                        p, st.expires, packed, (lease.token, 0, now + ttl)
-                    ) == packed:
+                    # The readers field is written back as observed: a
+                    # reclaim learns the word's current mode (the key may
+                    # have inflated or deflated since the ledger record).
+                    observed = self.mem.auto_cas(
+                        p, st.expires, packed, (lease.token, readers,
+                                                now + ttl)
+                    )
+                    if observed == packed:
                         got = Lease(lease.key, lease.shard, lease.holder_pid,
                                     lease.token, now + ttl, ttl,
-                                    LeaseMode.EXCLUSIVE)
+                                    LeaseMode.EXCLUSIVE, _infl(readers))
                         break
-                    self.mem.yield_point()  # lost a word race: re-read
+                    packed = observed  # lost a word race: the loser's
+                    self.mem.yield_point()  # observation feeds the retry
         finally:
             self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
         with shard._meta:
@@ -1190,13 +1780,14 @@ class ShardedLockTable:
                 etok, readers, eexp = packed
                 if now < barrier:
                     break  # writer draining: no extensions, no re-adoption
-                if (etok != lease.token or etok != fence or readers <= 0
-                        or now >= eexp):
+                if (etok != lease.token or etok != fence
+                        or _dec(readers) <= 0 or now >= eexp):
                     break  # generation moved on, clobbered, or expired
                 new = (etok, readers, max(eexp, now + ttl))
                 if self.mem.auto_cas(p, st.expires, packed, new) == packed:
                     got = Lease(lease.key, lease.shard, p.pid, etok,
-                                now + ttl, ttl, LeaseMode.SHARED)
+                                now + ttl, ttl, LeaseMode.SHARED,
+                                _infl(readers))
                     break
                 self.mem.yield_point()  # lost to another shared CAS: retry
         finally:
@@ -1247,17 +1838,18 @@ class ShardedLockTable:
                     if (
                         holder in dead
                         and etok == fence
-                        and readers == 0
+                        and _dec(readers) == 0
                         and _FREE_AT < eexp
                         and now < eexp
                     ):
                         if self.mem.auto_cas(
                             p, st.expires, (etok, readers, eexp),
-                            (etok, 0, now + ttl),
+                            (etok, readers, now + ttl),
                         ) == (etok, readers, eexp):
                             writes = [("write", st.holder, p.pid)]
                             got = Lease(key, shard.index, p.pid, etok,
-                                        now + ttl, ttl, LeaseMode.EXCLUSIVE)
+                                        now + ttl, ttl, LeaseMode.EXCLUSIVE,
+                                        _infl(readers))
                 finally:
                     shard.alock.unlock(p, piggyback=writes)
         finally:
@@ -1366,6 +1958,19 @@ class ShardedLockTable:
                                     ("write", st.holder, _NO_HOLDER),
                                     ("write", st.intent, _FREE_AT),
                                 ]
+                                if st.infl is not None:
+                                    # Re-seeded FREE and DEFLATED: a reset
+                                    # key's queue state is as untrusted as
+                                    # its registers were.
+                                    st.infl = None
+                                    if self._estimator is not None:
+                                        self._estimator.mark_deflated(
+                                            key, now)
+                                    self._log_infl_event(now, "deflate",
+                                                         key, nf,
+                                                         "reconstruct")
+                                    with shard._meta:
+                                        shard.deflations += 1
                                 break
                             packed = self.mem.auto_read(p, st.expires)
                             self.mem.yield_point()
@@ -1417,19 +2022,25 @@ class ShardedLockTable:
                     j += 1
                 group = ordered[i:j]
                 start = 0
+                delay = poll
                 while start < len(group):
                     granted, blocked = self._acquire_group(
                         p, shard, group[start:], ttl, mode
                     )
                     held.extend(granted)
                     start += len(granted)
+                    if granted:
+                        delay = poll  # progress: reset the backoff ladder
                     if blocked:
                         if deadline is not None and self.clock() > deadline:
                             raise TimeoutError(
                                 f"batch lease on {group[start]!r} not granted "
                                 f"in {timeout}s"
                             )
-                        self.sleep(poll)
+                        # Same seeded-jitter exponential backoff as
+                        # ``acquire`` (see there for the rationale).
+                        self.sleep(delay * (0.5 + self._rng.random()))
+                        delay = min(delay * 2.0, poll * _BACKOFF_CAP_POLLS)
                 i = j
                 if i < n:
                     # Between two shard groups: a prefix of the batch is
@@ -1471,6 +2082,7 @@ class ShardedLockTable:
         # --- EXCLUSIVE leases: witness CASes, one doorbell for the group.
         excl = [l for l in group if l.mode == LeaseMode.EXCLUSIVE]
         slow: List[Lease] = []
+        handoffs: List[Tuple[_KeyState, Lease]] = []
         if excl:
             snap = p.counts.as_tuple()
             nfast = 0
@@ -1478,20 +2090,21 @@ class ShardedLockTable:
                 sts = [self._key_state(shard, l.key) for l in excl]
                 if local:
                     observed = [
-                        self.mem.cas(p, st.expires,
-                                     (l.token, 0, l.expires_at),
-                                     (l.token, 0, _FREE_AT))
+                        self.mem.cas(p, st.expires, l.witness(),
+                                     (l.token, _enc(0, l.inflated), _FREE_AT))
                         for st, l in zip(sts, excl)
                     ]
                 else:
                     observed = self.mem.post_batch(p, [
-                        ("cas", st.expires, (l.token, 0, l.expires_at),
-                         (l.token, 0, _FREE_AT))
+                        ("cas", st.expires, l.witness(),
+                         (l.token, _enc(0, l.inflated), _FREE_AT))
                         for st, l in zip(sts, excl)
                     ])
-                for lease, obs in zip(excl, observed):
-                    if obs == (lease.token, 0, lease.expires_at):
+                for lease, st, obs in zip(excl, sts, observed):
+                    if obs == lease.witness():
                         nfast += 1
+                        if lease.inflated:
+                            handoffs.append((st, lease))
                     else:
                         slow.append(lease)
             finally:
@@ -1499,6 +2112,8 @@ class ShardedLockTable:
             with shard._meta:
                 shard.fast_releases += nfast
             released += nfast
+            for st, lease in handoffs:
+                self._inflated_handoff(p, shard, st, lease.key, lease)
             if slow:
                 released += self._release_group_slow(p, shard, slow)
         # --- SHARED leases: cohort reads + decrement CASes, batched.
@@ -1515,6 +2130,7 @@ class ShardedLockTable:
         local = p.node == shard.home_host
         released = 0
         writes: List[tuple] = []
+        handoffs: List[Tuple[_KeyState, Lease]] = []
         try:
             if local:
                 shard.alock.lock(p)
@@ -1543,38 +2159,43 @@ class ShardedLockTable:
                 else:
                     vals = [tuple(flat[3 * i:3 * i + 3])
                             for i in range(len(states))]
-                plan = []  # (st, packed-as-read, release tuple)
+                plan = []  # (st, packed-as-read, release tuple, lease)
                 for lease, st, (holder, (etok, readers, eexp), fence) in zip(
                         group, states, vals):
                     if (
                         holder == lease.holder_pid
                         and fence == lease.token
-                        and readers == 0
+                        and _dec(readers) == 0
                         and not (etok == fence and eexp <= _FREE_AT)
                     ):
                         plan.append((st, (etok, readers, eexp),
-                                     (lease.token, 0, _FREE_AT)))
+                                     (lease.token, readers, _FREE_AT),
+                                     lease))
                 # Commit by CAS (the word is CAS-only — a CS-free join can
                 # land between read and commit); one doorbell for the group.
                 if plan:
                     if local:
                         won = [self.mem.cas(p, st.expires, packed, new)
-                               == packed for st, packed, new in plan]
+                               == packed for st, packed, new, _l in plan]
                     else:
                         obs = self.mem.post_batch(p, [
                             ("cas", st.expires, packed, new)
-                            for st, packed, new in plan
+                            for st, packed, new, _l in plan
                         ])
                         won = [o == packed
-                               for o, (_s, packed, _n) in zip(obs, plan)]
-                    for (st, _packed, _new), ok in zip(plan, won):
+                               for o, (_s, packed, _n, _l) in zip(obs, plan)]
+                    for (st, packed, _new, lease), ok in zip(plan, won):
                         if ok:
                             writes.append(("write", st.holder, _NO_HOLDER))
                             released += 1
+                            if _infl(packed[1]):
+                                handoffs.append((st, lease))
             finally:
                 shard.alock.unlock(p, piggyback=writes or None)
         finally:
             self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
+        for st, lease in handoffs:
+            self._inflated_handoff(p, shard, st, lease.key, lease)
         return released
 
     def _release_group_shared(self, p: Process, shard: LockShard,
@@ -1614,10 +2235,11 @@ class ShardedLockTable:
                 wrs, metas = [], []
                 for (lease, st), packed in zip(pending, packeds):
                     etok, readers, eexp = packed
-                    if etok != lease.token or readers <= 0:
+                    dec, infl = _dec(readers), _infl(readers)
+                    if etok != lease.token or dec <= 0:
                         continue  # generation moved on: nothing to release
-                    new = (etok, readers - 1,
-                           eexp if readers > 1 else _FREE_AT)
+                    new = (etok, _enc(dec - 1, infl),
+                           eexp if dec > 1 else _FREE_AT)
                     wrs.append(("cas", st.expires, packed, new))
                     metas.append((lease, packed))
                 outs = self.mem.post_batch(p, wrs) if wrs else []
@@ -1680,6 +2302,14 @@ class ShardedLockTable:
                     "orphan_adopts": shard.orphan_adopts,
                     "reconstructions": shard.reconstructions,
                     "reconstruct_resets": shard.reconstruct_resets,
+                    "inflations": shard.inflations,
+                    "deflations": shard.deflations,
+                    "queue_enqueues": shard.queue_enqueues,
+                    "queue_grants": shard.queue_grants,
+                    "queue_handoffs": shard.queue_handoffs,
+                    "queue_bypasses": shard.queue_bypasses,
+                    "contended_keys": len(shard.key_retries),
+                    "blocked_attempts": sum(shard.key_retries.values()),
                     "local": shard.stats[LOCAL].snapshot(),
                     "remote": shard.stats[REMOTE].snapshot(),
                     "shared_local":
@@ -1692,6 +2322,37 @@ class ShardedLockTable:
                         shard.mode_stats[(LeaseMode.EXCLUSIVE, REMOTE)].snapshot(),
                 })
         return out
+
+    def queued(self, p: Process, key: str) -> bool:
+        """Is ``p`` parked in ``key``'s inflated-mode queue?  Host-side
+        metadata check, zero simulated ops — clients use it to pick their
+        retry cadence: a queued waiter's poll is ONE local read (the MCS
+        local spin), so it polls fine-grained instead of exponentially
+        backing off like a CAS-word contender."""
+        ws = self._waits.get(p.pid, {}).get(key)
+        if ws is None:
+            return False
+        st = self.shards[self.shard_of(key)].keys.get(key)
+        return st is not None and st.infl is ws[0]
+
+    def hot_keys(self, k: int = 10) -> List[List]:
+        """Top-``k`` keys by blocked-attempt count across all shards, as
+        ``[key, blocked_attempts]`` rows (count-desc, then key — a total
+        order, so the report is deterministic)."""
+        merged: Dict[str, int] = {}
+        for shard in self.shards:
+            with shard._meta:
+                for key, n in shard.key_retries.items():
+                    merged[key] = merged.get(key, 0) + n
+        ranked = sorted(merged.items(), key=lambda kv: (-kv[1], kv[0]))
+        return [[key, n] for key, n in ranked[:k]]
+
+    def inflation_log(self) -> List[List]:
+        """The inflate/deflate event log, in decision order: rows of
+        ``[t, action, key, token, reason]``.  Same-seed sim runs produce
+        byte-identical logs (the CI determinism gate relies on it)."""
+        with self._infl_guard:
+            return [list(row) for row in self._infl_events]
 
     def class_totals(self) -> Dict[int, OpCounts]:
         """Aggregate per-class OpCounts across all shards."""

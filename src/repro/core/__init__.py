@@ -22,7 +22,7 @@ from .memory import (  # noqa: F401
     Register,
     make_scheduler,
 )
-from .mcs import BudgetedMCSLock  # noqa: F401
+from .mcs import BudgetedMCSLock, InflatedKeyQueue  # noqa: F401
 from .peterson import ModifiedPetersonLock  # noqa: F401
 from .alock import (  # noqa: F401
     ALock,

@@ -173,3 +173,227 @@ class BudgetedMCSLock:
     def q_is_locked(self, p: Process) -> bool:
         """Peterson "interested" test for this class (Algorithm 2 line 20)."""
         return self.mem.auto_read(p, self.tail) is not NULLPTR
+
+    # ------------------------------------------------- split-phase variant
+    # The blocking q_lock/q_unlock pair above is what ALock composes.  The
+    # lock table's *inflated keys* need the same queue discipline but
+    # cannot block (sim clients are cooperative generator tasks; a spin
+    # inside one table call would wedge the engine's atomic step), so the
+    # acquire is split into enqueue → poll → pass:
+    #
+    #   q_enqueue  — publish + swap into the tail + link; NEVER spins.
+    #   q_granted  — "has the entitlement reached me?": a machine-local
+    #                read of the caller's own budget register (0 RDMA per
+    #                poll — the MCS local-spinning property, poll-shaped).
+    #   q_pass     — hand the entitlement to the successor (budget - 1,
+    #                recycling to init_budget past zero) or drain the tail.
+    #
+    # There is no p_reacquire hook on this path: the inflated queue has no
+    # enclosing Peterson.  Inter-cohort arbitration happens at the shard
+    # ALock every grant passes through; a zero budget merely tells the
+    # head to defer one poll round to the other cohort (see
+    # InflatedKeyQueue.poll), preserving the cohort-budget fairness shape
+    # without a second global lock.
+
+    def q_enqueue(self, p: Process) -> bool:
+        """Split-phase front half of :meth:`q_lock`: returns ``True`` iff
+        the queue was empty (the caller is the cohort leader and already
+        entitled — its budget is set to ``init_budget``).  ``False`` means
+        parked behind a predecessor: poll :meth:`q_granted`.
+
+        Cost (same as the q_lock front half): a lone remote enqueue is
+        1 rCAS; a queued one adds 1 rWrite for the link; every local-class
+        call is 0 RDMA.  The tail CAS + link land in one table call, so
+        under the sim engine's atomic steps the predecessor can never
+        observe the swapped-but-unlinked window.
+        """
+        mem = self.mem
+        d = self._desc(p)
+        mem.auto_write(p, d.budget, -1)
+        mem.auto_write(p, d.next, NULLPTR)
+        curr: Any = NULLPTR
+        while True:
+            observed = mem.auto_cas(p, self.tail, expected=curr, swap=p.pid)
+            if observed == curr:
+                break
+            curr = observed
+        if curr is NULLPTR:
+            mem.auto_write(p, d.budget, self.init_budget)
+            return True
+        pred = self._desc_of(curr)
+        mem.auto_write(p, pred.next, p.pid)
+        return False
+
+    def q_granted(self, p: Process) -> int:
+        """Non-blocking entitlement poll: the caller's own budget register
+        (a machine-local read — its descriptor lives on its node).
+        ``-1`` = still parked; ``>= 0`` = entitled, value is the budget."""
+        return self.mem.auto_read(p, self._desc(p).budget)
+
+    def q_set_budget(self, p: Process, value: int) -> None:
+        """Reset the caller's own budget (machine-local write) — used by
+        the split-phase defer round when a handed-down budget hits zero."""
+        self.mem.auto_write(p, self._desc(p).budget, value)
+
+    def q_has_successor(self, p: Process) -> bool:
+        """Is someone linked behind the caller?  One machine-local read of
+        the caller's own ``next`` pointer — the direct-handoff peek."""
+        return self.mem.auto_read(p, self._desc(p).next) is not NULLPTR
+
+    def q_pass(self, p: Process, payload: Optional[tuple] = None) -> bool:
+        """Split-phase release: drain the tail (``True``) or hand the
+        entitlement to the successor with a decremented budget (``False``).
+
+        A budget already at zero recycles to ``init_budget - 1`` on the
+        way down: with no global lock to reacquire, the zero itself is the
+        fairness signal (consumed by the head's defer round), and handing
+        a raw ``-1`` would read as "parked" and lose the wakeup.  The
+        wait-for-link spin is reachable only threaded — under the sim's
+        atomic steps an enqueue's tail CAS and link land in one step.
+
+        ``payload`` rides the same budget write: the successor receives
+        ``(budget, *payload)`` instead of the bare integer — the direct
+        lock handoff (the releaser already transferred ownership via the
+        word; the tuple tells the successor what it now holds).  Costs
+        nothing extra: it is the one write the pass was making anyway.
+        """
+        mem = self.mem
+        d = self._desc(p)
+        if mem.auto_read(p, d.next) is NULLPTR:
+            if mem.auto_cas(p, self.tail, expected=p.pid, swap=NULLPTR) == p.pid:
+                return True  # cohort drained
+            while mem.auto_read(p, d.next) is NULLPTR:
+                mem.yield_point()
+        nxt = self._desc_of(mem.auto_read(p, d.next))
+        budget = mem.auto_read(p, d.budget)
+        if isinstance(budget, tuple):  # an unconsumed direct grant: its
+            budget = budget[0]         # budget share still counts down
+        handoff = budget - 1 if budget > 0 else self.init_budget - 1
+        value = (handoff,) + tuple(payload) if payload is not None else handoff
+        mem.auto_write(p, nxt.budget, value)
+        return False
+
+
+LOCAL_COHORT, REMOTE_COHORT = 0, 1
+
+
+class InflatedKeyQueue:
+    """The per-key queue a hot (inflated) lock-table key escalates into.
+
+    Two split-phase :class:`BudgetedMCSLock` cohorts — one for the key's
+    home-host clients (every operation machine-local, 0 RDMA), one for
+    everyone else (1 rCAS + ≤1 rWrite to enqueue, then local polling) —
+    exactly ALock's asymmetric shape, minus the Peterson layer: at most
+    one *leader per cohort* is entitled at a time, and the shard ALock
+    that every grant transaction already passes through arbitrates
+    between the (≤ 2) entitled leaders.  Mixing both classes in ONE queue
+    would be unsound: the tail register would see local CAS and rCAS
+    interleaved, the non-atomic combination of Table 1.
+
+    The queue is *advisory ordering and admission throttling*: safety
+    (mutual exclusion, fencing) always comes from the packed word and the
+    shard critical section.  A crashed head strands its cohort only until
+    the staleness deadline, after which waiters bypass the queue and probe
+    the word directly (the table then deflates the key — disorderly events
+    always reset queue state rather than trust it).
+
+    One instance per inflation *epoch*: deflation discards the whole
+    object (register names carry the epoch, so re-inflation cannot alias
+    a dead epoch's descriptors).
+    """
+
+    def __init__(self, mem: AsymmetricMemory, home_node: int,
+                 init_budget: int, name: str):
+        self.mem = mem
+        self.home_node = home_node
+        self.cohorts = tuple(
+            BudgetedMCSLock(
+                mem,
+                mem.alloc(home_node, f"{name}.c{cid}.tail", NULLPTR),
+                init_budget,
+                f"{name}.c{cid}",
+            )
+            for cid in (LOCAL_COHORT, REMOTE_COHORT)
+        )
+
+    def cid_of(self, p: Process) -> int:
+        return LOCAL_COHORT if p.node == self.home_node else REMOTE_COHORT
+
+    def enqueue(self, p: Process) -> bool:
+        """Join the caller's class cohort; True iff immediately entitled."""
+        return self.cohorts[self.cid_of(p)].q_enqueue(p)
+
+    def poll(self, p: Process) -> str:
+        """``"parked"`` (not yet head — the poll was one local read, 0
+        RDMA), ``"granted"`` (the predecessor handed the lock itself over:
+        consume with :meth:`take_grant`), ``"defer"`` (head, but the
+        handed budget hit zero and the other cohort is waiting: yield one
+        round — the cohort-budget fairness bound), or ``"entitled"``
+        (head: go attempt the grant on the word)."""
+        cid = self.cid_of(p)
+        mine = self.cohorts[cid]
+        budget = mine.q_granted(p)
+        if isinstance(budget, tuple):
+            return "granted"
+        if budget < 0:
+            return "parked"
+        if budget == 0:
+            mine.q_set_budget(p, mine.init_budget)
+            if self.cohorts[1 - cid].q_is_locked(p):
+                return "defer"
+        return "entitled"
+
+    def can_direct(self, p: Process) -> bool:
+        """May the releaser hand the lock straight to its successor?
+
+        True iff someone is linked behind it AND the cohort-budget
+        fairness rule does not owe the other cohort a turn (a handoff
+        that would arrive at budget ≤ 0 while the other cohort waits).
+        The successor peek and budget read are machine-local; the other
+        cohort's tail is read only when the budget actually runs out —
+        amortised to one remote read per ``init_budget`` handoffs."""
+        cid = self.cid_of(p)
+        mine = self.cohorts[cid]
+        if not mine.q_has_successor(p):
+            return False
+        budget = mine.q_granted(p)
+        if isinstance(budget, tuple):
+            budget = budget[0]
+        if budget <= 1:  # successor would land at <= 0: other class's turn?
+            return not self.cohorts[1 - cid].q_is_locked(p)
+        return True
+
+    def pass_grant(self, p: Process, token: int, expires_at: float) -> bool:
+        """Direct handoff: pass the cohort entitlement AND the lock — the
+        caller already CAS'd the word over to ``token``; the successor's
+        budget register receives ``(budget, token, expires_at)`` and its
+        next poll returns ``"granted"``.  Same single write as a plain
+        pass.  True iff the cohort drained instead (no successor after
+        all — the grant value was never written; the caller must treat
+        the handoff as declined)."""
+        return self.cohorts[self.cid_of(p)].q_pass(
+            p, payload=(token, expires_at))
+
+    def take_grant(self, p: Process) -> Optional[tuple]:
+        """Consume a pending direct grant: returns ``(token, expires_at)``
+        and resets the budget register to its plain integer share (later
+        polls read an ordinary entitlement), or ``None`` if nothing is
+        pending."""
+        mine = self.cohorts[self.cid_of(p)]
+        v = mine.q_granted(p)
+        if not isinstance(v, tuple):
+            return None
+        budget, token, expires_at = v
+        mine.q_set_budget(p, budget)
+        return (token, expires_at)
+
+    def release(self, p: Process) -> bool:
+        """Pass the entitlement within the caller's cohort (or drain it).
+        True iff the caller's cohort is now empty."""
+        return self.cohorts[self.cid_of(p)].q_pass(p)
+
+    def empty(self, p: Process) -> bool:
+        """Both cohorts drained (two tail reads; machine-local for the
+        home host).  Used inside grant transactions and by deflation."""
+        return not (self.cohorts[LOCAL_COHORT].q_is_locked(p)
+                    or self.cohorts[REMOTE_COHORT].q_is_locked(p))

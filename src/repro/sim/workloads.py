@@ -64,8 +64,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
-from repro.coord import (ClientCrash, FaultInjector, LedgerStore,
-                         RecoverableClient, ShardedLockTable)
+from repro.coord import (ClientCrash, FaultInjector, InflationPolicy,
+                         LedgerStore, RecoverableClient, ShardedLockTable)
 from repro.coord.table import EXCLUSIVE, LOCAL, REMOTE, SHARED, LeaseMode
 
 from .engine import SimEngine
@@ -115,7 +115,7 @@ class _RunState:
                  "token_regressions", "zombie_renews",
                  "grants_by_mode", "writer_waits",
                  "crashes", "reclaims", "recovery_latencies",
-                 "recovery_events")
+                 "recovery_events", "hot_latencies", "hot_rcas")
 
     def __init__(self, nclients: int, target: int):
         self.per_client = [0] * nclients
@@ -132,6 +132,11 @@ class _RunState:
         self.recovery_latencies: List[float] = []
         # One entry per completed restart: [client idx, leases recovered].
         self.recovery_events: List[List[int]] = []
+        # Tracked-hot-key probes (zipfian workload): per-grant acquire
+        # latency in virtual time, and the rCAS each REMOTE client paid
+        # from first attempt to grant — the quantity inflation bounds.
+        self.hot_latencies: List[float] = []
+        self.hot_rcas: List[int] = []
 
     def done(self) -> bool:
         return self.total >= self.target
@@ -218,6 +223,53 @@ def _acquire_release_client(table, p, rng, pick, st, idx, ttl):
             backoff = min(backoff * 2, BACKOFF_CAP)
             continue
         backoff = BACKOFF
+        st.granted(idx, lease)
+        yield HOLD
+        table.release(p, lease)
+        yield THINK
+
+
+def _sticky_hot_client(table, p, rng, pick, st, idx, ttl, track):
+    """The zipfian client: sticky key choice + tracked hot-key probes.
+
+    The plain client re-picks a fresh key after every reject, which lets a
+    loser walk away from the hottest key — diluting exactly the contention
+    regime the zipfian workload exists to measure, and making per-key
+    acquire latency unattributable.  Real callers want THE key they asked
+    for, so this client retries the same key (seeded exponential backoff)
+    until granted, and for keys in ``track`` records the virtual-time
+    acquire latency (first attempt -> grant) and, for remote clients, the
+    rCAS the grant cost — the two quantities the inflation gates bound.
+    """
+    clock = table.clock
+    home = {k: table.home_of(k) for k in track}
+    while not st.done():
+        key = pick(rng)
+        tracked = key in home
+        remote = tracked and p.node != home[key]
+        t0 = clock()
+        rcas0 = p.counts.remote_cas
+        backoff = BACKOFF
+        lease = None
+        while lease is None:
+            lease = table.try_acquire(p, key, ttl)
+            if lease is None:
+                if st.done():
+                    return
+                if table.queued(p, key):
+                    # Inflated mode: parked in the key's MCS queue, where a
+                    # poll is ONE local read (the local spin).  Fine-grained
+                    # constant cadence — exponential backoff here would gate
+                    # every FIFO handoff on the head's (huge) poll period.
+                    yield HOLD * (0.5 + rng.random())
+                    backoff = BACKOFF
+                else:
+                    yield backoff * (0.5 + rng.random())
+                    backoff = min(backoff * 2, BACKOFF_CAP)
+        if tracked:
+            st.hot_latencies.append(clock() - t0)
+            if remote:
+                st.hot_rcas.append(p.counts.remote_cas - rcas0)
         st.granted(idx, lease)
         yield HOLD
         table.release(p, lease)
@@ -492,6 +544,21 @@ class SimResult:
     reclaim_rejects: int
     orphan_probes: int
     orphan_adopts: int
+    inflations: int
+    deflations: int
+    queue_enqueues: int
+    queue_grants: int
+    queue_handoffs: int
+    queue_bypasses: int
+    hot_key_report: List[List]
+    inflation_events: List[List]
+    hot_grants: int
+    hot_acquire_p50: float
+    hot_acquire_p99: float
+    hot_acquire_max: float
+    hot_remote_acquires: int
+    hot_rcas_mean: float
+    hot_rcas_max: int
     cost: Dict[str, Dict[str, int]]
     mode_cost: Dict[str, Dict[str, int]]
     events: int
@@ -529,6 +596,7 @@ def run_lock_table_sim(
     crash_spacing: Optional[float] = None,
     restart_delay: Optional[float] = None,
     reclaim: bool = True,
+    inflation: Optional[InflationPolicy] = None,
     max_events: Optional[int] = None,
 ) -> SimResult:
     """Run one workload to ``total_ops`` granted leases; fully deterministic.
@@ -549,7 +617,7 @@ def run_lock_table_sim(
     table = ShardedLockTable(
         mem, num_shards=num_shards or 2 * num_hosts,
         clock=engine.clock, sleep=engine.sleep_inline, name=f"sim{seed}",
-        fault=fault,
+        fault=fault, inflation=inflation, seed=seed,
     )
     if ttl is None:
         # The short-lease workloads share one tunable TTL (``failover_ttl``)
@@ -623,6 +691,11 @@ def run_lock_table_sim(
                 task = _flood_writer(table, p, rng, st, idx, flood_key, ttl)
             else:
                 task = _flood_reader(table, p, rng, st, idx, flood_key, ttl)
+        elif workload == "zipfian":
+            # universe[0] is zipf rank 1: the hottest key, the one whose
+            # acquire-latency tail and per-acquire rCAS the gates bound.
+            task = _sticky_hot_client(table, p, rng, pick_for(host), st,
+                                      idx, ttl, (universe[0],))
         else:
             task = _acquire_release_client(table, p, rng, pick_for(host), st,
                                            idx, ttl)
@@ -676,6 +749,13 @@ def run_lock_table_sim(
         raise AssertionError(
             f"{workload}: exclusive-only workload produced {grants_shared} "
             "shared grants"
+        )
+    inflations = sum(r["inflations"] for r in rows)
+    deflations = sum(r["deflations"] for r in rows)
+    if inflation is None and (inflations or deflations):
+        raise AssertionError(
+            f"{workload}: inflation disabled but the table recorded "
+            f"{inflations} inflations / {deflations} deflations"
         )
     writer_waits = st.writer_waits
     if workload == "reader_flood":
@@ -741,6 +821,23 @@ def run_lock_table_sim(
         reclaim_rejects=sum(r["reclaim_rejects"] for r in rows),
         orphan_probes=sum(r["orphan_probes"] for r in rows),
         orphan_adopts=sum(r["orphan_adopts"] for r in rows),
+        inflations=inflations,
+        deflations=deflations,
+        queue_enqueues=sum(r["queue_enqueues"] for r in rows),
+        queue_grants=sum(r["queue_grants"] for r in rows),
+        queue_handoffs=sum(r["queue_handoffs"] for r in rows),
+        queue_bypasses=sum(r["queue_bypasses"] for r in rows),
+        hot_key_report=table.hot_keys(10),
+        inflation_events=table.inflation_log(),
+        hot_grants=len(st.hot_latencies),
+        hot_acquire_p50=_pct(st.hot_latencies, 0.50),
+        hot_acquire_p99=_pct(st.hot_latencies, 0.99),
+        hot_acquire_max=(max(st.hot_latencies)
+                         if st.hot_latencies else 0.0),
+        hot_remote_acquires=len(st.hot_rcas),
+        hot_rcas_mean=(sum(st.hot_rcas) / len(st.hot_rcas)
+                       if st.hot_rcas else 0.0),
+        hot_rcas_max=max(st.hot_rcas) if st.hot_rcas else 0,
         cost={"local": vars(totals[LOCAL]).copy(),
               "remote": vars(totals[REMOTE]).copy()},
         mode_cost={

@@ -11,13 +11,18 @@ import json
 
 import pytest
 
-from repro.coord import CRASH_POINTS, FaultInjector
+from repro.coord import CRASH_POINTS, FaultInjector, InflationPolicy
 from repro.sim import run_lock_table_sim
 
 TTL = 1e-3
+# Aggressive thresholds so the matrix's hot keys actually inflate (and
+# deflate) within the run — the inflate.mid / deflate.mid windows never
+# arm under the default policy at this scale.
+POLICY = InflationPolicy(inflate_retries=4, deflate_retries=1, window=1e-3,
+                         min_inflated=5e-4, min_deflated=1e-4)
 CFG = dict(num_hosts=8, clients_per_host=4, total_ops=3000, seed=5,
            failover_ttl=TTL, crash_warmup=2e-3, crash_spacing=TTL / 8,
-           restart_delay=TTL / 8)
+           restart_delay=TTL / 8, inflation=POLICY)
 
 # upgrade.mid is the rarest window (~19 arrivals in this config); keep its
 # trigger early so the one-shot reliably fires.

@@ -1,0 +1,293 @@
+"""Contention-adaptive lock inflation: unit tests.
+
+Covers the mode-bit encoding, the windowed contention estimator and its
+hysteresis, the split-phase inflated-key queue (including the direct lock
+handoff payload), and the table-level inflate -> queue -> direct handoff ->
+deflate lifecycle under a deterministic clock.
+"""
+
+import pytest
+
+from repro.core import AsymmetricMemory
+from repro.core.mcs import LOCAL_COHORT, REMOTE_COHORT, InflatedKeyQueue
+from repro.coord import InflationPolicy, ShardedLockTable
+from repro.coord.inflation import ContentionEstimator
+from repro.coord.table import _INFL_RESERVE, _dec, _enc, _infl, _trusted
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+# ---------------------------------------------------------------- encoding
+def test_mode_encoding_roundtrip():
+    for count in (0, 1, 7, 1 << 30):
+        for inflated in (False, True):
+            word = _enc(count, inflated)
+            assert _dec(word) == count
+            assert _infl(word) is inflated
+    # Deflated zero and inflated zero are distinct words.
+    assert _enc(0, False) == 0
+    assert _enc(0, True) == -1
+
+
+def test_trusted_is_mode_aware():
+    # Deflated: exact fence match only.
+    assert _trusted(5, 5, _enc(0, False))
+    assert not _trusted(4, 5, _enc(0, False))
+    # Inflated: direct-handoff tokens run UNDER the epoch ceiling.
+    assert _trusted(4, 5 + _INFL_RESERVE, _enc(0, True))
+    assert not _trusted(6 + _INFL_RESERVE, 5 + _INFL_RESERVE, _enc(0, True))
+    # Post-deflation word under a still-raised fence: untrusted on purpose.
+    assert not _trusted(4, 5 + _INFL_RESERVE, _enc(0, False))
+
+
+# ------------------------------------------------------------------ policy
+def test_policy_validates_hysteresis_band():
+    with pytest.raises(ValueError):
+        InflationPolicy(inflate_retries=4, deflate_retries=4)
+    with pytest.raises(ValueError):
+        InflationPolicy(inflate_retries=0)
+    with pytest.raises(ValueError):
+        InflationPolicy(min_inflated=-1.0)
+    with pytest.raises(ValueError):
+        InflationPolicy(stale_after_ttls=0.0)
+
+
+def test_estimator_threshold_and_window_decay():
+    pol = InflationPolicy(inflate_retries=4, deflate_retries=1, window=1e-3)
+    est = ContentionEstimator(pol)
+    assert not est.should_inflate("k", 0.0)
+    for _ in range(3):
+        est.note("k", 0.0)
+    assert not est.should_inflate("k", 0.0)  # 3 < 4
+    est.note("k", 0.0)
+    assert est.should_inflate("k", 0.0)      # at threshold
+    # Two windows later the events have decayed out entirely.
+    assert est.rate("k", 2.5e-3) == 0.0
+    assert not est.should_inflate("k", 2.5e-3)
+
+
+def test_estimator_hysteresis_floors():
+    pol = InflationPolicy(inflate_retries=2, deflate_retries=1, window=1e-3,
+                          min_inflated=5e-3, min_deflated=2e-3)
+    est = ContentionEstimator(pol)
+    est.mark_inflated("k", 1.0)
+    # Residency floor: cold or not, no deflation before min_inflated.
+    assert not est.should_deflate("k", 1.0 + 4e-3)
+    assert est.should_deflate("k", 1.0 + 6e-3)
+    est.mark_deflated("k", 2.0)
+    for _ in range(8):
+        est.note("k", 2.0 + 1e-4)
+    # Refractory gap: hot again, but re-inflation must wait min_deflated.
+    assert not est.should_inflate("k", 2.0 + 1e-3)
+    for _ in range(8):
+        est.note("k", 2.0 + 2.05e-3)  # still hot once the gap has passed
+    assert est.should_inflate("k", 2.0 + 2.1e-3)
+
+
+# ------------------------------------------------------- split-phase queue
+def _queue(init_budget=4):
+    mem = AsymmetricMemory(2)
+    q = InflatedKeyQueue(mem, home_node=0, init_budget=init_budget, name="iq")
+    return mem, q
+
+
+def test_queue_cohort_split_by_node():
+    mem, q = _queue()
+    assert q.cid_of(mem.spawn(0)) == LOCAL_COHORT
+    assert q.cid_of(mem.spawn(1)) == REMOTE_COHORT
+
+
+def test_enqueue_leader_and_fifo_polling():
+    mem, q = _queue()
+    p1, p2 = mem.spawn(0), mem.spawn(0)
+    assert q.enqueue(p1) is True          # empty queue: leader, entitled
+    assert q.enqueue(p2) is False         # parked behind p1
+    assert q.poll(p1) == "entitled"
+    assert q.poll(p2) == "parked"
+    assert not q.empty(p1)
+    q.release(p1)                         # plain entitlement pass
+    assert q.poll(p2) == "entitled"
+    assert q.release(p2) is True          # cohort drained
+    assert q.empty(p2)
+
+
+def test_direct_handoff_payload_rides_the_budget_write():
+    mem, q = _queue(init_budget=4)
+    p1, p2 = mem.spawn(0), mem.spawn(0)
+    q.enqueue(p1)
+    q.enqueue(p2)
+    assert q.take_grant(p2) is None       # nothing pending yet
+    assert q.can_direct(p1)
+    q.pass_grant(p1, token=7, expires_at=9.5)
+    assert q.poll(p2) == "granted"
+    assert q.take_grant(p2) == (7, 9.5)
+    # Budget share was handed down alongside (4 - 1), and later polls see
+    # a plain entitlement again.
+    assert q.poll(p2) == "entitled"
+    assert q.cohorts[LOCAL_COHORT].q_granted(p2) == 3
+
+
+def test_can_direct_refuses_without_successor():
+    mem, q = _queue()
+    p1 = mem.spawn(0)
+    q.enqueue(p1)
+    assert not q.can_direct(p1)
+
+
+def test_can_direct_defers_to_waiting_other_cohort_on_exhausted_budget():
+    mem, q = _queue(init_budget=1)
+    p1, p2 = mem.spawn(0), mem.spawn(0)
+    remote = mem.spawn(1)
+    q.enqueue(p1)
+    q.enqueue(p2)
+    # Budget 1: the handoff would land at 0.  Alone, that is still fine...
+    assert q.can_direct(p1)
+    # ...but not while the other cohort has a waiter — its turn.
+    q.enqueue(remote)
+    assert not q.can_direct(p1)
+
+
+# ----------------------------------------------------- table-level lifecycle
+AGGRESSIVE = InflationPolicy(inflate_retries=2, deflate_retries=1,
+                             window=1e-3, min_inflated=0.0, min_deflated=0.0)
+
+
+def _inflated_table(clock=None, num_hosts=2):
+    clock = clock or FakeClock()
+    mem = AsymmetricMemory(num_hosts)
+    table = ShardedLockTable(mem, num_shards=num_hosts, clock=clock,
+                             inflation=AGGRESSIVE)
+    return mem, table, clock
+
+
+def _key_homed_on(table, host):
+    for i in range(10_000):
+        k = f"hot-{i}"
+        if table.home_of(k) == host:
+            return k
+    raise AssertionError(f"no key homed on host {host}")
+
+
+def _inflate_key(mem, table, clock, key, holder, contender):
+    """Drive the key hot: holder holds, contender bangs until inflation."""
+    lease = table.try_acquire(holder, key, ttl=10.0)
+    assert lease is not None and not lease.inflated
+    for _ in range(50):
+        st = table.shards[table.shard_of(key)].keys[key]
+        if st.infl is not None:
+            break
+        assert table.try_acquire(contender, key, ttl=10.0) is None
+    st = table.shards[table.shard_of(key)].keys[key]
+    assert st.infl is not None, "key never inflated under hammering"
+    return lease, st
+
+
+def test_key_inflates_under_contention_and_holder_still_releases():
+    mem, table, clock = _inflated_table()
+    key = _key_homed_on(table, 0)
+    holder, contender = mem.spawn(0), mem.spawn(1)
+    lease, st = _inflate_key(mem, table, clock, key, holder, contender)
+    shard = table.shards[table.shard_of(key)]
+    assert shard.inflations == 1
+    # The pre-inflation holder's lease predates the mode flip; its release
+    # must still succeed (slow path: fence register is untouched until the
+    # first CS grant on the inflated key reserves the token block).
+    assert table.release(holder, lease) is True
+    etok, readers, eexp = mem.read(holder, st.expires)
+    assert _infl(readers), "release must not deflate by accident"
+
+
+def test_direct_handoff_chain_tokens_and_counters():
+    mem, table, clock = _inflated_table()
+    key = _key_homed_on(table, 0)
+    home = mem.spawn(0)
+    holder = mem.spawn(0)
+    a, b, c = mem.spawn(1), mem.spawn(1), mem.spawn(1)
+    lease, st = _inflate_key(mem, table, clock, key, holder, a)
+    shard = table.shards[table.shard_of(key)]
+    # First post-inflation attempts route through the queue: a enqueues as
+    # cohort leader, b and c park behind it.
+    assert table.try_acquire(a, key, ttl=10.0) is None
+    assert table.try_acquire(b, key, ttl=10.0) is None
+    assert table.try_acquire(c, key, ttl=10.0) is None
+    assert table.queued(a, key) and table.queued(b, key)
+    table.release(holder, lease)
+    # Head takes the word via the CS grant: this reserves the fence block.
+    la = None
+    for _ in range(5):
+        la = table.try_acquire(a, key, ttl=10.0)
+        if la is not None:
+            break
+    assert la is not None and la.inflated
+    assert st.infl_ceiling == la.token + _INFL_RESERVE
+    assert mem.read(home, st.fence) == st.infl_ceiling
+    # Release with a successor parked: direct handoff — one witness CAS,
+    # token chained through the word, NO critical section for b's grant.
+    handoffs0 = shard.queue_handoffs
+    assert table.release(a, la) is True
+    assert shard.queue_handoffs == handoffs0 + 1
+    lb = table.try_acquire(b, key, ttl=10.0)
+    assert lb is not None and lb.inflated
+    assert lb.token == la.token + 1          # word-chained allocation
+    assert lb.token < st.infl_ceiling        # strictly under the ceiling
+    # And the chain continues: b -> c the same way.
+    assert table.release(b, lb) is True
+    lc = table.try_acquire(c, key, ttl=10.0)
+    assert lc is not None and lc.token == lb.token + 1
+    assert table.release(c, lc) is True
+
+
+def test_cooled_key_deflates_and_next_grant_repairs_fence():
+    mem, table, clock = _inflated_table()
+    key = _key_homed_on(table, 0)
+    holder, a = mem.spawn(0), mem.spawn(1)
+    lease, st = _inflate_key(mem, table, clock, key, holder, a)
+    shard = table.shards[table.shard_of(key)]
+    table.release(holder, lease)
+    la = None
+    for _ in range(5):
+        la = table.try_acquire(a, key, ttl=10.0)
+        if la is not None:
+            break
+    assert la is not None and la.inflated
+    ceiling = st.infl_ceiling
+    # Cool off: two windows of silence, then release with an empty queue.
+    clock.advance(5e-3)
+    assert table.release(a, la) is True
+    assert st.infl is None and shard.deflations == 1
+    assert not table.queued(a, key)
+    # The deflated word sits under the still-raised fence: untrusted, so
+    # the next grant repairs it ABOVE the old epoch's ceiling.
+    nxt = table.try_acquire(a, key, ttl=10.0)
+    assert nxt is not None and not nxt.inflated
+    assert nxt.token == ceiling + 1
+    assert shard.repairs >= 1
+    assert table.release(a, nxt) is True
+
+
+def test_uniform_key_never_inflates():
+    mem, table, clock = _inflated_table()
+    p = mem.spawn(0)
+    for i in range(64):
+        lease = table.try_acquire(p, f"cold/{i}", ttl=10.0)
+        assert lease is not None and not lease.inflated
+        assert table.release(p, lease)
+    assert all(s.inflations == 0 for s in table.shards)
+
+
+def test_queued_is_metadata_only():
+    mem, table, clock = _inflated_table()
+    p = mem.spawn(0)
+    assert not table.queued(p, "nope")
+    ops0 = p.counts.as_tuple()
+    table.queued(p, "nope")
+    assert p.counts.as_tuple() == ops0  # zero simulated ops

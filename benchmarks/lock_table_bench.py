@@ -24,8 +24,9 @@ simulated RDMA ops** in both modes and at both scales.
 Threaded workloads: ``home``, ``uniform``, ``read_heavy`` (95:5
 shared:exclusive mode mix), ``renew``, ``renew_remote``, ``batch`` (see each
 client fn).  Sim workloads: ``home``, ``uniform``, ``zipfian``,
-``failover``, ``read_heavy``, ``reader_flood`` (see
-``repro.sim.workloads``), plus the read:write ratio sweep (``run_rw_sweep``)
+``failover``, ``read_heavy``, ``reader_flood``, ``crash_restart``,
+``home_death``, ``partition`` (see ``repro.sim.workloads``), plus the
+read:write ratio sweep (``run_rw_sweep``)
 comparing SHARED readers against an exclusive-only degradation of the same
 seeded run — the mode-aware before/after in ``BENCH_lock_table.json``.
 
@@ -278,11 +279,13 @@ SIM_HOSTS, SIM_CPH, SIM_SHARDS = 64, 16, 128
 SIM_OPS = {"home": 50_000, "uniform": 50_000,
            "zipfian": 20_000, "failover": 25_000,
            "read_heavy": 50_000, "reader_flood": 20_000,
-           "crash_restart": 20_000}
+           "crash_restart": 20_000, "home_death": 20_000,
+           "partition": 10_000}
 SIM_SMOKE_OPS = {"home": 25_000, "uniform": 25_000,
                  "zipfian": 20_000, "failover": 10_000,
                  "read_heavy": 25_000, "reader_flood": 10_000,
-                 "crash_restart": 8_000}
+                 "crash_restart": 8_000, "home_death": 8_000,
+                 "partition": 5_000}
 # The zipfian rows park hundreds of sticky clients on a handful of keys;
 # their event budget is queue/backoff polling, not ops, so the default
 # per-op event cap is far too tight for them.
@@ -316,6 +319,30 @@ RW_CFG = dict(num_hosts=16, clients_per_host=16, num_shards=32,
 RW_OPS = 10_000
 RW_RATIOS = (0.5, 0.9, 0.95, 0.99)       # read fraction per ratio row
 RW_SMOKE_RATIOS = (0.95,)                # CI keeps just the acceptance row
+
+
+# Failover sweep (sim): the self-healing acceptance numbers, at the same
+# 128-host scale as the recovery sweep.  Two legs, both on the faulty
+# fabric: ``home_death`` kills one whole host (picked by the workload's
+# seeded schedule) and measures how long the membership detector takes to
+# reach a DEAD verdict and how long the epoch-fenced takeover takes to
+# re-home the dead shards; ``partition`` cuts a 25 % minority island off
+# the fabric for four membership TTLs and checks that the quorum guard
+# starves the island (zero in-window grants, refused takeovers) while the
+# majority keeps serving.  The membership TTL follows the workload's own
+# derivation (one monitor sweep's probe charges must fit inside a sweep
+# period), so the gate scales with host count rather than hardcoding a
+# latency.  Acceptance: detection p99 AND takeover p99 each within
+# FO_GATE_TTLS membership TTLs, every dead-home shard re-homed, zero
+# fencing-token regressions (the workload itself raises on any), zero
+# minority-side grants.
+FO_TTL = REC_TTL
+FO_CFG = dict(num_hosts=128, clients_per_host=4, num_shards=256,
+              failover_ttl=FO_TTL)
+FO_MEMBER_TTL = max(10 * FO_TTL, FO_CFG["num_hosts"] * 100e-6)
+FO_GATE_TTLS = 5                 # p99 ceiling, in membership TTLs
+FO_OPS = 20_000
+FO_SMOKE_OPS = 8_000
 
 
 # Inflation sweep (sim): the contention-adaptive lock-inflation acceptance
@@ -532,6 +559,85 @@ def run_recovery_sweep(report, sim_seed=0, smoke=False):
     return out
 
 
+def run_failover_sweep(report, sim_seed=0, smoke=False):
+    """Self-healing failover at 128 hosts: detection + takeover latency."""
+    ops = FO_SMOKE_OPS if smoke else FO_OPS
+    gate = FO_GATE_TTLS * FO_MEMBER_TTL
+    out = {"config": dict(FO_CFG, total_ops=ops,
+                          member_ttl_us=round(FO_MEMBER_TTL * 1e6, 3),
+                          gate_ttls=FO_GATE_TTLS)}
+    legs = {}
+    for leg in ("home_death", "partition"):
+        r = run_lock_table_sim(leg, total_ops=ops, seed=sim_seed, **FO_CFG)
+        legs[leg] = r
+        out[leg] = {
+            "virtual_throughput": r.virtual_throughput,
+            "ops": r.ops,
+            "takeovers": r.takeovers,
+            "takeover_refusals": r.takeover_refusals,
+            "takeover_aborts": r.takeover_aborts,
+            "epoch_aborts": r.epoch_aborts,
+            "rehomed_keys": r.rehomed_keys,
+            "guard_blocks": r.guard_blocks,
+            "quorum_losses": r.quorum_losses,
+            "minority_grants": r.minority_grants,
+            "remote_timeouts": r.remote_timeouts,
+            "token_regressions": r.token_regressions,
+            "zombie_renews": r.zombie_renews,
+            "detect_p99_us": round(r.detect_p99 * 1e6, 3),
+            "failover_p50_us": round(r.failover_p50 * 1e6, 3),
+            "failover_p99_us": round(r.failover_p99 * 1e6, 3),
+            "failover_max_us": round(r.failover_max * 1e6, 3),
+            "failover_events": r.failover_events,
+            "fabric": r.fabric,
+        }
+        report(
+            f"lock_table/sim/failover-{leg}/hosts{FO_CFG['num_hosts']}"
+            f"x{FO_CFG['clients_per_host']}",
+            1e6 / max(r.virtual_throughput, 1e-9),
+            f"vthru={r.virtual_throughput:.0f}/s "
+            f"takeovers={r.takeovers} refusals={r.takeover_refusals} "
+            f"rehomed={r.rehomed_keys} "
+            f"detect_p99={r.detect_p99 * 1e6:.0f}us "
+            f"takeover_p99={r.failover_p99 * 1e6:.0f}us "
+            f"gate={gate * 1e6:.0f}us minority_grants={r.minority_grants} "
+            f"wall={r.wall_seconds:.1f}s",
+        )
+    hd, pt = legs["home_death"], legs["partition"]
+    if not hd.takeovers or not hd.rehomed_keys:
+        raise AssertionError(
+            "failover sweep: home_death produced no committed takeover — "
+            "the crash schedule or the suspicion thresholds are broken")
+    if hd.detect_p99 > gate:
+        raise AssertionError(
+            f"failover sweep: detection p99 {hd.detect_p99 * 1e6:.0f}us "
+            f"exceeds {FO_GATE_TTLS}x membership ttl "
+            f"({gate * 1e6:.0f}us)")
+    if hd.failover_p99 > gate:
+        raise AssertionError(
+            f"failover sweep: takeover p99 {hd.failover_p99 * 1e6:.0f}us "
+            f"exceeds {FO_GATE_TTLS}x membership ttl "
+            f"({gate * 1e6:.0f}us)")
+    # The workload raises on any fencing regression / zombie renewal /
+    # minority grant internally; these re-checks keep the gate visible in
+    # the bench even if the workload's asserts are ever loosened.
+    for name, r in legs.items():
+        if r.token_regressions or r.zombie_renews:
+            raise AssertionError(
+                f"failover sweep: {name} saw "
+                f"{r.token_regressions} token regressions / "
+                f"{r.zombie_renews} zombie renewals past a takeover")
+    if pt.minority_grants:
+        raise AssertionError(
+            f"failover sweep: {pt.minority_grants} grants landed on the "
+            f"minority island inside the cut window")
+    if not pt.takeover_refusals:
+        raise AssertionError(
+            "failover sweep: the partition never forced a quorum-guard "
+            "refusal — the island is not attempting takeovers")
+    return out
+
+
 def run_sim(report, sim_seed=0, smoke=False, zipf_run=None):
     """The deterministic virtual-time sweep; returns (rows, wall_seconds).
 
@@ -563,6 +669,12 @@ def run_sim(report, sim_seed=0, smoke=False, zipf_run=None):
             kwargs = dict(failover_ttl=REC_TTL, crash_warmup=2e-3,
                           crash_spacing=REC_TTL / 8,
                           restart_delay=REC_TTL / 8)
+        if workload in ("home_death", "partition"):
+            # Same lease scale as the recovery sweep: 1 ms leases keep
+            # client traffic (and the heartbeat region) in flight at the
+            # crash/cut instants.  The membership TTL derives from host
+            # count inside the workload.
+            kwargs = dict(failover_ttl=REC_TTL)
         if r is None:
             r = run_lock_table_sim(
                 workload, num_hosts=SIM_HOSTS, clients_per_host=SIM_CPH,
@@ -635,6 +747,7 @@ def run(report, seconds=0.7, seeds=SEEDS, mode="both", sim_seed=0,
                              zipf_run=zipf_on)
         sweep = run_rw_sweep(report, sim_seed=sim_seed, smoke=smoke)
         recovery = run_recovery_sweep(report, sim_seed=sim_seed, smoke=smoke)
+        failover = run_failover_sweep(report, sim_seed=sim_seed, smoke=smoke)
         _LAST["sim"] = {
             "seed": sim_seed,
             "config": {"hosts": SIM_HOSTS, "clients_per_host": SIM_CPH,
@@ -646,6 +759,7 @@ def run(report, seconds=0.7, seeds=SEEDS, mode="both", sim_seed=0,
                 "ratios": sweep,
             },
             "recovery": recovery,
+            "failover": failover,
             "inflation": inflation,
         }
 

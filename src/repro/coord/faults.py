@@ -33,7 +33,7 @@ from __future__ import annotations
 import random
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["CRASH_POINTS", "ClientCrash", "FaultInjector"]
+__all__ = ["CRASH_POINTS", "FABRIC_POINTS", "ClientCrash", "FaultInjector"]
 
 
 # The labeled windows, in protocol order.  Each names the state a crash
@@ -82,6 +82,28 @@ CRASH_POINTS = (
     "deflate.mid",
 )
 
+# Fabric-side labeled points: message-loss windows rather than process-death
+# windows.  They arm through the same one-shot / seeded machinery but are
+# *decisions*, not crashes — the fabric asks :meth:`FaultInjector.
+# fabric_point` whether to lose/duplicate/delay a specific posting, and the
+# poster survives (timeout + bounded retry).  This is what lets the crash
+# matrix cross host-crash cells with message-loss cells: one injector arms
+# ``release.pre_cas`` AND ``fabric.drop`` and both land deterministically.
+#
+#   fabric.drop  — the posting is lost; the poster discovers it at the op
+#       timeout and reposts on the seeded backoff schedule.
+#   fabric.dup   — the posting is delivered twice (at-least-once delivery);
+#       reads/writes are idempotent and a duplicated CAS observes its own
+#       swap, so the CAS-only lease word absorbs it.
+#   fabric.delay — the posting is delivered late (extra latency, no loss).
+FABRIC_POINTS = (
+    "fabric.drop",
+    "fabric.dup",
+    "fabric.delay",
+)
+
+_ALL_POINTS = frozenset(CRASH_POINTS) | frozenset(FABRIC_POINTS)
+
 
 class ClientCrash(Exception):
     """The injected process death.  Raised at a crash point (synchronously,
@@ -126,7 +148,7 @@ class FaultInjector:
            pid: Optional[int] = None) -> "FaultInjector":
         """Crash the ``nth`` arrival at ``label`` (1-based), optionally only
         counting arrivals by ``pid``.  Returns self for chaining."""
-        if label not in CRASH_POINTS:
+        if label not in _ALL_POINTS:
             raise ValueError(f"unknown crash point {label!r}")
         if nth < 1:
             raise ValueError("nth is 1-based")
@@ -145,7 +167,7 @@ class FaultInjector:
         fi._prob = float(prob)
         if labels is not None:
             for lab in labels:
-                if lab not in CRASH_POINTS:
+                if lab not in _ALL_POINTS:
                     raise ValueError(f"unknown crash point {lab!r}")
             fi._labels = frozenset(labels)
         return fi
@@ -171,3 +193,34 @@ class FaultInjector:
                 and self._rng.random() < self._prob):
             self.fired.append((label, pid, n))
             raise ClientCrash(label, pid)
+
+    def fabric_point(self, label: str, pid: int) -> bool:
+        """Called by a lossy fabric for each remote posting; returns whether
+        the labeled fault (``fabric.drop`` / ``fabric.dup`` /
+        ``fabric.delay``) fires on this posting.
+
+        Same counters and ``fired`` log as :meth:`crash_point`, but the
+        trigger is a *decision* — the posting is lost/duplicated/delayed and
+        the poster rides its retry schedule instead of dying.  Seeded storms
+        only reach fabric points when their ``labels`` name them explicitly:
+        an unscoped storm (``labels=None``) keeps its historical meaning of
+        "crash storm over the crash points" and never eats postings.
+        """
+        n = self.hits.get(label, 0) + 1
+        self.hits[label] = n
+        for filt in ((label, None), (label, pid)):
+            want = self._oneshots.get(filt)
+            if want is None:
+                continue
+            fn = self._filter_hits.get(filt, 0) + 1
+            self._filter_hits[filt] = fn
+            if fn == want:
+                del self._oneshots[filt]
+                self.fired.append((label, pid, n))
+                return True
+        if (self._rng is not None and self._prob > 0.0
+                and self._labels is not None and label in self._labels
+                and self._rng.random() < self._prob):
+            self.fired.append((label, pid, n))
+            return True
+        return False

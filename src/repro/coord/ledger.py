@@ -44,6 +44,7 @@ crash model.
 from __future__ import annotations
 
 import json
+import warnings
 from dataclasses import asdict, dataclass
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -146,12 +147,38 @@ class LeaseLedger:
 
     @classmethod
     def load_jsonl(cls, path: str, name: Optional[str] = None) -> "LeaseLedger":
+        """Load a dumped ledger, tolerating a **torn tail**.
+
+        A crash mid-append leaves the final line truncated (or a final
+        newline missing entirely) — the exact artifact this module's crash
+        model produces on a real disk.  A corrupt LAST non-empty line is
+        therefore truncated away with a warning: the write-ahead discipline
+        already covers the loss (the record that tore was the one being
+        written at the crash; its intent precedes it, so restart's orphan
+        probe settles the key).  Corruption anywhere *before* the tail has
+        no such excuse — an append-only file does not tear in the middle —
+        and raises ``ValueError``: that file is damaged, not torn.
+        """
         led = cls(name or path)
         with open(path, "r", encoding="utf-8") as f:
-            for line in f:
-                line = line.strip()
-                if line:
-                    led.records.append(LedgerRecord(**json.loads(line)))
+            lines = f.read().split("\n")
+        # Indices of non-empty lines; only the LAST one may be torn.
+        body = [(i, ln) for i, ln in enumerate(lines) if ln.strip()]
+        for pos, (i, line) in enumerate(body):
+            try:
+                rec = LedgerRecord(**json.loads(line))
+            except (ValueError, TypeError) as exc:
+                # json decode errors are ValueError; unexpected/missing
+                # fields surface as TypeError from the dataclass ctor.
+                if pos == len(body) - 1:
+                    warnings.warn(
+                        f"{path}: torn final ledger record (line {i + 1}) "
+                        f"truncated: {exc}", RuntimeWarning, stacklevel=2)
+                    break
+                raise ValueError(
+                    f"{path}: corrupt ledger record mid-file "
+                    f"(line {i + 1}): {exc}") from exc
+            led.records.append(rec)
         led._seq = (led.records[-1].seq + 1) if led.records else 0
         return led
 

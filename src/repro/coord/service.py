@@ -40,6 +40,7 @@ from repro.core import ALock, AsymmetricMemory, OpCounts, Process
 from .faults import FaultInjector
 from .inflation import InflationPolicy
 from .ledger import LedgerStore, RecoverableClient
+from .membership import HostMembership, SuspicionPolicy
 from .table import Lease, LeaseMode, ShardedLockTable
 
 
@@ -243,6 +244,33 @@ class CoordinationService:
         for lease in reclaimed:
             self._cache_put(p, lease)
         return client, reclaimed
+
+    # --------------------------------------------------- failover / takeover
+    def membership(self, host: int,
+                   policy: Optional[SuspicionPolicy] = None,
+                   ) -> HostMembership:
+        """This host's membership agent: its heartbeat lease (ledgered under
+        the durable identity ``member.h<host>``, so member shards survive
+        takeovers with their fencing intact), its suspicion estimator, and
+        the partition-guard attestation.  One per host."""
+        return HostMembership(
+            self.table, self.mem, host, self.num_hosts, policy=policy,
+            ledger=self.ledgers.ledger(f"member.h{host}"))
+
+    def takeover_shard(self, p: Process, shard_index: int,
+                       membership: Optional[HostMembership] = None,
+                       fence_slack: int = 16) -> Optional[Dict[str, int]]:
+        """Epoch-fenced takeover of ``shard_index`` onto ``p``'s host,
+        rebuilt from the merged stream of ALL ledgers in the service's
+        store (see :meth:`ShardedLockTable.takeover_shard`)."""
+        return self.table.takeover_shard(
+            p, shard_index, self.ledgers.all_records(),
+            membership=membership, fence_slack=fence_slack)
+
+    def shards_homed_on(self, host: int) -> List[int]:
+        """The shard indices currently homed on ``host`` (a takeover's
+        work list when ``host`` is declared dead)."""
+        return [s.index for s in self.table.shards if s.home_host == host]
 
     def telemetry(self) -> List[Dict]:
         return self.table.telemetry()

@@ -76,7 +76,7 @@ from functools import lru_cache
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core import (ALock, AsymmetricMemory, InflatedKeyQueue, OpCounts,
-                        Process)
+                        Process, RemoteTimeout, TIMEOUT)
 
 from .faults import FaultInjector
 from .inflation import ContentionEstimator, InflationPolicy
@@ -103,6 +103,25 @@ _FAST_ATTEMPTS = 64
 # seeded jitter — the thundering-herd fix for threaded hot keys, routed
 # through the injected clock/RNG so the sim stays deterministic.
 _BACKOFF_CAP_POLLS = 32
+
+# Tombstone word written (best-effort) into a deposed home's key registers
+# by takeover_shard: a generation no fence ever allocates, under an expiry
+# that never lapses — a zombie that still reads the old word sees "held
+# forever" and can never grant from it.  The old holder register carries
+# the forwarding pointer, encoded below (ordinary pids are >= 0 and the
+# free sentinel is -1, so forwarded values -2, -3, ... are unambiguous).
+_TOMB_TOKEN = 1 << 62
+_TOMB_AT = float("inf")
+
+
+def _fwd_enc(home: int) -> int:
+    """Encode a forwarding pointer for a tombstoned holder register."""
+    return -(home + 2)
+
+
+def forwarded_home(holder: int) -> Optional[int]:
+    """Decode a tombstoned holder register's forwarding pointer, or None."""
+    return -holder - 2 if holder <= -2 else None
 
 
 # --------------------------------------------------------- word mode encoding
@@ -289,8 +308,20 @@ class LockShard:
                  init_budget: int, name: str):
         self.index = index
         self.home_host = home_host
+        self.init_budget = init_budget
         self.alock = ALock(mem, home_host, init_budget, name=f"{name}.s{index}")
         self.keys: Dict[str, _KeyState] = {}
+        # Takeover epoch (host-side mirror of the epoch register).  The
+        # epoch and forwarding registers live on the shard's rank-order
+        # first successor, NOT the home: they must stay reachable after the
+        # home dies (the successor bumps the epoch with a LOCAL CAS; the
+        # zombie ex-home pays remote and loses the race detectably).  If
+        # home and witness die together the shard is unavailable until one
+        # recovers — the documented single-failure posture.
+        self.epoch = 0
+        witness = (home_host + 1) % mem.num_nodes
+        self.epoch_reg = mem.alloc(witness, f"{name}.s{index}.epoch", 0)
+        self.fwd_reg = mem.alloc(witness, f"{name}.s{index}.fwd", home_host)
         # Meta-level accounting (not part of the simulated protocol).
         self.stats = {LOCAL: OpCounts(), REMOTE: OpCounts()}
         self.mode_stats = {(m, c): OpCounts()
@@ -321,6 +352,12 @@ class LockShard:
         self.orphan_adopts = 0       # probes that adopted a lost grant
         self.reconstructions = 0     # keys audited by reconstruct_shard
         self.reconstruct_resets = 0  # keys whose registers were re-seeded
+        # Self-healing failover counters (PR 8).
+        self.takeovers = 0           # epoch-fenced re-homings completed
+        self.takeover_refusals = 0   # refused by the partition guard
+        self.takeover_aborts = 0     # lost the epoch CAS / dead host revived
+        self.epoch_aborts = 0        # grants discarded by the epoch fence
+        self.rehomed_keys = 0        # ledgered keys carried to the new home
         # Contention-adaptive inflation counters (PR 7).
         self.inflations = 0          # words swung into queued (MCS) mode
         self.deflations = 0          # words swung back, orderly or not
@@ -482,10 +519,18 @@ class ShardedLockTable:
                 if st is None:
                     st = _KeyState(
                         self.mem, shard.home_host,
-                        f"{self.name}.s{shard.index}.k{stable_key_hash(key):016x}",
+                        self._key_state_name(shard, key),
                     )
                     shard.keys[key] = st
         return st
+
+    def _key_state_name(self, shard: LockShard, key: str) -> str:
+        # Register names are globally unique (mem.alloc raises on reuse), so
+        # post-takeover allocations carry the shard epoch: the dead home's
+        # registers keep their epoch-0 names, the rebuilt ones never alias.
+        suffix = f".e{shard.epoch}" if shard.epoch else ""
+        return (f"{self.name}.s{shard.index}"
+                f".k{stable_key_hash(key):016x}{suffix}")
 
     # ------------------------------------------------------ fault injection
     def _crash_point(self, label: str, p: Process) -> None:
@@ -637,7 +682,8 @@ class ShardedLockTable:
         blocked_by_intent = False
         try:
             now = self.clock()
-            shard.alock.lock(p)
+            alock = shard.alock  # pin: a takeover swaps shard.alock mid-CS
+            alock.lock(p)
             writes: List[tuple] = []
             try:
                 holder, packed, fence, barrier = \
@@ -676,7 +722,7 @@ class ShardedLockTable:
                     # else: someone re-granted cleanly while we queued for
                     # the CS — report a reject; the caller's retry will join.
             finally:
-                shard.alock.unlock(p, piggyback=writes or None)
+                alock.unlock(p, piggyback=writes or None)
         finally:
             self._account(shard, p, snap, LeaseMode.SHARED)
         if lease is not None:
@@ -743,14 +789,15 @@ class ShardedLockTable:
         # *healthy* pre-expiry renewal race the piggybacked (pre-CS) reads
         # and be silently re-granted over.
         now = self.clock()
+        alock = shard.alock  # pin: a takeover swaps shard.alock mid-CS
         try:
             if local:
-                shard.alock.lock(p)
+                alock.lock(p)
                 flat = None
             else:
                 # Chain the lease-register reads into the Peterson-engagement
                 # doorbell; valid on uncontended fast entry, else re-read.
-                flat = shard.alock.lock(p, piggyback_reads=[
+                flat = alock.lock(p, piggyback_reads=[
                     r for st in states for r in (st.expires, st.fence)
                 ])
             try:
@@ -900,7 +947,7 @@ class ShardedLockTable:
                 # The grant writes ride the unlock: applied in place by a
                 # local releaser, chained into the tail-drain doorbell by a
                 # remote one — still inside the critical section either way.
-                shard.alock.unlock(p, piggyback=writes or None)
+                alock.unlock(p, piggyback=writes or None)
         finally:
             self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
         with shard._meta:
@@ -954,14 +1001,40 @@ class ShardedLockTable:
         if ttl <= 0:
             raise ValueError("ttl must be > 0")
         shard = self.shards[self.shard_of(key)]
+        epoch0 = shard.epoch
         if mode == LeaseMode.SHARED:
-            return self._shared_acquire(p, shard, key, ttl)
-        if self.inflation is not None:
-            st = shard.keys.get(key)
-            if st is not None and st.infl is not None:
-                return self._inflated_acquire(p, shard, key, st, ttl)
-        granted, _ = self._acquire_group(p, shard, (key,), ttl, mode)
-        return granted[0] if granted else None
+            lease = self._shared_acquire(p, shard, key, ttl)
+        elif (self.inflation is not None
+                and (st := shard.keys.get(key)) is not None
+                and st.infl is not None):
+            lease = self._inflated_acquire(p, shard, key, st, ttl)
+        else:
+            granted, _ = self._acquire_group(p, shard, (key,), ttl, mode)
+            lease = granted[0] if granted else None
+        return self._epoch_fence(p, shard, epoch0, lease)
+
+    def _epoch_fence(self, p: Process, shard: LockShard, epoch0: int,
+                     lease: Optional[Lease]) -> Optional[Lease]:
+        """Discard a grant that raced an epoch bump (shard takeover).
+
+        A transaction that read the shard's key states before a takeover
+        committed may have granted against the **dead epoch's** registers —
+        state the new home neither sees nor honors.  The fence is checked
+        after every grant commits: epoch moved ⇒ the grant never happened
+        (its word is a tombstone on a dead host), the caller retries against
+        the re-homed shard.  This is the client-side half of the zombie
+        fence; the epoch CAS itself keeps two successors from both
+        rebuilding.
+        """
+        if lease is None or shard.epoch == epoch0:
+            return lease
+        with shard._meta:
+            shard.epoch_aborts += 1
+            shard.grants -= 1
+            shard.grants_by_mode[lease.mode] -= 1
+        if lease.mode == LeaseMode.SHARED:
+            self._slot_consume(p, lease.key, lease.token)
+        return None
 
     # ------------------------------------------------- inflated (queued) mode
     def _inflated_acquire(self, p: Process, shard: LockShard, key: str,
@@ -1085,7 +1158,8 @@ class ShardedLockTable:
                 if (_trusted(etok, fence, readers)
                         and _FREE_AT < eexp and now < eexp):
                     return None  # live holder: stay entitled, poll again
-            shard.alock.lock(p)
+            alock = shard.alock  # pin: a takeover swaps shard.alock mid-CS
+            alock.lock(p)
             writes: List[tuple] = []
             try:
                 now = self.clock()
@@ -1129,7 +1203,7 @@ class ShardedLockTable:
                             self._estimator.mark_deflated(key, now)
                             discarded = (now, token)
             finally:
-                shard.alock.unlock(p, piggyback=writes or None)
+                alock.unlock(p, piggyback=writes or None)
         finally:
             self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
         if lease is not None:
@@ -1336,7 +1410,8 @@ class ShardedLockTable:
                     return Lease(lease.key, lease.shard, lease.holder_pid,
                                  lease.token, now + ttl, ttl,
                                  LeaseMode.EXCLUSIVE, lease.inflated)
-            shard.alock.lock(p)
+            alock = shard.alock  # pin: a takeover swaps shard.alock mid-CS
+            alock.lock(p)
             renewed = None
             try:
                 now = self.clock()
@@ -1369,7 +1444,7 @@ class ShardedLockTable:
                                         now + ttl, ttl, LeaseMode.EXCLUSIVE,
                                         _infl(readers))
             finally:
-                shard.alock.unlock(p)
+                alock.unlock(p)
             return renewed
         finally:
             self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
@@ -1451,7 +1526,8 @@ class ShardedLockTable:
                 with shard._meta:
                     shard.fast_releases += 1
                 return True
-            shard.alock.lock(p)
+            alock = shard.alock  # pin: a takeover swaps shard.alock mid-CS
+            alock.lock(p)
             released = False
             infl_word = False
             writes = None
@@ -1480,7 +1556,7 @@ class ShardedLockTable:
                         released = True
                         infl_word = _infl(readers)
             finally:
-                shard.alock.unlock(p, piggyback=writes)
+                alock.unlock(p, piggyback=writes)
             handoff = handoff or (released and infl_word)
             return released
         finally:
@@ -1554,7 +1630,8 @@ class ShardedLockTable:
             now = self.clock()
             if now >= lease.expires_at:
                 return None
-            shard.alock.lock(p)
+            alock = shard.alock  # pin: a takeover swaps shard.alock mid-CS
+            alock.lock(p)
             writes: List[tuple] = []
             try:
                 now = self.clock()
@@ -1586,7 +1663,7 @@ class ShardedLockTable:
                     else:  # drain the rest of the cohort first
                         writes = [("write", st.intent, eexp)]
             finally:
-                shard.alock.unlock(p, piggyback=writes or None)
+                alock.unlock(p, piggyback=writes or None)
         finally:
             self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
         if upgraded is not None:
@@ -1830,7 +1907,8 @@ class ShardedLockTable:
         writes = None
         try:
             if dead:
-                shard.alock.lock(p)
+                alock = shard.alock  # pin across a concurrent takeover
+                alock.lock(p)
                 try:
                     now = self.clock()
                     holder, (etok, readers, eexp), fence, _barrier = \
@@ -1851,7 +1929,7 @@ class ShardedLockTable:
                                         now + ttl, ttl, LeaseMode.EXCLUSIVE,
                                         _infl(readers))
                 finally:
-                    shard.alock.unlock(p, piggyback=writes)
+                    alock.unlock(p, piggyback=writes)
         finally:
             self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
         with shard._meta:
@@ -1925,7 +2003,8 @@ class ShardedLockTable:
             writes: List[tuple] = []
             action = "reset"
             try:
-                shard.alock.lock(p)
+                alock = shard.alock  # pin across a concurrent takeover
+                alock.lock(p)
                 try:
                     now = self.clock()
                     _holder, (etok, readers, eexp), fence, _barrier = \
@@ -1975,7 +2054,7 @@ class ShardedLockTable:
                             packed = self.mem.auto_read(p, st.expires)
                             self.mem.yield_point()
                 finally:
-                    shard.alock.unlock(p, piggyback=writes or None)
+                    alock.unlock(p, piggyback=writes or None)
             finally:
                 self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
             report[action] += 1
@@ -1983,6 +2062,192 @@ class ShardedLockTable:
             shard.reconstructions += sum(report.values())
             shard.reconstruct_resets += report["reset"]
         return report
+
+    def takeover_shard(self, p: Process, shard_index: int,
+                       records: Iterable,
+                       membership=None, fence_slack: int = 16,
+                       ) -> Optional[Dict[str, int]]:
+        """Epoch-fenced automatic takeover of a dead home's shard.
+
+        The successor (``p`` must run ON the new home) re-homes the shard
+        onto its own host: unlike :meth:`reconstruct_shard` — which audits
+        the *surviving* registers after the home restarts — takeover cannot
+        touch the old registers at all (they died with the host), so it
+        rebuilds the shard from the merged ledger stream alone.  The
+        sequence, in fencing order:
+
+        1. **Partition guard** — if ``membership`` is given (duck-typed:
+           ``can_serve()`` / ``confirm_dead(host)``), refuse without a live
+           majority attestation: a minority island must degrade to
+           read-only lease validation, never re-home shards.
+        2. **Epoch CAS** — bump the shard's epoch register, which lives on
+           the rank-order first successor rather than the home exactly so
+           it survives the home's death.  Losing the CAS means another
+           successor already owns the rebuild: abort.
+        3. **Liveness re-probe** — after winning the epoch, re-probe the
+           "dead" host's member lease: a live unexpired word means we were
+           on the wrong side of a heal (the burned epoch is harmless — it
+           only ever fences grants *we* would have made).
+        4. **Rebuild** — fold the ledgers exactly like reconstruction:
+           a key whose largest ledgered token is an unexpired, untombstoned
+           EXCLUSIVE grant is installed *intact* on the new home (word,
+           fence, and holder match the lease — the third-party holder's
+           witness CASes keep working across the re-homing); every other
+           ledgered key is re-seeded FREE under a fence advanced
+           ``fence_slack`` past everything observed (covering grants that
+           died unrecorded — same token-monotonicity posture as
+           reconstruction; shared generations are reset, readers issue no
+           fenced writes and simply re-join).  All registers (including a
+           fresh ALock) carry epoch-suffixed names; keys never ledgered by
+           any surviving client are lost with the host.
+        5. **Tombstones + forwarding** — one probe decides reachability of
+           the deposed home; if it answers (deposed-but-alive, e.g. healed
+           partition loser), every old key word is tombstoned with a
+           never-expiring sentinel generation and its holder register
+           becomes a forwarding pointer to the new home; the shard's
+           forwarding register (next to the epoch register) is updated
+           either way.  If the probe times out the old registers are
+           unreachable garbage and the epoch fence alone handles zombies.
+        6. **Swap** — home_host / keys / ALock / epoch swing in one
+           ``_meta``-guarded step; in-flight transactions pinned to the old
+           ALock drain against dead registers and are discarded by
+           :meth:`_epoch_fence`.
+
+        Returns the rebuild report, or ``None`` on refusal/abort.
+        """
+        shard = self.shards[shard_index]
+        new_home = p.node
+        old_home = shard.home_host
+        if new_home == old_home:
+            raise ValueError("takeover_shard: successor must be a new home "
+                             "(use reconstruct_shard after a home restart)")
+        snap = p.counts.as_tuple()
+        try:
+            if membership is not None and not membership.can_serve():
+                with shard._meta:
+                    shard.takeover_refusals += 1
+                return None
+            # Witness reachability is decided by a non-blocking probe: a
+            # takeover must never ride the fabric's heal-wait across a
+            # cut.  One atomic recovery step spanning a heal would read a
+            # post-heal view in which the "dead" host's renewals could
+            # not yet have landed — and the liveness re-probe below would
+            # wrongly confirm.  Unreachable witness: retry next sweep.
+            if self.mem.probe(p, shard.epoch_reg) is TIMEOUT:
+                with shard._meta:
+                    shard.takeover_aborts += 1
+                return None
+            # The epoch register is authoritative (the python-side
+            # shard.epoch mirror only advances on commit: aborted attempts
+            # burn register epochs without un-fencing anything).
+            reg_epoch = self.mem.auto_read(p, shard.epoch_reg)
+            if self.mem.auto_cas(p, shard.epoch_reg, reg_epoch,
+                                 reg_epoch + 1) != reg_epoch:
+                with shard._meta:
+                    shard.takeover_aborts += 1
+                return None
+            new_epoch = reg_epoch + 1
+            if membership is not None and not membership.confirm_dead(old_home):
+                with shard._meta:
+                    shard.takeover_aborts += 1
+                return None
+
+            # ---- ledger fold (same selection rules as reconstruct_shard)
+            ledger_max: Dict[str, int] = {}
+            grants: Dict[str, Dict[int, tuple]] = {}
+            tombs: Dict[str, set] = {}
+            for rec in records:
+                key = rec.key
+                if not key or rec.op not in ("grant", "reclaim", "renew",
+                                             "release", "lost"):
+                    continue
+                if self.shard_of(key) != shard_index:
+                    continue
+                if rec.token > ledger_max.get(key, 0):
+                    ledger_max[key] = rec.token
+                if rec.op in ("grant", "reclaim"):
+                    grants.setdefault(key, {})[rec.token] = (
+                        rec.token, rec.expires_at, rec.pid, rec.mode)
+                elif rec.op == "renew":
+                    cur = grants.get(key, {}).get(rec.token)
+                    if cur is not None and rec.expires_at > cur[1]:
+                        grants[key][rec.token] = (rec.token, rec.expires_at,
+                                                  cur[2], cur[3])
+                else:  # release / lost
+                    tombs.setdefault(key, set()).add(rec.token)
+
+            # ---- rebuild on the new home (all ops local to `p`)
+            prefix = f"{self.name}.s{shard_index}.e{new_epoch}"
+            new_alock = ALock(self.mem, new_home, shard.init_budget,
+                              name=prefix)
+            new_keys: Dict[str, _KeyState] = {}
+            now = self.clock()
+            report = {"epoch": new_epoch, "intact": 0, "reset": 0,
+                      "tombstoned": 0}
+            for key in sorted(ledger_max):
+                live_tok = max(
+                    (t for t in grants.get(key, {})
+                     if t not in tombs.get(key, set())),
+                    default=None,
+                )
+                lmax = ledger_max[key]
+                st = _KeyState(self.mem, new_home,
+                               f"{prefix}.k{stable_key_hash(key):016x}")
+                live = (live_tok is not None and live_tok == lmax
+                        and grants[key][live_tok][3] == int(LeaseMode.EXCLUSIVE)
+                        and grants[key][live_tok][1] > now)
+                if live:
+                    tok, exp, pid, _m = grants[key][live_tok]
+                    self.mem.write(p, st.expires, (tok, 0, exp))
+                    self.mem.write(p, st.fence, tok)
+                    self.mem.write(p, st.holder, pid)
+                    report["intact"] += 1
+                else:
+                    nf = lmax + fence_slack
+                    self.mem.write(p, st.expires, (nf, 0, _FREE_AT))
+                    self.mem.write(p, st.fence, nf)
+                    report["reset"] += 1
+                new_keys[key] = st
+
+            # ---- tombstone the deposed home's registers, if it answers
+            old_keys = dict(shard.keys)
+            if old_keys:
+                first = next(iter(old_keys.values()))
+                if self.mem.probe(p, first.expires) is not TIMEOUT:
+                    try:
+                        self.mem.post_batch(p, [
+                            w for ost in old_keys.values()
+                            for w in (("write", ost.expires,
+                                       (_TOMB_TOKEN, 0, _TOMB_AT)),
+                                      ("write", ost.holder,
+                                       _fwd_enc(new_home)))
+                        ])
+                        report["tombstoned"] = len(old_keys)
+                    except RemoteTimeout:
+                        pass  # it died under us: the epoch fence suffices
+            self.mem.auto_write(p, shard.fwd_reg, new_home)
+
+            # ---- commit: one atomic swap, then the epoch fence is live
+            with shard._meta:
+                shard.home_host = new_home
+                shard.alock = new_alock
+                shard.keys = new_keys
+                shard.epoch = new_epoch
+                shard.takeovers += 1
+                shard.rehomed_keys += len(new_keys)
+                shard.reconstructions += report["intact"] + report["reset"]
+                shard.reconstruct_resets += report["reset"]
+            return report
+        finally:
+            # Classified by hand: the commit flips home_host to p.node, so
+            # _account would file the successor's recovery ops (epoch CAS
+            # on the witness, tombstones on the deposed home) as LOCAL.
+            # Takeover traffic is remote by construction — the guard above
+            # rejects p.node == old_home.
+            with shard._meta:
+                shard.stats[REMOTE].add_since(p.counts, snap)
+                shard.mode_stats[(LeaseMode.EXCLUSIVE, REMOTE)].add_since(
+                    p.counts, snap)
 
     # --------------------------------------------------------------- batches
     def batch_order(self, keys: Iterable[str]) -> List[str]:
@@ -2024,9 +2289,13 @@ class ShardedLockTable:
                 start = 0
                 delay = poll
                 while start < len(group):
+                    epoch0 = shard.epoch
                     granted, blocked = self._acquire_group(
                         p, shard, group[start:], ttl, mode
                     )
+                    granted = [g for g in granted
+                               if self._epoch_fence(p, shard, epoch0, g)
+                               is not None]
                     held.extend(granted)
                     start += len(granted)
                     if granted:
@@ -2132,11 +2401,12 @@ class ShardedLockTable:
         writes: List[tuple] = []
         handoffs: List[Tuple[_KeyState, Lease]] = []
         try:
+            alock = shard.alock  # pin: a takeover swaps shard.alock mid-CS
             if local:
-                shard.alock.lock(p)
+                alock.lock(p)
                 flat = None
             else:
-                flat = shard.alock.lock(p, piggyback_reads=[
+                flat = alock.lock(p, piggyback_reads=[
                     r for st in states
                     for r in (st.holder, st.expires, st.fence)
                 ])
@@ -2191,7 +2461,7 @@ class ShardedLockTable:
                             if _infl(packed[1]):
                                 handoffs.append((st, lease))
             finally:
-                shard.alock.unlock(p, piggyback=writes or None)
+                alock.unlock(p, piggyback=writes or None)
         finally:
             self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
         for st, lease in handoffs:
@@ -2302,6 +2572,12 @@ class ShardedLockTable:
                     "orphan_adopts": shard.orphan_adopts,
                     "reconstructions": shard.reconstructions,
                     "reconstruct_resets": shard.reconstruct_resets,
+                    "epoch": shard.epoch,
+                    "takeovers": shard.takeovers,
+                    "takeover_refusals": shard.takeover_refusals,
+                    "takeover_aborts": shard.takeover_aborts,
+                    "epoch_aborts": shard.epoch_aborts,
+                    "rehomed_keys": shard.rehomed_keys,
                     "inflations": shard.inflations,
                     "deflations": shard.deflations,
                     "queue_enqueues": shard.queue_enqueues,

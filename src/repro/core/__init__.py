@@ -15,11 +15,13 @@ Data plane (JAX, multi-pod):
 
 from .memory import (  # noqa: F401
     NULLPTR,
+    TIMEOUT,
     AsymmetricMemory,
     OpCounts,
     OperationNotEnabled,
     Process,
     Register,
+    RemoteTimeout,
     make_scheduler,
 )
 from .mcs import BudgetedMCSLock, InflatedKeyQueue  # noqa: F401

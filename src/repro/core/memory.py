@@ -50,6 +50,31 @@ class OperationNotEnabled(RuntimeError):
     """Raised when a process uses an operation not enabled for it (paper §2)."""
 
 
+class RemoteTimeout(RuntimeError):
+    """A remote posting exceeded its op-level timeout budget.
+
+    Raised by fabrics that model message loss (``repro.sim.fabric``) once the
+    bounded retransmit schedule is exhausted — the RDMA analogue of a QP
+    transitioning to error after ``retry_cnt`` retries.  The plain in-memory
+    fabric never raises it.
+    """
+
+
+class _TimeoutSentinel:
+    """Falsy singleton returned by :meth:`AsymmetricMemory.probe` on loss."""
+
+    __slots__ = ()
+
+    def __repr__(self) -> str:
+        return "TIMEOUT"
+
+    def __bool__(self) -> bool:
+        return False
+
+
+TIMEOUT = _TimeoutSentinel()
+
+
 @dataclass
 class OpCounts:
     """Per-process operation accounting (the unit of the paper's cost claims).
@@ -68,6 +93,12 @@ class OpCounts:
     remote_write: int = 0
     remote_cas: int = 0
     remote_doorbell: int = 0
+    # Faulty-fabric accounting: a ``timeout`` is one lost posting discovered
+    # at its op-level deadline; a ``retry`` is one backoff-scheduled repost.
+    # Both are zero on a loss-free fabric (the failure-free path costs
+    # nothing, per Dhoked & Mittal's adaptive-recovery bar).
+    timeouts: int = 0
+    retries: int = 0
 
     @property
     def rdma_ops(self) -> int:
@@ -82,7 +113,7 @@ class OpCounts:
         return (
             self.local_read, self.local_write, self.local_cas,
             self.remote_read, self.remote_write, self.remote_cas,
-            self.remote_doorbell,
+            self.remote_doorbell, self.timeouts, self.retries,
         )
 
     def add_since(self, current: "OpCounts", since: tuple) -> None:
@@ -100,6 +131,8 @@ class OpCounts:
         self.remote_write += current.remote_write - since[4]
         self.remote_cas += current.remote_cas - since[5]
         self.remote_doorbell += current.remote_doorbell - since[6]
+        self.timeouts += current.timeouts - since[7]
+        self.retries += current.retries - since[8]
 
     def snapshot(self) -> "OpCounts":
         return OpCounts(**vars(self))
@@ -364,6 +397,18 @@ class AsymmetricMemory:
         if p.is_local_to(reg):
             return self.cas(p, reg, expected, swap)
         return self.rcas(p, reg, expected, swap)
+
+    def probe(self, p: Process, reg: Register) -> Any:
+        """Bounded-liveness read: the value, or :data:`TIMEOUT` on loss.
+
+        Failure detectors must not block on the very host they are probing,
+        so this read gives up instead of retrying.  On the plain in-memory
+        fabric delivery is reliable and ``probe`` is exactly ``auto_read``;
+        lossy fabrics (``repro.sim.fabric``) override it to return
+        :data:`TIMEOUT` after one op-level timeout when the target is
+        unreachable (dead host, link flap, partition cut).
+        """
+        return self.auto_read(p, reg)
 
     def fence(self, p: Process) -> None:
         """RDMA + local memory fence.

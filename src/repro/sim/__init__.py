@@ -13,5 +13,5 @@ workload.
 """
 
 from .engine import SimEngine, SimLivelockError, VirtualClock  # noqa: F401
-from .fabric import FabricLatency, SimFabricMemory  # noqa: F401
+from .fabric import FabricFaults, FabricLatency, SimFabricMemory  # noqa: F401
 from .workloads import SIM_WORKLOADS, SimResult, run_lock_table_sim  # noqa: F401

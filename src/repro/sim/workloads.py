@@ -54,6 +54,25 @@ Workloads (mirroring, then extending, the threaded bench):
   (the before/after pair the recovery benchmark reports).  Per-lease
   recovery latencies and per-restart recovery events are recorded in
   virtual time; fencing-token monotonicity is asserted throughout.
+* ``home_death`` — the self-healing workload: every host runs a
+  :class:`~repro.coord.HostMembership` heartbeat + monitor pair alongside
+  its ledgered clients, and at a seeded instant one host **dies for good**
+  — its memory drops off the fabric (``FabricFaults.fail_host``) and every
+  one of its tasks is killed.  Surviving clients burn op-timeout retry
+  budgets against the corpse (:class:`RemoteTimeout`), the suspicion
+  estimators walk it ALIVE→SUSPECT→DEAD, and the rank-order successor runs
+  the epoch-fenced takeover of every shard homed there.  The run then
+  re-acquires every key of the dead home from the successor and asserts
+  all of them re-homed with monotonic fencing tokens, and that the
+  crash→takeover latency p99 stays under 5× the membership TTL.
+* ``partition`` — the split-brain workload: a minority island of hosts is
+  cut from the rest for a scheduled window.  Minority clients draw only
+  majority-homed keys, so every acquire must cross the cut; the partition
+  guard (quorum attestation with ``guard_ttl`` undercutting the detection
+  floor) degrades the island before the majority can declare it dead.  The
+  run asserts **zero grants landed on the minority side inside the
+  window**, and that the guard actually blocked takeovers
+  (``takeover_refusals``) rather than the window just being quiet.
 """
 
 from __future__ import annotations
@@ -64,18 +83,20 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
-from repro.coord import (ClientCrash, FaultInjector, InflationPolicy,
-                         LedgerStore, RecoverableClient, ShardedLockTable)
+from repro.coord import (DEAD, ClientCrash, FaultInjector, HostMembership,
+                         InflationPolicy, LedgerStore, RecoverableClient,
+                         ShardedLockTable, SuspicionPolicy)
 from repro.coord.table import EXCLUSIVE, LOCAL, REMOTE, SHARED, LeaseMode
+from repro.core import RemoteTimeout
 
 from .engine import SimEngine
-from .fabric import FabricLatency, SimFabricMemory
+from .fabric import FabricFaults, FabricLatency, SimFabricMemory
 
 __all__ = ["SIM_WORKLOADS", "KEYS_PER_HOST", "SimResult", "jain",
            "keys_by_home", "run_lock_table_sim"]
 
 SIM_WORKLOADS = ("home", "uniform", "zipfian", "failover", "read_heavy",
-                 "reader_flood", "crash_restart")
+                 "reader_flood", "crash_restart", "home_death", "partition")
 
 KEYS_PER_HOST = 8   # keyspace density; shared with the threaded bench
 HOLD = 10e-6        # virtual seconds a lease is held
@@ -115,7 +136,10 @@ class _RunState:
                  "token_regressions", "zombie_renews",
                  "grants_by_mode", "writer_waits",
                  "crashes", "reclaims", "recovery_latencies",
-                 "recovery_events", "hot_latencies", "hot_rcas")
+                 "recovery_events", "hot_latencies", "hot_rcas",
+                 "remote_timeouts", "crash_times", "detect_latencies",
+                 "takeover_latencies", "failover_events",
+                 "minority_grants", "minority", "window")
 
     def __init__(self, nclients: int, target: int):
         self.per_client = [0] * nclients
@@ -132,6 +156,17 @@ class _RunState:
         self.recovery_latencies: List[float] = []
         # One entry per completed restart: [client idx, leases recovered].
         self.recovery_events: List[List[int]] = []
+        # Failover accounting (home_death / partition workloads).
+        self.remote_timeouts = 0            # client-visible retry exhaustions
+        self.crash_times: Dict[int, float] = {}   # host -> scheduled death
+        self.detect_latencies: List[float] = []   # death -> DEAD verdict
+        self.takeover_latencies: List[float] = []  # death -> shard re-homed
+        # One entry per committed takeover:
+        # [t, dead host, shard, new epoch, leases intact, leases reset].
+        self.failover_events: List[List] = []
+        self.minority_grants = 0            # in-window grants on the island
+        self.minority: Optional[frozenset] = None
+        self.window: Optional[tuple] = None  # the partition (start, end)
         # Tracked-hot-key probes (zipfian workload): per-grant acquire
         # latency in virtual time, and the rCAS each REMOTE client paid
         # from first attempt to grant — the quantity inflation bounds.
@@ -490,6 +525,143 @@ def _crash_reaper(engine, schedule, tasks_by_host):
             engine.kill(task, ClientCrash("host.crash", pid=host))
 
 
+def _ha_client(mem, table, store, host, idx, rng, pick, st, ttl,
+               member=None, run_until=0.0):
+    """The failover-aware ledgered client (home_death / partition).
+
+    Every table call sits inside the ``try``: a :class:`RemoteTimeout`
+    (the key's home is unreachable and the op burned its retry budget)
+    backs off and retries — after the takeover the key resolves to its
+    new home and the same loop just works.  With a ``member`` attached
+    the client consults the partition guard first and stops *acquiring*
+    while its island has no quorum attestation (existing leases could
+    still be validated; nothing new is granted).  ``run_until`` keeps
+    the client generating traffic past the ops target, so a partition
+    window is never quietly empty."""
+    clock = table.clock
+    p = mem.spawn(host)
+    rc = RecoverableClient(table, p, store.ledger(f"client/{idx}"))
+    hold = min(HOLD, ttl / 8)
+    backoff = ttl / 4
+    while not st.done() or clock() < run_until:
+        try:
+            if member is not None and not member.can_serve():
+                yield member.policy.guard_ttl / 4
+                continue
+            t_att = clock()
+            lease = rc.try_acquire(pick(rng), ttl)
+            if lease is None:
+                yield backoff * (0.5 + rng.random())
+                backoff = min(backoff * 2, 8 * ttl)
+                continue
+            backoff = ttl / 4
+            st.granted(idx, lease)
+            # An in-window grant is one whose ATTEMPT started inside the
+            # cut: an acquire decided entirely pre-cut may still have its
+            # completion timestamp drift past the boundary on latency
+            # charges, and that is a pre-cut grant, not a violation.
+            if (st.window is not None and st.minority is not None
+                    and host in st.minority
+                    and st.window[0] <= t_att and clock() < st.window[1]):
+                st.minority_grants += 1
+            yield hold
+            rc.release(lease)
+            yield THINK
+        except RemoteTimeout:
+            st.remote_timeouts += 1
+            yield backoff * (0.5 + rng.random())
+            backoff = min(backoff * 2, 8 * ttl)
+        except ClientCrash:
+            return  # died with its host; this workload has no restarts
+
+
+def _heartbeat_agent(m):
+    """Wraps :meth:`HostMembership.heartbeat_task` so a host death
+    (:class:`ClientCrash` from the killer) retires the loop cleanly."""
+    try:
+        yield from m.heartbeat_task()
+    except ClientCrash:
+        m.stop()
+
+
+def _membership_agent(table, store, m, st):
+    """One host's monitor *and* successor duties: sweep the member words
+    every ``sweep_every``, and when a host this monitor is the rank-order
+    successor of goes DEAD, run the epoch-fenced takeover of every shard
+    still homed on the corpse.  Detection and crash→re-homed latencies
+    land in the run state (dead hosts with no scheduled crash time — a
+    partition mirage — are recorded as verdicts only)."""
+    clock = table.clock
+    detected: set = set()
+    try:
+        while not m.stopped:
+            m.sweep_once()
+            for h in range(m.num_hosts):
+                if h == m.host or m.estimator.verdict(h) != DEAD:
+                    continue
+                t0 = st.crash_times.get(h)
+                died = m.estimator.died_at(h)
+                if t0 is not None and died is not None and h not in detected:
+                    detected.add(h)
+                    st.detect_latencies.append(died - t0)
+                if not m.is_successor(h):
+                    continue
+                for shard in table.shards:
+                    if shard.home_host != h:
+                        continue
+                    try:
+                        rep = table.takeover_shard(
+                            m.p, shard.index, store.all_records(),
+                            membership=m)
+                    except RemoteTimeout:
+                        rep = None  # the witness is unreachable too: retry
+                    if rep is None:
+                        continue
+                    now = clock()
+                    if t0 is not None:
+                        st.takeover_latencies.append(now - t0)
+                    st.failover_events.append(
+                        [round(now, 9), h, shard.index, rep["epoch"],
+                         rep["intact"], rep["reset"]])
+            yield m.policy.sweep_every
+    except ClientCrash:
+        m.stop()
+
+
+def _host_killer(engine, faults, schedule, tasks_by_host):
+    """home_death's reaper: at each instant the host's memory drops off
+    the fabric for good (``fail_host``) and every one of its tasks —
+    clients, heartbeat, monitor — dies at its next dispatch."""
+    for t, host in schedule:
+        dt = t - engine.clock.now
+        if dt > 0:
+            yield dt
+        faults.fail_host(host, t)
+        for task in tasks_by_host[host]:
+            engine.kill(task, ClientCrash("host.death", pid=host))
+
+
+def _rehome_verifier(mem, table, st, host, keys, ttl, out):
+    """The post-run prover: from the successor host, acquire every key the
+    dead home used to own.  A key that cannot be granted, or that hands
+    out a token at or below the pre-crash maximum, is a failed takeover —
+    both feed the run's hard asserts."""
+    p = mem.spawn(host)
+    for key in keys:
+        backoff = ttl / 8
+        while True:
+            lease = table.try_acquire(p, key, ttl)
+            if lease is not None:
+                break
+            yield backoff  # a pre-crash survivor lease drains within a TTL
+            backoff = min(backoff * 2, 4 * ttl)
+        if lease.token <= st.last_token.get(key, 0):
+            st.token_regressions += 1
+        table.release(p, lease)
+        out.append(key)
+        yield THINK
+
+
 # ------------------------------------------------------------------ runner
 @dataclass
 class SimResult:
@@ -544,6 +716,23 @@ class SimResult:
     reclaim_rejects: int
     orphan_probes: int
     orphan_adopts: int
+    reconstructs: int
+    reconstruct_resets: int
+    takeovers: int
+    takeover_refusals: int
+    takeover_aborts: int
+    epoch_aborts: int
+    rehomed_keys: int
+    remote_timeouts: int
+    guard_blocks: int
+    quorum_losses: int
+    minority_grants: int
+    detect_p99: float
+    failover_p50: float
+    failover_p99: float
+    failover_max: float
+    failover_events: List[List]
+    fabric: Dict[str, int]
     inflations: int
     deflations: int
     queue_enqueues: int
@@ -597,6 +786,10 @@ def run_lock_table_sim(
     restart_delay: Optional[float] = None,
     reclaim: bool = True,
     inflation: Optional[InflationPolicy] = None,
+    member_ttl: Optional[float] = None,
+    partition_frac: float = 0.25,
+    partition_at: Optional[float] = None,
+    partition_for: Optional[float] = None,
     max_events: Optional[int] = None,
 ) -> SimResult:
     """Run one workload to ``total_ops`` granted leases; fully deterministic.
@@ -613,18 +806,45 @@ def run_lock_table_sim(
         raise ValueError(f"unknown sim workload {workload!r}")
     wall0 = time.perf_counter()
     engine = SimEngine(seed)
-    mem = SimFabricMemory(num_hosts, engine, latency or FabricLatency())
+    if ttl is None:
+        # The short-lease workloads share one tunable TTL (``failover_ttl``)
+        # instead of a hardcoded constant, so the recovery sweeps can scale
+        # lease lifetime without forking the workload.
+        short = ("failover", "reader_flood", "crash_restart",
+                 "home_death", "partition")
+        ttl = failover_ttl if workload in short else 1.0
+    # Membership TTL: long enough that one monitor sweep (num_hosts-1
+    # charged probes) fits well inside a sweep period — the detector's
+    # cadence must not be slower than its own probe loop.
+    if member_ttl is None:
+        member_ttl = max(10 * ttl, num_hosts * 100e-6)
+
+    # The fault plan: home_death needs `fail_host`, partition needs the
+    # scheduled cut, and ANY workload with a FaultInjector gets the fabric
+    # points armed (the crash matrix crosses host-crash cells with
+    # message-loss cells through exactly this wiring).  Everything else
+    # keeps faults=None and the legacy loss-free timelines byte-identical.
+    minority: Optional[frozenset] = None
+    window = None
+    faults: Optional[FabricFaults] = None
+    if workload == "partition":
+        q = max(1, int(num_hosts * partition_frac))
+        minority = frozenset(range(q))
+        t0 = partition_at if partition_at is not None else 2 * member_ttl
+        t1 = t0 + (partition_for if partition_for is not None
+                   else 4 * member_ttl)
+        window = (t0, t1)
+        faults = FabricFaults(seed=seed, injector=fault,
+                              partitions=((minority, t0, t1),))
+    elif workload == "home_death" or fault is not None:
+        faults = FabricFaults(seed=seed, injector=fault)
+    mem = SimFabricMemory(num_hosts, engine, latency or FabricLatency(),
+                          faults=faults)
     table = ShardedLockTable(
         mem, num_shards=num_shards or 2 * num_hosts,
         clock=engine.clock, sleep=engine.sleep_inline, name=f"sim{seed}",
         fault=fault, inflation=inflation, seed=seed,
     )
-    if ttl is None:
-        # The short-lease workloads share one tunable TTL (``failover_ttl``)
-        # instead of a hardcoded constant, so the recovery sweeps can scale
-        # lease lifetime without forking the workload.
-        short = ("failover", "reader_flood", "crash_restart")
-        ttl = failover_ttl if workload in short else 1.0
 
     universe = [f"k/{i}" for i in range(num_hosts * keys_per_host)]
     if workload == "home":
@@ -653,6 +873,17 @@ def run_lock_table_sim(
             return pick
     elif workload == "reader_flood":
         pick_for = None  # flood clients share one literal key
+    elif workload == "home_death":
+        # Uniform over the whole keyspace: the dead home's keys must keep
+        # seeing traffic, or the takeover would never be exercised.
+        pick_for = lambda h: lambda rng: rng.choice(universe)  # noqa: E731
+    elif workload == "partition":
+        # Every draw is majority-homed, so a minority client's acquire
+        # must cross the cut — the zero-in-window-grants assert is about
+        # the guard and the fabric, not about idle clients.
+        majority_keys = [k for k in universe
+                         if table.home_of(k) not in minority]
+        pick_for = lambda h: lambda rng: rng.choice(majority_keys)  # noqa: E731
     else:  # failover / crash_restart: everyone storms a small hot set
         # The hot-set size is a workload parameter (``hot_keys``), not a
         # baked-in constant — the recovery sweep narrows it to sharpen
@@ -662,14 +893,45 @@ def run_lock_table_sim(
 
     nclients = num_hosts * clients_per_host
     st = _RunState(nclients, total_ops)
+    st.minority = minority
+    st.window = window
     flood_key = universe[0]
     store = LedgerStore()
     if restart_delay is None:
         restart_delay = ttl / 4
     tasks_by_host: Dict[int, List] = {h: [] for h in range(num_hosts)}
+
+    memberships: List[HostMembership] = []
+    run_until = 0.0
+    if workload in ("home_death", "partition"):
+        if window is not None:
+            run_until = window[1] + 4 * member_ttl
+        # One heartbeat + one monitor per host.  The heartbeats ride the
+        # RecoverableClient ledger path (a member shard that gets taken
+        # over keeps its fencing history); the monitors start half a
+        # membership TTL late so first beats land before first sweeps.
+        mpol = SuspicionPolicy(ttl=member_ttl)
+        for h in range(num_hosts):
+            m = HostMembership(table, mem, h, num_hosts, policy=mpol,
+                               ledger=store.ledger(f"member.h{h}"))
+            memberships.append(m)
+            hb = _heartbeat_agent(m)
+            mon = _membership_agent(table, store, m, st)
+            tasks_by_host[h] += [hb, mon]
+            engine.spawn(hb, delay=h * 1e-7)
+            engine.spawn(mon, delay=member_ttl / 2 + h * 1e-7)
+
     for idx in range(nclients):
         host = idx // clients_per_host
         rng = random.Random(1_000_003 * seed + idx)
+        if workload in ("home_death", "partition"):
+            member = memberships[host]
+            task = _ha_client(mem, table, store, host, idx, rng,
+                              pick_for(host), st, ttl, member=member,
+                              run_until=run_until)
+            tasks_by_host[host].append(task)
+            engine.spawn(task, delay=idx * 1e-7)
+            continue
         if workload == "crash_restart":
             # The recoverable client spawns its own Process (and respawns
             # one per restart); the reaper needs the task handle to kill.
@@ -712,8 +974,55 @@ def run_lock_table_sim(
         schedule = [(warmup + i * spacing, h) for i, h in enumerate(victims)]
         engine.spawn(_crash_reaper(engine, schedule, tasks_by_host))
 
-    engine.run(stop=st.done,
+    dead_host = None
+    dead_shard_idxs: set = set()
+    if workload == "home_death":
+        # Seeded like the crash_restart schedule: same seed, same corpse,
+        # same instant.  The successor of the dead host must survive to
+        # run the takeover, so exactly one host dies.
+        crash_rng = random.Random(0xC0FFEE * (seed + 1))
+        dead_host = crash_rng.randrange(num_hosts)
+        crash_at = (crash_warmup if crash_warmup is not None
+                    else 2 * member_ttl)
+        st.crash_times[dead_host] = crash_at
+        dead_shard_idxs = {s.index for s in table.shards
+                           if s.home_host == dead_host}
+        engine.spawn(_host_killer(engine, faults, [(crash_at, dead_host)],
+                                  tasks_by_host))
+
+    if workload == "home_death":
+        # The ops target alone must not end the run mid-funeral: hold it
+        # open until every shard of the dead home has a new one.
+        stop = lambda: (st.done() and all(  # noqa: E731
+            s.home_host != dead_host for s in table.shards))
+    elif workload == "partition":
+        t_end = window[1] + 2 * member_ttl
+        stop = lambda: st.done() and engine.clock.now > t_end  # noqa: E731
+    else:
+        stop = st.done
+    engine.run(stop=stop,
                max_events=max_events or (200 * total_ops + 500_000))
+
+    if workload in ("home_death", "partition"):
+        for m in memberships:
+            m.stop()
+    if workload == "home_death":
+        # Second phase: prove the takeover from the outside.  Every key
+        # the dead home used to own must be grantable from the successor,
+        # with a token above the pre-crash maximum.
+        dead_keys = [k for k in universe
+                     if table.shard_of(k) in dead_shard_idxs]
+        if dead_shard_idxs:
+            succ = table.shards[min(dead_shard_idxs)].home_host
+            verified: List[str] = []
+            engine.spawn(_rehome_verifier(mem, table, st, succ, dead_keys,
+                                          ttl, verified))
+            engine.run(stop=lambda: len(verified) == len(dead_keys),
+                       max_events=500_000)
+            if len(verified) != len(dead_keys):
+                raise AssertionError(
+                    f"home_death: only {len(verified)}/{len(dead_keys)} "
+                    f"keys of dead host {dead_host} re-homed")
     wall = time.perf_counter() - wall0
 
     totals = table.class_totals()
@@ -745,11 +1054,38 @@ def run_lock_table_sim(
             f"total ({grants_shared} + {grants_exclusive} != "
             f"{sum(r['grants'] for r in rows)})"
         )
-    if workload in ("home", "uniform", "zipfian", "failover") and grants_shared:
+    if workload in ("home", "uniform", "zipfian", "failover",
+                    "home_death", "partition") and grants_shared:
         raise AssertionError(
             f"{workload}: exclusive-only workload produced {grants_shared} "
             "shared grants"
         )
+    takeovers = sum(r["takeovers"] for r in rows)
+    takeover_refusals = sum(r["takeover_refusals"] for r in rows)
+    if workload == "home_death" and dead_shard_idxs:
+        if takeovers != len(dead_shard_idxs):
+            raise AssertionError(
+                f"home_death: {takeovers} takeovers committed for "
+                f"{len(dead_shard_idxs)} shards homed on dead host "
+                f"{dead_host}")
+        p99 = _pct(st.takeover_latencies, 0.99)
+        if p99 > 5 * member_ttl:
+            raise AssertionError(
+                f"home_death: crash->re-homed p99 {p99:.6f}s exceeds 5x "
+                f"membership TTL ({5 * member_ttl:.6f}s)")
+    if workload == "partition":
+        if st.minority_grants:
+            raise AssertionError(
+                f"partition: {st.minority_grants} grants landed on the "
+                f"minority side inside the cut window")
+        if not takeover_refusals:
+            raise AssertionError(
+                "partition: the guard never refused a takeover — the "
+                "window was too quiet to test anything")
+        if not any(m.quorum_losses for m in memberships):
+            raise AssertionError(
+                "partition: no monitor ever lost quorum — the cut "
+                "never bit")
     inflations = sum(r["inflations"] for r in rows)
     deflations = sum(r["deflations"] for r in rows)
     if inflation is None and (inflations or deflations):
@@ -821,6 +1157,24 @@ def run_lock_table_sim(
         reclaim_rejects=sum(r["reclaim_rejects"] for r in rows),
         orphan_probes=sum(r["orphan_probes"] for r in rows),
         orphan_adopts=sum(r["orphan_adopts"] for r in rows),
+        reconstructs=sum(r["reconstructions"] for r in rows),
+        reconstruct_resets=sum(r["reconstruct_resets"] for r in rows),
+        takeovers=takeovers,
+        takeover_refusals=takeover_refusals,
+        takeover_aborts=sum(r["takeover_aborts"] for r in rows),
+        epoch_aborts=sum(r["epoch_aborts"] for r in rows),
+        rehomed_keys=sum(r["rehomed_keys"] for r in rows),
+        remote_timeouts=st.remote_timeouts,
+        guard_blocks=sum(m.guard_blocks for m in memberships),
+        quorum_losses=sum(m.quorum_losses for m in memberships),
+        minority_grants=st.minority_grants,
+        detect_p99=_pct(st.detect_latencies, 0.99),
+        failover_p50=_pct(st.takeover_latencies, 0.50),
+        failover_p99=_pct(st.takeover_latencies, 0.99),
+        failover_max=(max(st.takeover_latencies)
+                      if st.takeover_latencies else 0.0),
+        failover_events=st.failover_events,
+        fabric=dict(faults.stats) if faults is not None else {},
         inflations=inflations,
         deflations=deflations,
         queue_enqueues=sum(r["queue_enqueues"] for r in rows),

@@ -57,6 +57,44 @@ def test_matrix_runs_are_seed_deterministic():
     assert rows[0] == rows[1]
 
 
+def test_crash_cell_crossed_with_fabric_loss():
+    # The matrix's new axis: one injector arms a process-death window AND
+    # the fabric's message-loss points, so a holder dies at release.pre_cas
+    # while the surrounding traffic is losing, duplicating, and delaying
+    # postings — the recovery path must hold under both at once.
+    fi = (FaultInjector()
+          .at("release.pre_cas", nth=5)
+          .at("fabric.drop", nth=3)
+          .at("fabric.dup", nth=7)
+          .at("fabric.delay", nth=11))
+    r = run_lock_table_sim("crash_restart", fault=fi, **CFG)
+    labels = {lab for lab, _pid, _n in fi.fired}
+    assert "release.pre_cas" in labels, "the crash cell never armed"
+    assert {"fabric.drop", "fabric.dup", "fabric.delay"} <= labels, \
+        f"fabric cells never armed: {labels}"
+    # The lossy fabric actually exercised the timeout/retry machinery...
+    assert r.fabric["drops"] >= 1 and r.fabric["dups"] >= 1
+    assert r.fabric["delays"] >= 1
+    # ...and neither fault axis broke fencing or liveness.
+    assert r.token_regressions == 0
+    assert r.zombie_renews == 0
+    assert r.ops > 0 and r.crashes > 0
+    if r.reclaims:
+        assert r.recovery_max < TTL
+
+
+def test_crossed_cells_are_seed_deterministic():
+    rows = []
+    for _ in range(2):
+        fi = (FaultInjector()
+              .at("grant.pre_ledger", nth=4)
+              .at("fabric.drop", nth=2))
+        r = run_lock_table_sim("crash_restart", fault=fi, **CFG)
+        rows.append((json.dumps(r.row(), sort_keys=True), tuple(fi.fired),
+                     tuple(sorted(r.fabric.items()))))
+    assert rows[0] == rows[1]
+
+
 def test_seeded_crash_storm_stays_safe():
     # Beyond one-shots: a Bernoulli storm over every label at once.
     fi = FaultInjector.seeded(21, prob=0.002)

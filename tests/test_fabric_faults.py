@@ -1,0 +1,191 @@
+"""Faulty-fabric unit tests: seeded loss plans, op-level timeouts, bounded
+retry, the never-blocking probe — and the kill race: a task parked mid-step
+on a fabric timeout must die cleanly, leaving no timer behind and no trace
+in any later run's event log.
+"""
+
+import json
+
+import pytest
+
+from repro.core import TIMEOUT, OpCounts, RemoteTimeout
+from repro.coord import ClientCrash, FaultInjector
+from repro.sim import SimEngine, run_lock_table_sim
+from repro.sim.fabric import FabricFaults, FabricLatency, SimFabricMemory
+
+
+def test_opcounts_carry_fault_fields():
+    c = OpCounts()
+    t = c.as_tuple()
+    assert len(t) == 9
+    c.timeouts += 3
+    c.retries += 2
+    assert c.as_tuple()[7:] == (3, 2)
+    # The fault fields are accounting-only: they do not inflate the
+    # paper's per-class RDMA cost claims.
+    assert c.rdma_ops == 0 and c.local_ops == 0
+
+
+class TestFaultPlan:
+    def test_cut_until_partition_boundary(self):
+        f = FabricFaults(seed=0,
+                         partitions=(({0, 1}, 1e-3, 2e-3),))
+        # Crossing the boundary inside the window: cut until the heal.
+        assert f.cut_until(0, 2, 1.5e-3) == 2e-3
+        assert f.cut_until(2, 0, 1.5e-3) == 2e-3
+        # Same side (either side), or outside the window: path is up.
+        assert f.cut_until(0, 1, 1.5e-3) is None
+        assert f.cut_until(2, 3, 1.5e-3) is None
+        assert f.cut_until(0, 2, 0.5e-3) is None
+        assert f.cut_until(0, 2, 2e-3) is None  # heal instant is healed
+
+    def test_cut_until_flap_and_death(self):
+        f = FabricFaults(seed=0, flaps=((1, 1e-3, 2e-3),))
+        assert f.cut_until(0, 1, 1.5e-3) == 2e-3
+        assert f.cut_until(1, 0, 1.5e-3) == 2e-3
+        assert f.cut_until(0, 1, 3e-3) is None
+        f.fail_host(1, 4e-3)
+        assert f.cut_until(0, 1, 5e-3) == float("inf")
+        # Death is one-way: the dead host as SOURCE is the engine's
+        # business (its tasks are killed); the fabric cuts the target.
+        assert f.cut_until(1, 0, 5e-3) is None
+
+    def test_seeded_draws_are_reproducible(self):
+        def draws(seed):
+            f = FabricFaults(seed=seed, drop_prob=0.3)
+            p = type("P", (), {"node": 0, "pid": 1})()
+            return ([f.draw_drop(p, 1, 0.0) for _ in range(64)],
+                    [round(f.backoff(i % 7 + 1), 12) for i in range(64)])
+
+        assert draws(5) == draws(5)
+        assert draws(5) != draws(6)
+
+    def test_backoff_is_bounded_and_grows(self):
+        f = FabricFaults(seed=1, retry_base=25e-6, retry_cap=400e-6)
+        for attempt in range(1, 12):
+            b = f.backoff(attempt)
+            assert 0.5 * 25e-6 <= b <= 1.5 * 400e-6
+
+
+class TestLossyOps:
+    def _fabric(self, seed=0, **kw):
+        engine = SimEngine(seed)
+        faults = FabricFaults(seed=seed, **kw)
+        mem = SimFabricMemory(2, engine, FabricLatency(), faults=faults)
+        return engine, faults, mem
+
+    def test_dead_host_raises_after_bounded_retries(self):
+        engine, faults, mem = self._fabric()
+        reg = mem.alloc(1, "w", 7)
+        p = mem.spawn(0)
+        faults.fail_host(1, 0.0)
+        with pytest.raises(RemoteTimeout):
+            mem.rread(p, reg)
+        # One initial transmission plus max_retries reposts, each paying
+        # one op timeout; the op then fails rather than blocking forever.
+        assert p.counts.timeouts == faults.max_retries + 1
+        assert p.counts.retries == faults.max_retries
+        assert faults.stats["drops"] == faults.max_retries + 1
+
+    def test_transient_cut_blocks_until_heal(self):
+        engine, faults, mem = self._fabric(
+            partitions=(({0}, 0.0, 2e-3),))
+        reg = mem.alloc(1, "w", 7)
+        p = mem.spawn(0)
+        assert mem.rread(p, reg) == 7    # rides timeouts across the heal
+        assert engine.clock.now >= 2e-3
+        assert p.counts.timeouts > 0 and p.counts.retries > 0
+
+    def test_probe_never_blocks(self):
+        engine, faults, mem = self._fabric()
+        reg = mem.alloc(1, "w", 9)
+        p = mem.spawn(0)
+        faults.fail_host(1, 0.0)
+        t0 = engine.clock.now
+        assert mem.probe(p, reg) is TIMEOUT
+        # Exactly one op-timeout charge, no retries, no exception.
+        assert engine.clock.now - t0 == pytest.approx(faults.op_timeout)
+        assert p.counts.timeouts == 1 and p.counts.retries == 0
+        assert faults.stats["probe_losses"] == 1
+
+    def test_injector_oneshots_hit_exact_postings(self):
+        fi = (FaultInjector().at("fabric.drop", nth=2)
+                             .at("fabric.dup", nth=3)
+                             .at("fabric.delay", nth=4))
+        engine, faults, mem = self._fabric(injector=fi)
+        reg = mem.alloc(1, "w", 0)
+        p = mem.spawn(0)
+        for i in range(5):
+            mem.rwrite(p, reg, i)
+        assert mem.rread(p, reg) == 4
+        assert faults.stats["drops"] == 1
+        assert faults.stats["dups"] == 1
+        assert faults.stats["delays"] == 1
+        assert {lab for lab, _p, _n in fi.fired} == {
+            "fabric.drop", "fabric.dup", "fabric.delay"}
+        # The drop cost the poster a timeout and a repost.
+        assert p.counts.timeouts == 1 and p.counts.retries == 1
+
+
+class TestKillRace:
+    """SimEngine.kill racing a task whose current step is parked on a
+    fabric timeout (its timeline extended across a partition heal)."""
+
+    @staticmethod
+    def _scenario(seed):
+        engine = SimEngine(seed)
+        faults = FabricFaults(seed=seed,
+                              partitions=(({0}, 1e-3, 3e-3),))
+        mem = SimFabricMemory(2, engine, FabricLatency(), faults=faults)
+        reg = mem.alloc(1, "w", 0)
+        p = mem.spawn(0)
+        log = []
+
+        def victim():
+            try:
+                while True:
+                    mem.rread(p, reg)
+                    log.append(round(engine.clock.now, 9))
+                    yield 100e-6
+            except ClientCrash:
+                log.append(("crashed", round(engine.clock.now, 9)))
+
+        vt = engine.spawn(victim())
+
+        def killer():
+            # Land the kill while the victim's in-flight step is still
+            # riding timeout+backoff rounds across the cut: delivery must
+            # wait for the step boundary, then terminate the task.
+            yield 2e-3
+            engine.kill(vt, ClientCrash("host.death", pid=0))
+
+        engine.spawn(killer())
+        engine.run(until=10e-3)
+        return (engine.events, round(engine.clock.now, 9), tuple(log),
+                engine.pending_events, engine.live_tasks,
+                dict(faults.stats),
+                (p.counts.timeouts, p.counts.retries))
+
+    def test_kill_lands_at_step_boundary_and_drains(self):
+        events, now, log, pending, live, stats, _ = self._scenario(3)
+        assert log and log[-1][0] == "crashed"
+        # The blocked step finished (post-heal) before delivery; nothing
+        # of the victim survives: no parked timer, no live generator.
+        assert log[-1][1] >= 3e-3
+        assert pending == 0 and live == 0
+
+    def test_kill_race_is_seed_deterministic(self):
+        assert self._scenario(11) == self._scenario(11)
+
+    def test_no_leak_into_the_next_seeds_event_log(self):
+        # A later, unrelated seeded run must be byte-identical whether or
+        # not the kill race ran first in this process — the engines and
+        # fault plans share no hidden global state.
+        cfg = dict(num_hosts=4, clients_per_host=2, num_shards=8,
+                   total_ops=400, seed=13, failover_ttl=1e-3)
+        control = json.dumps(run_lock_table_sim("failover", **cfg).row(),
+                             sort_keys=True)
+        self._scenario(7)
+        after = json.dumps(run_lock_table_sim("failover", **cfg).row(),
+                           sort_keys=True)
+        assert control == after

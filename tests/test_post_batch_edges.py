@@ -31,7 +31,7 @@ def test_empty_wr_list_is_a_true_noop():
     mem._sched = lambda *a: sched_calls.append(a)
     assert mem.post_batch(p, []) == []
     assert mem.post_batch(p, iter(())) == []  # any iterable, not just list
-    assert p.counts.as_tuple() == (0,) * 7  # no doorbell, no completions
+    assert p.counts.as_tuple() == (0,) * 9  # no doorbell, no completions
     assert sched_calls == []  # no doorbell ring even at the sched hook level
 
 
@@ -82,7 +82,7 @@ def test_local_poster_rejected_with_no_side_effects():
     local = mem.spawn(0)
     with pytest.raises(OperationNotEnabled, match="own node"):
         mem.post_batch(local, [("write", regs[0], 123)])
-    assert local.counts.as_tuple() == (0,) * 7
+    assert local.counts.as_tuple() == (0,) * 9
     remote = mem.spawn(1)
     assert mem.rread(remote, regs[0]) == 0
 

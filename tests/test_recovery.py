@@ -97,6 +97,71 @@ def test_ledger_rejects_unknown_op():
         LeaseLedger("c").append("frobnicate")
 
 
+def _dumped_ledger(tmp_path):
+    led = LeaseLedger("c")
+    led.append("session", pid=7)
+    led.append("grant", key="x", shard=2, token=9, mode=0, expires_at=1.5,
+               ttl=0.5, pid=7)
+    led.append("renew", key="x", token=9, expires_at=2.5, ttl=0.5, pid=7)
+    path = str(tmp_path / "ledger.jsonl")
+    led.dump_jsonl(path)
+    with open(path, "rb") as f:
+        return led, f.read()
+
+
+def test_ledger_torn_tail_truncated_at_every_offset(tmp_path):
+    # A crash mid-append tears the FINAL line at an arbitrary byte; every
+    # such prefix must load as the ledger minus the torn record, with a
+    # warning — the write-ahead intent covers the loss.
+    led, data = _dumped_ledger(tmp_path)
+    tail_start = data[:-1].rfind(b"\n") + 1
+    torn = str(tmp_path / "torn.jsonl")
+    for cut in range(tail_start + 1, len(data) - 1):
+        with open(torn, "wb") as f:
+            f.write(data[:cut])
+        with pytest.warns(RuntimeWarning, match="torn final"):
+            back = LeaseLedger.load_jsonl(torn, name="c")
+        assert back.records == led.records[:-1], f"cut at byte {cut}"
+        # The survivor keeps appending after the highest surviving seq.
+        assert back.append("release", key="x", token=9).seq == \
+            led.records[-2].seq + 1
+
+
+def test_ledger_tail_edge_cases_are_not_tears(tmp_path):
+    led, data = _dumped_ledger(tmp_path)
+    tail_start = data[:-1].rfind(b"\n") + 1
+    # Truncated exactly at the last line's start: a clean shorter ledger.
+    clean = str(tmp_path / "clean.jsonl")
+    with open(clean, "wb") as f:
+        f.write(data[:tail_start])
+    back = LeaseLedger.load_jsonl(clean, name="c")
+    assert back.records == led.records[:-1]
+    # Only the final newline missing: the record itself is whole.
+    nonl = str(tmp_path / "nonl.jsonl")
+    with open(nonl, "wb") as f:
+        f.write(data[:-1])
+    back = LeaseLedger.load_jsonl(nonl, name="c")
+    assert back.records == led.records
+    # An empty file is an empty ledger, not an error.
+    empty = str(tmp_path / "empty.jsonl")
+    with open(empty, "wb") as f:
+        pass
+    assert LeaseLedger.load_jsonl(empty, name="c").records == []
+
+
+def test_ledger_corruption_mid_file_raises(tmp_path):
+    # Append-only files do not tear in the middle: a mangled non-final
+    # record is damage, not a crash artifact, and must refuse loudly.
+    led, data = _dumped_ledger(tmp_path)
+    lines = data.split(b"\n")
+    lines[1] = lines[1][: len(lines[1]) // 2]
+    bad = str(tmp_path / "bad.jsonl")
+    with open(bad, "wb") as f:
+        f.write(b"\n".join(lines))
+    with pytest.raises(ValueError, match="mid-file"):
+        LeaseLedger.load_jsonl(bad, name="c")
+
+
 # ------------------------------------------------------------------ reclaim
 def test_reclaim_fast_path_keeps_token_and_retimes():
     clock = FakeClock()

@@ -25,10 +25,13 @@ Threaded workloads: ``home``, ``uniform``, ``read_heavy`` (95:5
 shared:exclusive mode mix), ``renew``, ``renew_remote``, ``batch`` (see each
 client fn).  Sim workloads: ``home``, ``uniform``, ``zipfian``,
 ``failover``, ``read_heavy``, ``reader_flood``, ``crash_restart``,
-``home_death``, ``partition`` (see ``repro.sim.workloads``), plus the
-read:write ratio sweep (``run_rw_sweep``)
-comparing SHARED readers against an exclusive-only degradation of the same
-seeded run — the mode-aware before/after in ``BENCH_lock_table.json``.
+``home_death``, ``partition``, ``overload_storm`` (see
+``repro.sim.workloads``), plus the read:write ratio sweep
+(``run_rw_sweep``) comparing SHARED readers against an exclusive-only
+degradation of the same seeded run — the mode-aware before/after in
+``BENCH_lock_table.json`` — and the offered-load sweep
+(``run_overload_sweep``) gating goodput retention and bounded deadline
+overshoot under a 1x->10x storm, shedding ON vs OFF.
 
 ``BASELINE`` records the pre-optimisation numbers (per-key critical sections,
 per-op doorbells, ALock-guarded renewals) so ``--json`` emits a before/after
@@ -43,7 +46,8 @@ import threading
 import time
 
 from repro.core import AsymmetricMemory, make_scheduler
-from repro.coord import InflationPolicy, LeaseMode, ShardedLockTable
+from repro.coord import (InflationPolicy, LeaseMode, OverloadPolicy,
+                         ShardedLockTable)
 from repro.coord.table import LOCAL, REMOTE
 from repro.sim import SIM_WORKLOADS, run_lock_table_sim
 from repro.sim.workloads import KEYS_PER_HOST, jain as _jain, keys_by_home
@@ -280,12 +284,12 @@ SIM_OPS = {"home": 50_000, "uniform": 50_000,
            "zipfian": 20_000, "failover": 25_000,
            "read_heavy": 50_000, "reader_flood": 20_000,
            "crash_restart": 20_000, "home_death": 20_000,
-           "partition": 10_000}
+           "partition": 10_000, "overload_storm": 20_000}
 SIM_SMOKE_OPS = {"home": 25_000, "uniform": 25_000,
                  "zipfian": 20_000, "failover": 10_000,
                  "read_heavy": 25_000, "reader_flood": 10_000,
                  "crash_restart": 8_000, "home_death": 8_000,
-                 "partition": 5_000}
+                 "partition": 5_000, "overload_storm": 8_000}
 # The zipfian rows park hundreds of sticky clients on a handful of keys;
 # their event budget is queue/backoff polling, not ops, so the default
 # per-op event cap is far too tight for them.
@@ -357,6 +361,38 @@ INFL_OPS = 20_000
 INFL_P99_GATE = 2.0          # off/on hot-key p99 ratio floor
 INFL_RCAS_CAP = 16           # max rCAS any single hot acquire may pay
 INFL_UNIFORM_TOL = 0.02      # uniform throughput delta tolerance (2 %)
+
+
+# Overload sweep (sim): the overload-safe client stack's acceptance
+# numbers at the full 64x16 scale.  ``overload_storm`` offers an OPEN-LOOP
+# paced arrival stream into a congested fabric; the sweep raises offered
+# load 1x -> 10x with the full overload stack ON (deadline propagation +
+# feasibility shedding + per-host retry budgets/breakers), then re-runs
+# the 10x point with the stack OFF (priority floor, no OverloadPolicy) as
+# the retry-storm control.  Gates:
+#   * goodput retention — shedding-ON goodput at 10x must hold at least
+#     OV_RETENTION of the 1x goodput (overload degrades throughput
+#     gracefully instead of collapsing it);
+#   * the OFF control must land BELOW the ON leg at 10x (the stack has to
+#     beat doing nothing, or it is pure overhead);
+#   * non-shed acquire p99 on every ON leg stays within OV_P99_BUDGETS
+#     deadline budgets — the deadline machinery's bounded-overshoot
+#     guarantee: a grant can return late by at most the one attempt that
+#     was already in flight when the deadline passed (a posted CAS cannot
+#     be unposted), never by an unbounded retry tail;
+#   * 1x must be comfortably served (goodput >= OV_BASE_SERVE of offered)
+#     or the "retention" gate would be measuring an already-sick baseline.
+OV_TTL = 60e-6               # the storm's contention quantum (see workload)
+OV_BUDGET = 10 * OV_TTL      # per-transaction deadline budget
+OV_CFG = dict(num_hosts=SIM_HOSTS, clients_per_host=SIM_CPH,
+              num_shards=SIM_SHARDS, deadline_budget=OV_BUDGET)
+OV_OPS = 20_000
+OV_SMOKE_OPS = 8_000
+OV_LOADS = (1.0, 3.0, 10.0)  # ON legs; the OFF control runs at the peak
+OV_SMOKE_LOADS = (1.0, 10.0)
+OV_RETENTION = 0.7           # 10x ON goodput floor, as a fraction of 1x
+OV_BASE_SERVE = 0.95         # 1x goodput floor, as a fraction of offered
+OV_P99_BUDGETS = 1.5         # ON-leg p99 ceiling, in deadline budgets
 
 
 def run_inflation_sweep(report, sim_seed=0, smoke=False):
@@ -638,6 +674,105 @@ def run_failover_sweep(report, sim_seed=0, smoke=False):
     return out
 
 
+def _storm_leg(r):
+    """The per-leg overload record shared by the sweep and its report."""
+    return {
+        "offered_load": r.offered_load,
+        "offered": r.storm_offered,
+        "goodput": r.storm_goodput,
+        "goodput_shared": r.storm_goodput_shared,
+        "shed": r.storm_shed,
+        "table_sheds": r.sheds,
+        "deadline_misses": r.storm_deadline_misses,
+        "deadline_exceeded": r.deadline_exceeded,
+        "late_grants": r.storm_late_grants,
+        "acquire_p50_us": round(r.storm_acquire_p50 * 1e6, 3),
+        "acquire_p99_us": round(r.storm_acquire_p99 * 1e6, 3),
+        "hedges": r.hedges,
+        "breaker_trips": r.breaker_trips,
+        "breaker_refusals": r.breaker_refusals,
+        "budget_refusals": r.budget_refusals,
+        "op_timeouts": r.op_timeouts,
+        "fabric_retries": r.fabric_retries,
+        "congested": r.fabric.get("congested", 0),
+        "token_regressions": r.token_regressions,
+        "zombie_renews": r.zombie_renews,
+    }
+
+
+def run_overload_sweep(report, sim_seed=0, smoke=False):
+    """Offered-load sweep 1x->10x: graceful shedding vs the retry storm."""
+    ops = OV_SMOKE_OPS if smoke else OV_OPS
+    loads = OV_SMOKE_LOADS if smoke else OV_LOADS
+    out = {"config": dict(OV_CFG, total_ops=ops, loads=list(loads),
+                          budget_us=round(OV_BUDGET * 1e6, 3))}
+    on = {}
+    for load in loads:
+        r = run_lock_table_sim(
+            "overload_storm", total_ops=ops, seed=sim_seed,
+            offered_load=load, shedding=True, overload=OverloadPolicy(),
+            **OV_CFG)
+        on[load] = r
+        out[f"on_{load:g}x"] = _storm_leg(r)
+        report(
+            f"lock_table/sim/overload-on{load:g}x/hosts{SIM_HOSTS}x{SIM_CPH}",
+            1e6 / max(r.virtual_throughput, 1e-9),
+            f"offered={r.storm_offered} goodput={r.storm_goodput} "
+            f"shed={r.storm_shed} dl_miss={r.storm_deadline_misses} "
+            f"p99={r.storm_acquire_p99 * 1e6:.0f}us "
+            f"congested={r.fabric.get('congested', 0)} "
+            f"wall={r.wall_seconds:.1f}s",
+        )
+    peak = loads[-1]
+    off = run_lock_table_sim(
+        "overload_storm", total_ops=ops, seed=sim_seed,
+        offered_load=peak, shedding=False, overload=None, **OV_CFG)
+    out[f"off_{peak:g}x"] = _storm_leg(off)
+    report(
+        f"lock_table/sim/overload-off{peak:g}x/hosts{SIM_HOSTS}x{SIM_CPH}",
+        1e6 / max(off.virtual_throughput, 1e-9),
+        f"offered={off.storm_offered} goodput={off.storm_goodput} "
+        f"dl_miss={off.storm_deadline_misses} "
+        f"p99={off.storm_acquire_p99 * 1e6:.0f}us "
+        f"late={off.storm_late_grants} wall={off.wall_seconds:.1f}s",
+    )
+    base, top = on[loads[0]], on[peak]
+    out["goodput_retention"] = round(
+        top.storm_goodput / max(base.storm_goodput, 1), 4)
+    out["off_over_on_goodput"] = round(
+        off.storm_goodput / max(top.storm_goodput, 1), 4)
+    if base.storm_goodput < OV_BASE_SERVE * base.storm_offered:
+        raise AssertionError(
+            f"overload sweep: the 1x baseline served only "
+            f"{base.storm_goodput}/{base.storm_offered} arrivals "
+            f"(floor {OV_BASE_SERVE:.0%}) — the sweep is measuring an "
+            f"already-overloaded baseline")
+    if top.storm_goodput < OV_RETENTION * base.storm_goodput:
+        raise AssertionError(
+            f"overload sweep: goodput at {peak:g}x fell to "
+            f"{top.storm_goodput} vs {base.storm_goodput} at 1x "
+            f"(floor {OV_RETENTION:.0%}) — shedding is not protecting "
+            f"feasible work")
+    if off.storm_goodput >= top.storm_goodput:
+        raise AssertionError(
+            f"overload sweep: the shedding-OFF control served "
+            f"{off.storm_goodput} >= {top.storm_goodput} with the stack ON "
+            f"— the overload machinery is pure overhead here")
+    for load, r in on.items():
+        if r.storm_acquire_p99 > OV_P99_BUDGETS * OV_BUDGET:
+            raise AssertionError(
+                f"overload sweep: non-shed acquire p99 at {load:g}x is "
+                f"{r.storm_acquire_p99 * 1e6:.0f}us, past "
+                f"{OV_P99_BUDGETS}x the {OV_BUDGET * 1e6:.0f}us budget — "
+                f"deadline overshoot is not bounded")
+        if r.token_regressions or r.zombie_renews:
+            raise AssertionError(
+                f"overload sweep: {load:g}x saw {r.token_regressions} "
+                f"token regressions / {r.zombie_renews} zombie renewals "
+                f"under shedding")
+    return out
+
+
 def run_sim(report, sim_seed=0, smoke=False, zipf_run=None):
     """The deterministic virtual-time sweep; returns (rows, wall_seconds).
 
@@ -675,6 +810,11 @@ def run_sim(report, sim_seed=0, smoke=False, zipf_run=None):
             # crash/cut instants.  The membership TTL derives from host
             # count inside the workload.
             kwargs = dict(failover_ttl=REC_TTL)
+        if workload == "overload_storm":
+            # The standing row is the 1x point with the full overload
+            # stack ON; run_overload_sweep owns the loaded legs.
+            kwargs = dict(overload=OverloadPolicy(),
+                          deadline_budget=OV_BUDGET)
         if r is None:
             r = run_lock_table_sim(
                 workload, num_hosts=SIM_HOSTS, clients_per_host=SIM_CPH,
@@ -696,6 +836,10 @@ def run_sim(report, sim_seed=0, smoke=False, zipf_run=None):
         if workload == "crash_restart":
             extra += (f"crashes={r.crashes} recovered={r.reclaims} "
                       f"recovery_p99={r.recovery_p99 * 1e6:.0f}us ")
+        if workload == "overload_storm":
+            extra += (f"offered={r.storm_offered} "
+                      f"goodput={r.storm_goodput} shed={r.storm_shed} "
+                      f"storm_p99={r.storm_acquire_p99 * 1e6:.0f}us ")
         report(
             f"lock_table/sim/{cfg}",
             1e6 / max(r.virtual_throughput, 1e-9),  # virtual µs per op
@@ -748,6 +892,7 @@ def run(report, seconds=0.7, seeds=SEEDS, mode="both", sim_seed=0,
         sweep = run_rw_sweep(report, sim_seed=sim_seed, smoke=smoke)
         recovery = run_recovery_sweep(report, sim_seed=sim_seed, smoke=smoke)
         failover = run_failover_sweep(report, sim_seed=sim_seed, smoke=smoke)
+        overload = run_overload_sweep(report, sim_seed=sim_seed, smoke=smoke)
         _LAST["sim"] = {
             "seed": sim_seed,
             "config": {"hosts": SIM_HOSTS, "clients_per_host": SIM_CPH,
@@ -761,6 +906,7 @@ def run(report, seconds=0.7, seeds=SEEDS, mode="both", sim_seed=0,
             "recovery": recovery,
             "failover": failover,
             "inflation": inflation,
+            "overload": overload,
         }
 
 

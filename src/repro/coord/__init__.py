@@ -15,6 +15,8 @@ from .ledger import (LeaseLedger, LedgerRecord, LedgerStore,  # noqa: F401
                      LedgerView, RecoverableClient, replay_records)
 from .membership import (ALIVE, DEAD, SUSPECT, HostMembership,  # noqa: F401
                          SuspicionEstimator, SuspicionPolicy, member_key_for)
+from .overload import (CircuitBreaker, LatencyTracker,  # noqa: F401
+                       OverloadControl, OverloadPolicy, RetryBudget)
 from .service import Barrier, CoordinationService  # noqa: F401
 from .table import (Lease, LeaseMode, LockShard, ShardedLockTable,  # noqa: F401
                     forwarded_home, stable_key_hash)

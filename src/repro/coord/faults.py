@@ -96,10 +96,16 @@ CRASH_POINTS = (
 #       reads/writes are idempotent and a duplicated CAS observes its own
 #       swap, so the CAS-only lease word absorbs it.
 #   fabric.delay — the posting is delivered late (extra latency, no loss).
+#   fabric.congest — the destination host is congested for this posting: it
+#       is delivered, but only after one full congestion quantum of queueing
+#       delay, as if the host's receive queue were at capacity.  Forces the
+#       overload machinery (deadline sheds, breaker trips, hedged probes)
+#       onto a specific posting without needing a whole storm.
 FABRIC_POINTS = (
     "fabric.drop",
     "fabric.dup",
     "fabric.delay",
+    "fabric.congest",
 )
 
 _ALL_POINTS = frozenset(CRASH_POINTS) | frozenset(FABRIC_POINTS)

@@ -244,6 +244,20 @@ class SuspicionEstimator:
             self._set(h, host, DEAD, now)
         return h.verdict
 
+    def suspect(self, host: int, now: float) -> str:
+        """Out-of-band SUSPECT evidence — e.g. an open circuit breaker at
+        the overload layer, meaning the host is slow or unreachable *from
+        here*.  Marks an ALIVE host SUSPECT and nothing more: it feeds
+        neither the miss streak nor the DEAD-eligibility clock, so breaker
+        evidence can never escalate to DEAD (only missed heartbeats may
+        kill — an overloaded-but-alive host must not lose its shards to a
+        takeover it would immediately contest)."""
+        h = self._entry(host)
+        if h.verdict == ALIVE:
+            h.beats = 0
+            self._set(h, host, SUSPECT, now)
+        return h.verdict
+
     # ------------------------------------------------------------- verdict
     def verdict(self, host: int) -> str:
         h = self._heat.get(host)
@@ -346,6 +360,16 @@ class HostMembership:
                 live += 1
             else:
                 self.estimator.miss(h, now, expired=True)
+        # Overload composition: an open breaker (the table's overload layer
+        # refusing a host it found slow/timing out from here) is SUSPECT
+        # evidence — and only that.  It never feeds the miss streak or the
+        # DEAD clock, and quorum attestation above runs on probe ground
+        # truth alone (a congested majority must still attest).
+        ctl = self.table.overload
+        if ctl is not None:
+            for h in ctl.open_hosts():
+                if h != self.host and 0 <= h < self.num_hosts:
+                    self.estimator.suspect(h, now)
         if 2 * live > self.num_hosts:
             self.attested_at = now
             self.attestations += 1

@@ -41,6 +41,7 @@ from .faults import FaultInjector
 from .inflation import InflationPolicy
 from .ledger import LedgerStore, RecoverableClient
 from .membership import HostMembership, SuspicionPolicy
+from .overload import OverloadPolicy
 from .table import Lease, LeaseMode, ShardedLockTable
 
 
@@ -59,6 +60,7 @@ class CoordinationService:
         fault: Optional[FaultInjector] = None,
         inflation: Optional[InflationPolicy] = None,
         seed: int = 0,
+        overload: Optional[OverloadPolicy] = None,
     ):
         self.num_hosts = num_hosts
         # One time source end-to-end: the memory's spin hooks, the table's
@@ -72,7 +74,7 @@ class CoordinationService:
         self.table = ShardedLockTable(
             self.mem, num_shards=num_shards, init_budget=init_budget,
             clock=clock, sleep=sleep, name="svc.table", fault=fault,
-            inflation=inflation, seed=seed,
+            inflation=inflation, seed=seed, overload=overload,
         )
         # Durable lease ledgers, keyed by client NAME (the identity that
         # survives a crash) — the restart re-entry API below hands a
@@ -138,16 +140,20 @@ class CoordinationService:
 
     def acquire(self, p: Process, key: str, ttl: float,
                 timeout: Optional[float] = None,
-                mode: LeaseMode = LeaseMode.EXCLUSIVE) -> Lease:
-        lease = self.table.acquire(p, key, ttl, timeout=timeout, mode=mode)
+                mode: LeaseMode = LeaseMode.EXCLUSIVE,
+                deadline: Optional[float] = None,
+                priority: int = 0) -> Lease:
+        lease = self.table.acquire(p, key, ttl, timeout=timeout, mode=mode,
+                                   deadline=deadline, priority=priority)
         self._cache_put(p, lease)
         return lease
 
     def acquire_batch(self, p: Process, keys: Sequence[str], ttl: float,
                       timeout: Optional[float] = None,
-                      mode: LeaseMode = LeaseMode.EXCLUSIVE) -> List[Lease]:
+                      mode: LeaseMode = LeaseMode.EXCLUSIVE,
+                      deadline: Optional[float] = None) -> List[Lease]:
         leases = self.table.acquire_batch(p, keys, ttl, timeout=timeout,
-                                          mode=mode)
+                                          mode=mode, deadline=deadline)
         for lease in leases:
             self._cache_put(p, lease)
         return leases
@@ -165,8 +171,10 @@ class CoordinationService:
             return cached
         return lease
 
-    def release(self, p: Process, lease: Lease) -> bool:
-        return self.table.release(p, self._freshest(p, lease, evict=True))
+    def release(self, p: Process, lease: Lease,
+                deadline: Optional[float] = None) -> bool:
+        return self.table.release(p, self._freshest(p, lease, evict=True),
+                                  deadline=deadline)
 
     def release_batch(self, p: Process, leases: Sequence[Lease]) -> int:
         """Witness-corrected batch release, shard-grouped by the table
@@ -176,7 +184,8 @@ class CoordinationService:
         return self.table.release_batch(p, fixed)
 
     def renew(self, p: Process, lease: Lease,
-              ttl: Optional[float] = None) -> Optional[Lease]:
+              ttl: Optional[float] = None,
+              deadline: Optional[float] = None) -> Optional[Lease]:
         """Renew via the table's fast path, witness-corrected by the cache.
 
         A stale lease *object* (same fencing token, older ``expires_at``) is
@@ -186,7 +195,7 @@ class CoordinationService:
         that is a different grant and must fail fencing validation.
         """
         lease = self._freshest(p, lease, evict=False)
-        renewed = self.table.renew(p, lease, ttl)
+        renewed = self.table.renew(p, lease, ttl, deadline=deadline)
         if renewed is None:
             self._lease_cache.pop((p.pid, lease.key, lease.mode), None)
         else:
@@ -217,10 +226,11 @@ class CoordinationService:
 
     # -------------------------------------------------------- crash recovery
     def reclaim(self, p: Process, lease: Lease,
-                ttl: Optional[float] = None) -> Optional[Lease]:
+                ttl: Optional[float] = None,
+                deadline: Optional[float] = None) -> Optional[Lease]:
         """Crash-restart re-entry for one lease (see the table's docstring);
         a successful reclaim primes the cache with the fresh witness."""
-        got = self.table.reclaim(p, lease, ttl)
+        got = self.table.reclaim(p, lease, ttl, deadline=deadline)
         if got is not None:
             self._cache_put(p, got)
         else:
@@ -283,6 +293,12 @@ class CoordinationService:
 
     def inflation_log(self) -> List[List]:
         return self.table.inflation_log()
+
+    def overload_report(self) -> Optional[Dict]:
+        """The overload layer's breaker/budget/hedge telemetry, or ``None``
+        when the service was built without an :class:`OverloadPolicy`."""
+        ctl = self.table.overload
+        return None if ctl is None else ctl.report()
 
     # ------------------------------------------------------------ named locks
     def lock(self, name: str, home_host: int = 0) -> ALock:

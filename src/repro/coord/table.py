@@ -75,11 +75,13 @@ from dataclasses import dataclass
 from functools import lru_cache
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
-from repro.core import (ALock, AsymmetricMemory, InflatedKeyQueue, OpCounts,
-                        Process, RemoteTimeout, TIMEOUT)
+from repro.core import (ALock, AsymmetricMemory, DeadlineExceeded,
+                        InflatedKeyQueue, OpCounts, Overloaded, Process,
+                        RemoteTimeout, TIMEOUT)
 
 from .faults import FaultInjector
 from .inflation import ContentionEstimator, InflationPolicy
+from .overload import OverloadControl, OverloadPolicy
 
 LOCAL, REMOTE = 0, 1
 
@@ -103,6 +105,16 @@ _FAST_ATTEMPTS = 64
 # seeded jitter — the thundering-herd fix for threaded hot keys, routed
 # through the injected clock/RNG so the sim stays deterministic.
 _BACKOFF_CAP_POLLS = 32
+
+# Feasibility-shed safety margin: an acquire is refused once its remaining
+# deadline budget drops below this multiple of the shard's observed
+# time-to-completion EWMA.  The EWMA is a *mean*; completion times are
+# right-skewed (a contended word only frees on TTL expiry), so admitting
+# everything above the mean still burns budget on ~half the borderline
+# arrivals.  A modest margin sheds those early — a fast local refusal —
+# without touching fresh, feasible work (whose remaining budget is several
+# multiples of the EWMA).
+_SHED_SVC_MARGIN = 1.5
 
 # Tombstone word written (best-effort) into a deposed home's key registers
 # by takeover_shard: a generation no fence ever allocates, under an expiry
@@ -369,6 +381,21 @@ class LockShard:
         # by _meta like every other meta counter; keys only ever accumulate —
         # the table's hot_keys() merges and ranks across shards.
         self.key_retries: Dict[str, int] = {}
+        # Per-key fabric-trouble tallies: op timeouts and fabric-level retry
+        # rounds charged while transacting on the key (the OpCounts deltas
+        # the per-class stats already fold in, re-keyed so the hot-key
+        # report can show WHERE the fabric pain lands).
+        self.key_timeouts: Dict[str, int] = {}
+        self.key_fab_retries: Dict[str, int] = {}
+        # Overload-protection counters (PR 9).
+        self.sheds = 0               # acquires refused as deadline-infeasible
+        self.hedges = 0              # read-only probes that posted a hedge
+        self.deadline_exceeded = 0   # ops refused/aborted on caller deadline
+        # EWMA of observed blocking-acquire time-to-completion (grant or
+        # burned deadline), the shedding feasibility signal (updated
+        # outside _meta: float store is atomic enough for a heuristic;
+        # sim steps are atomic anyway).
+        self.svc_time = 0.0
         self._meta = threading.Lock()
 
 
@@ -386,6 +413,7 @@ class ShardedLockTable:
         fault: Optional[FaultInjector] = None,
         inflation: Optional[InflationPolicy] = None,
         seed: int = 0,
+        overload: Optional[OverloadPolicy] = None,
     ):
         self.mem = mem
         self.num_hosts = mem.num_nodes
@@ -436,6 +464,10 @@ class ShardedLockTable:
         # Blocking-acquire backoff RNG: seeded so the sim's sleep schedule
         # (hence every downstream decision) is a function of the seed.
         self._rng = random.Random(seed)
+        # Overload protection (None = feature off: every gate below is one
+        # attribute check, nothing else — the legacy cost shape is intact).
+        self.overload = (OverloadControl(overload, seed)
+                         if overload is not None else None)
         # Client-side queue-wait ledger, the inflated-mode sibling of
         # ``_slots``: pid -> {key: [queue, last_progress_at, holding]}.
         # Same access contract (a pid is single-threaded, the guard covers
@@ -540,6 +572,75 @@ class ShardedLockTable:
         (or are reclaimed), the CS is never wedged."""
         if self.fault is not None:
             self.fault.crash_point(label, p.pid)
+
+    # ------------------------------------------------- overload primitives
+    def _deadline_gate(self, op: str, key: str, shard: LockShard,
+                       deadline: Optional[float]) -> None:
+        """Fail fast — zero fabric ops — when the caller's budget is gone.
+
+        Every public op takes an optional absolute ``deadline``; an op
+        entered past it refuses with the typed :class:`~repro.core.
+        DeadlineExceeded` instead of posting doomed work at a (possibly
+        congested) home host.
+        """
+        if deadline is not None and self.clock() >= deadline:
+            with shard._meta:
+                shard.deadline_exceeded += 1
+            raise DeadlineExceeded(f"{op} of {key!r}: deadline passed")
+
+    def _probe(self, p: Process, reg,
+               shard: Optional[LockShard] = None):
+        """A read-only liveness probe, hedged under overload control.
+
+        Without a policy (or for a local register) this is exactly
+        ``mem.probe``.  With one, the observed latency feeds the
+        destination's p99 tracker, and a probe that timed out after the
+        tracked threshold may be re-posted ONCE — first response wins —
+        provided the destination's retry budget admits the hedge (hedges
+        are speculative retry traffic and are capped by the same bucket).
+        """
+        ctl = self.overload
+        host = reg.node
+        if ctl is None or p.node == host:
+            return self.mem.probe(p, reg)
+        t0 = self.clock()
+        out = self.mem.probe(p, reg)
+        dt = self.clock() - t0
+        ctl.observe_latency(host, dt)
+        if (out is TIMEOUT and dt >= ctl.hedge_threshold(host)
+                and ctl.allow_hedge(host)):
+            out = self.mem.probe(p, reg)
+            ctl.observe_latency(host, self.clock() - t0)
+            if shard is not None:
+                with shard._meta:
+                    shard.hedges += 1
+        return out
+
+    def _hedged_read(self, p: Process, reg,
+                     shard: Optional[LockShard] = None):
+        """``auto_read`` whose terminal RemoteTimeout may hedge one re-post.
+
+        The reclaim word-probe rides this: a restarted client racing its
+        TTL must not die on one exhausted gate when the budget still admits
+        a speculative second posting.
+        """
+        ctl = self.overload
+        host = reg.node
+        if ctl is None or p.node == host:
+            return self.mem.auto_read(p, reg)
+        t0 = self.clock()
+        try:
+            val = self.mem.auto_read(p, reg)
+        except RemoteTimeout:
+            ctl.observe_latency(host, self.clock() - t0)
+            if not ctl.allow_hedge(host):
+                raise
+            if shard is not None:
+                with shard._meta:
+                    shard.hedges += 1
+            val = self.mem.auto_read(p, reg)
+        ctl.observe_latency(host, self.clock() - t0)
+        return val
 
     # ---------------------------------------------------------- accounting
     def _account(self, shard: LockShard, p: Process, snap: tuple,
@@ -997,20 +1098,55 @@ class ShardedLockTable:
         process stack (each join holds one cohort slot and needs its own
         release); a live writer or an armed writer-intent barrier yields
         ``None``.
+
+        When the table carries an :class:`~repro.coord.OverloadPolicy`, a
+        remote attempt is gated by the destination host's circuit breaker
+        (an open breaker raises :class:`~repro.core.Overloaded` *before*
+        any fabric op is posted — the fast-refusal path), and the attempt's
+        outcome (RemoteTimeout, or op timeouts absorbed by the fabric's
+        internal retries, count as failure) feeds the breaker window and
+        refills the retry budget on success.
         """
         if ttl <= 0:
             raise ValueError("ttl must be > 0")
         shard = self.shards[self.shard_of(key)]
+        home = shard.home_host
+        ctl = self.overload
+        gated = ctl is not None and p.node != home
+        if gated:
+            ctl.admit_remote(home, self.clock())
+        t0, r0 = p.counts.timeouts, p.counts.retries
         epoch0 = shard.epoch
-        if mode == LeaseMode.SHARED:
-            lease = self._shared_acquire(p, shard, key, ttl)
-        elif (self.inflation is not None
-                and (st := shard.keys.get(key)) is not None
-                and st.infl is not None):
-            lease = self._inflated_acquire(p, shard, key, st, ttl)
-        else:
-            granted, _ = self._acquire_group(p, shard, (key,), ttl, mode)
-            lease = granted[0] if granted else None
+        ok = True
+        try:
+            if mode == LeaseMode.SHARED:
+                lease = self._shared_acquire(p, shard, key, ttl)
+            elif (self.inflation is not None
+                    and (st := shard.keys.get(key)) is not None
+                    and st.infl is not None):
+                lease = self._inflated_acquire(p, shard, key, st, ttl)
+            else:
+                granted, _ = self._acquire_group(p, shard, (key,), ttl, mode)
+                lease = granted[0] if granted else None
+        except RemoteTimeout:
+            ok = False
+            raise
+        finally:
+            dt_t = p.counts.timeouts - t0
+            dt_r = p.counts.retries - r0
+            if dt_t or dt_r:
+                # Satellite: the fabric already counts op timeouts and
+                # retry rounds in OpCounts, but nothing said WHERE they
+                # landed — re-key the deltas so hot_keys() can report them.
+                with shard._meta:
+                    if dt_t:
+                        shard.key_timeouts[key] = \
+                            shard.key_timeouts.get(key, 0) + dt_t
+                    if dt_r:
+                        shard.key_fab_retries[key] = \
+                            shard.key_fab_retries.get(key, 0) + dt_r
+            if gated:
+                ctl.on_outcome(home, ok and dt_t == 0, self.clock())
         return self._epoch_fence(p, shard, epoch0, lease)
 
     def _epoch_fence(self, p: Process, shard: LockShard, epoch0: int,
@@ -1345,7 +1481,9 @@ class ShardedLockTable:
     def acquire(self, p: Process, key: str, ttl: float,
                 timeout: Optional[float] = None,
                 poll: float = 0.0005,
-                mode: LeaseMode = LeaseMode.EXCLUSIVE) -> Lease:
+                mode: LeaseMode = LeaseMode.EXCLUSIVE,
+                deadline: Optional[float] = None,
+                priority: int = 0) -> Lease:
         """Blocking acquire: retry ``try_acquire`` until granted or timeout.
 
         Rejected attempts back off with seeded-jitter binary exponential
@@ -1357,19 +1495,118 @@ class ShardedLockTable:
         while the jittered doubling spreads them out.  Both the clock and
         the RNG are injected/seeded, so the sim schedule stays a pure
         function of the seed.
+
+        **Deadline propagation.**  ``deadline`` is an *absolute* instant on
+        the table's clock (the caller's end-to-end budget, threaded through
+        every layer); ``timeout`` remains the legacy relative form, and when
+        both are given the earlier wins.  No backoff sleep ever overshoots
+        the remaining budget (each sleep is clamped to ``deadline - now``),
+        and an explicit deadline that expires raises the typed
+        :class:`~repro.core.DeadlineExceeded` — a ``TimeoutError`` subclass,
+        so legacy ``except TimeoutError`` handlers keep working, while the
+        timeout-only path keeps its historical ``TimeoutError`` message.
+
+        **Load shedding.**  With an explicit ``deadline`` and
+        ``priority <= 0``, an attempt whose remaining budget is already
+        below the shard's observed time-to-completion (an EWMA over how
+        long blocking acquires here take to grant — or to burn their whole
+        budget failing) is **shed**: :class:`~repro.core.Overloaded`
+        (``reason="shed"``) is raised *before* another retry round spends
+        fabric ops that cannot possibly land in budget.
+        Positive-priority work is never shed (it may still exceed its
+        deadline).  Legacy callers (no explicit deadline) are never shed.
+
+        **Retry budgets.**  When the table was built with an
+        :class:`~repro.coord.OverloadPolicy`, each backoff round against a
+        *remote* home consumes one token from that host's retry budget;
+        a dry budget raises :class:`~repro.core.Overloaded`
+        (``reason="budget"``) instead of joining a retry storm.
         """
-        deadline = None if timeout is None else self.clock() + timeout
+        explicit = deadline is not None
+        if timeout is not None:
+            tdl = self.clock() + timeout
+            deadline = tdl if deadline is None else min(deadline, tdl)
+        shard = self.shards[self.shard_of(key)]
+        if explicit:
+            # An op entered past its deadline fails fast — zero fabric ops
+            # — instead of posting a grant its caller can no longer use.
+            # (Timeout-only callers keep their historical one-free-attempt
+            # semantics: their budget starts now, by construction.)
+            self._deadline_gate("acquire", key, shard, deadline)
+        home = shard.home_host
+        ctl = self.overload
         delay = poll
+        entered = self.clock()
+
+        def _observe(end: float) -> None:
+            # Time-to-completion EWMA: how long a blocking acquire on this
+            # shard actually takes to resolve — a grant's full retry chain,
+            # or the whole burned budget of a deadline failure.  This (not
+            # the single-attempt cost) is what the feasibility shed
+            # compares the remaining budget against: under load the
+            # failures push it up and the shed bites earlier; when load
+            # drains the quick grants pull it back down.
+            dt = end - entered
+            shard.svc_time = (dt if shard.svc_time == 0.0
+                              else 0.9 * shard.svc_time + 0.1 * dt)
+
         while True:
+            now = self.clock()
+            if (explicit and priority <= 0 and shard.svc_time > 0.0
+                    and deadline - now < _SHED_SVC_MARGIN * shard.svc_time):
+                # Admission-side feasibility shed: the remaining budget is
+                # already below the shard's observed time-to-completion,
+                # so this acquire is statistically doomed — refuse locally
+                # before posting anything.  A grant produced after its
+                # deadline is pure waste (the caller cannot use it), and
+                # under overload those late grants are exactly what
+                # starves the feasible work behind them.
+                with shard._meta:
+                    shard.sheds += 1
+                raise Overloaded(
+                    f"shed: lease on {key!r} infeasible within deadline "
+                    f"(remaining {deadline - now:.6f}s < svc "
+                    f"{shard.svc_time:.6f}s)", reason="shed", host=home)
             lease = self.try_acquire(p, key, ttl, mode=mode)
             if lease is not None:
+                _observe(self.clock())
                 return lease
-            if deadline is not None and self.clock() > deadline:
+            now = self.clock()
+            # >= not >: the backoff clamp below can land the clock EXACTLY
+            # on the deadline, and a cost-free attempt would then spin on
+            # zero-length sleeps forever under a strict comparison.
+            if deadline is not None and now >= deadline:
+                _observe(now)
+                with shard._meta:
+                    shard.deadline_exceeded += 1
+                if explicit:
+                    raise DeadlineExceeded(
+                        f"lease on {key!r}: deadline passed "
+                        f"({now - deadline:.6f}s over)")
                 raise TimeoutError(f"lease on {key!r} not granted in {timeout}s")
-            self.sleep(delay * (0.5 + self._rng.random()))
+            if (explicit and priority <= 0 and shard.svc_time > 0.0
+                    and deadline - now < _SHED_SVC_MARGIN * shard.svc_time):
+                # Infeasible: the remaining budget is below the observed
+                # time a blocking acquire here takes to resolve.  Shed now —
+                # a fast local refusal — instead of burning fabric ops on
+                # a lost cause (the brownout half: positive-priority and
+                # legacy work never takes this exit).
+                with shard._meta:
+                    shard.sheds += 1
+                raise Overloaded(
+                    f"shed: lease on {key!r} infeasible within deadline "
+                    f"(remaining {deadline - now:.6f}s < svc "
+                    f"{shard.svc_time:.6f}s)", reason="shed", host=home)
+            if ctl is not None and p.node != home:
+                ctl.spend_retry(home)
+            slp = delay * (0.5 + self._rng.random())
+            if deadline is not None:
+                slp = min(slp, max(0.0, deadline - now))
+            self.sleep(slp)
             delay = min(delay * 2.0, poll * _BACKOFF_CAP_POLLS)
 
-    def renew(self, p: Process, lease: Lease, ttl: Optional[float] = None) -> Optional[Lease]:
+    def renew(self, p: Process, lease: Lease, ttl: Optional[float] = None,
+              deadline: Optional[float] = None) -> Optional[Lease]:
         """Extend a still-valid lease; ``None`` if it was lost (fencing).
 
         **EXCLUSIVE fast path** (the common case — the holder renews before
@@ -1392,6 +1629,12 @@ class ShardedLockTable:
         """
         ttl = ttl if ttl is not None else lease.ttl
         shard = self.shards[lease.shard]
+        # A renewal entered past its deadline — or past the lease's own
+        # remaining TTL, which is the renewal's *implicit* budget (a CAS
+        # landing after expiry extends nothing) — fails fast, zero ops.
+        self._deadline_gate("renew", lease.key, shard,
+                            None if deadline is None
+                            else min(deadline, lease.expires_at))
         st = self._key_state(shard, lease.key)
         if lease.mode == LeaseMode.SHARED:
             return self._shared_renew(p, shard, st, lease, ttl)
@@ -1487,7 +1730,8 @@ class ShardedLockTable:
                 shard.intent_blocks += 1
         return renewed
 
-    def release(self, p: Process, lease: Lease) -> bool:
+    def release(self, p: Process, lease: Lease,
+                deadline: Optional[float] = None) -> bool:
         """Release iff the lease is still the current grant (token match).
 
         **EXCLUSIVE fast path**: one fencing-token-checked CAS writes the
@@ -1507,6 +1751,10 @@ class ShardedLockTable:
         token.
         """
         shard = self.shards[lease.shard]
+        # Deadline-aware callers fail fast; the abandoned lease expires on
+        # its own TTL (a refused release is safe — never a leak, only a
+        # bounded wait for successors).
+        self._deadline_gate("release", lease.key, shard, deadline)
         st = self._key_state(shard, lease.key)
         if lease.mode == LeaseMode.SHARED:
             return self._shared_release(p, shard, st, lease)
@@ -1730,7 +1978,8 @@ class ShardedLockTable:
 
     # ------------------------------------------------------ crash recovery
     def reclaim(self, p: Process, lease: Lease,
-                ttl: Optional[float] = None) -> Optional[Lease]:
+                ttl: Optional[float] = None,
+                deadline: Optional[float] = None) -> Optional[Lease]:
         """Crash-restart re-entry: re-adopt a still-valid lease.
 
         ``lease`` is the witness a restarted client replayed from its
@@ -1780,6 +2029,9 @@ class ShardedLockTable:
         if ttl is None:
             ttl = lease.ttl
         shard = self.shards[lease.shard]
+        # Restart recovery races the TTL wedge: a reclaim entered past the
+        # caller's budget fails fast and the client re-acquires instead.
+        self._deadline_gate("reclaim", lease.key, shard, deadline)
         st = self._key_state(shard, lease.key)
         if lease.mode == LeaseMode.SHARED:
             return self._shared_reclaim(p, shard, st, lease, ttl)
@@ -1808,8 +2060,12 @@ class ShardedLockTable:
             if got is None:
                 for _ in range(_FAST_ATTEMPTS):
                     now = self.clock()
+                    if deadline is not None and now >= deadline:
+                        break  # budget gone mid-probe: stop cleanly
                     if packed is None:
-                        packed = self.mem.auto_read(p, st.expires)
+                        # The word probe may hedge one re-post under
+                        # overload control (see _hedged_read).
+                        packed = self._hedged_read(p, st.expires, shard)
                     etok, readers, eexp = packed
                     if (etok != lease.token or _dec(readers) != 0
                             or eexp <= _FREE_AT or now >= eexp):
@@ -2133,7 +2389,10 @@ class ShardedLockTable:
             # post-heal view in which the "dead" host's renewals could
             # not yet have landed — and the liveness re-probe below would
             # wrongly confirm.  Unreachable witness: retry next sweep.
-            if self.mem.probe(p, shard.epoch_reg) is TIMEOUT:
+            # The probe may hedge one re-posting under overload control: a
+            # takeover stalled on one lost witness probe delays every
+            # client of the dead home's shards.
+            if self._probe(p, shard.epoch_reg, shard) is TIMEOUT:
                 with shard._meta:
                     shard.takeover_aborts += 1
                 return None
@@ -2213,7 +2472,7 @@ class ShardedLockTable:
             old_keys = dict(shard.keys)
             if old_keys:
                 first = next(iter(old_keys.values()))
-                if self.mem.probe(p, first.expires) is not TIMEOUT:
+                if self._probe(p, first.expires, shard) is not TIMEOUT:
                     try:
                         self.mem.post_batch(p, [
                             w for ost in old_keys.values()
@@ -2257,7 +2516,8 @@ class ShardedLockTable:
     def acquire_batch(self, p: Process, keys: Sequence[str], ttl: float,
                       timeout: Optional[float] = None,
                       poll: float = 0.0005,
-                      mode: LeaseMode = LeaseMode.EXCLUSIVE) -> List[Lease]:
+                      mode: LeaseMode = LeaseMode.EXCLUSIVE,
+                      deadline: Optional[float] = None) -> List[Lease]:
         """Acquire every key (deduplicated) in the global key order.
 
         Keys are grouped by shard (the global order is primary-by-shard, so
@@ -2270,13 +2530,30 @@ class ShardedLockTable:
         key is waited on *outside* the critical section while holding only
         smaller keys.
 
-        All-or-nothing: ``timeout`` bounds the *whole batch*; on expiry,
-        already-granted leases are released and ``TimeoutError`` is raised.
+        All-or-nothing: ``timeout`` (relative) and/or ``deadline``
+        (absolute, the earlier wins) bound the *whole batch*; on expiry,
+        already-granted leases are released and ``TimeoutError`` is raised
+        (:class:`~repro.core.DeadlineExceeded` when the bound came from an
+        explicit ``deadline``).  Backoff sleeps never overshoot the
+        remaining budget.  A ``RemoteTimeout`` that escapes the fabric's
+        bounded retries mid-batch triggers the same suffix rollback: the
+        held prefix is released best-effort (a release that itself times
+        out is abandoned to TTL expiry — reclaimable via the ledger), so
+        no grant is left held by a caller that reported failure.
         """
         if ttl <= 0:
             raise ValueError("ttl must be > 0")
         ordered = self.batch_order(keys)
-        deadline = None if timeout is None else self.clock() + timeout
+        explicit = deadline is not None
+        if timeout is not None:
+            tdl = self.clock() + timeout
+            deadline = tdl if deadline is None else min(deadline, tdl)
+        if explicit and ordered:
+            # Entered past the deadline: fail fast before granting (and
+            # then rolling back) a prefix nobody can use.
+            self._deadline_gate("acquire_batch", ordered[0],
+                                self.shards[self.shard_of(ordered[0])],
+                                deadline)
         held: List[Lease] = []
         try:
             i, n = 0, len(ordered)
@@ -2301,14 +2578,27 @@ class ShardedLockTable:
                     if granted:
                         delay = poll  # progress: reset the backoff ladder
                     if blocked:
-                        if deadline is not None and self.clock() > deadline:
+                        now = self.clock()
+                        # >= not >: see acquire — the clamp can land the
+                        # clock exactly on the deadline.
+                        if deadline is not None and now >= deadline:
+                            with shard._meta:
+                                shard.deadline_exceeded += 1
+                            if explicit:
+                                raise DeadlineExceeded(
+                                    f"batch lease on {group[start]!r}: "
+                                    f"deadline passed")
                             raise TimeoutError(
                                 f"batch lease on {group[start]!r} not granted "
                                 f"in {timeout}s"
                             )
                         # Same seeded-jitter exponential backoff as
-                        # ``acquire`` (see there for the rationale).
-                        self.sleep(delay * (0.5 + self._rng.random()))
+                        # ``acquire`` (see there for the rationale), clamped
+                        # to the batch's remaining budget.
+                        slp = delay * (0.5 + self._rng.random())
+                        if deadline is not None:
+                            slp = min(slp, max(0.0, deadline - now))
+                        self.sleep(slp)
                         delay = min(delay * 2.0, poll * _BACKOFF_CAP_POLLS)
                 i = j
                 if i < n:
@@ -2317,9 +2607,16 @@ class ShardedLockTable:
                     # recoverable client's dangling intents drive the
                     # orphan probe on restart).
                     self._crash_point("batch.mid", p)
-        except TimeoutError:
+        except (TimeoutError, RemoteTimeout, Overloaded):
+            # All-or-nothing rollback (TimeoutError covers DeadlineExceeded).
+            # Releases are best-effort: over a faulty fabric the rollback
+            # itself can time out, and an unreleased lease merely waits out
+            # its TTL (no orphan — the ledger, if any, still witnesses it).
             for lease in held:
-                self.release(p, lease)
+                try:
+                    self.release(p, lease)
+                except RemoteTimeout:
+                    pass
             raise
         return held
 
@@ -2586,6 +2883,16 @@ class ShardedLockTable:
                     "queue_bypasses": shard.queue_bypasses,
                     "contended_keys": len(shard.key_retries),
                     "blocked_attempts": sum(shard.key_retries.values()),
+                    # Overload-protection counters (PR 9): the shard-side
+                    # (shed/deadline/hedge) half; the breaker/budget half
+                    # lives on table.overload.report().
+                    "sheds": shard.sheds,
+                    "hedges": shard.hedges,
+                    "deadline_exceeded": shard.deadline_exceeded,
+                    "timeouts": (shard.stats[LOCAL].timeouts
+                                 + shard.stats[REMOTE].timeouts),
+                    "fabric_retries": (shard.stats[LOCAL].retries
+                                       + shard.stats[REMOTE].retries),
                     "local": shard.stats[LOCAL].snapshot(),
                     "remote": shard.stats[REMOTE].snapshot(),
                     "shared_local":
@@ -2613,15 +2920,28 @@ class ShardedLockTable:
 
     def hot_keys(self, k: int = 10) -> List[List]:
         """Top-``k`` keys by blocked-attempt count across all shards, as
-        ``[key, blocked_attempts]`` rows (count-desc, then key — a total
-        order, so the report is deterministic)."""
+        ``[key, blocked_attempts, op_timeouts, fabric_retries]`` rows
+        (count-desc, then key — a total order, so the report is
+        deterministic).  The two fabric columns surface WHERE the op
+        timeouts and fabric-level retry rounds (already counted in the
+        per-class OpCounts) actually landed — a congested home's keys show
+        fabric pain even when they are not CAS-contended."""
         merged: Dict[str, int] = {}
+        t_merged: Dict[str, int] = {}
+        r_merged: Dict[str, int] = {}
         for shard in self.shards:
             with shard._meta:
                 for key, n in shard.key_retries.items():
                     merged[key] = merged.get(key, 0) + n
+                for key, n in shard.key_timeouts.items():
+                    t_merged[key] = t_merged.get(key, 0) + n
+                    merged.setdefault(key, 0)
+                for key, n in shard.key_fab_retries.items():
+                    r_merged[key] = r_merged.get(key, 0) + n
+                    merged.setdefault(key, 0)
         ranked = sorted(merged.items(), key=lambda kv: (-kv[1], kv[0]))
-        return [[key, n] for key, n in ranked[:k]]
+        return [[key, n, t_merged.get(key, 0), r_merged.get(key, 0)]
+                for key, n in ranked[:k]]
 
     def inflation_log(self) -> List[List]:
         """The inflate/deflate event log, in decision order: rows of

@@ -17,8 +17,10 @@ from .memory import (  # noqa: F401
     NULLPTR,
     TIMEOUT,
     AsymmetricMemory,
+    DeadlineExceeded,
     OpCounts,
     OperationNotEnabled,
+    Overloaded,
     Process,
     Register,
     RemoteTimeout,

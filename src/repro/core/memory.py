@@ -60,6 +60,37 @@ class RemoteTimeout(RuntimeError):
     """
 
 
+class DeadlineExceeded(TimeoutError):
+    """An operation's caller-supplied deadline expired before completion.
+
+    Deadlines are absolute instants on the stack's injected clock: every
+    public lock-table operation accepts one, threads it through its retry
+    loops, and clamps each backoff sleep to the remaining budget — so an op
+    fails *fast* at its deadline instead of sleeping past the point where
+    the answer is useless.  Subclasses :class:`TimeoutError` so callers that
+    treat all patience exhaustion alike (e.g. the batch suffix-rollback
+    path) need no new handler.
+    """
+
+
+class Overloaded(RuntimeError):
+    """A fast **local** refusal from the overload-protection layer.
+
+    Raised before any remote posting when proceeding would be wasted work:
+    the destination host's circuit breaker is open, its retry budget is
+    exhausted, or the shard's observed service time makes the caller's
+    deadline infeasible (a shed).  Costs zero RDMA operations — the whole
+    point is that refusing locally removes retry traffic from a fabric that
+    is already drowning.  ``reason`` is one of ``"breaker"``, ``"budget"``,
+    ``"shed"``.
+    """
+
+    def __init__(self, msg: str, reason: str = "shed", host: int = -1):
+        super().__init__(msg)
+        self.reason = reason
+        self.host = host
+
+
 class _TimeoutSentinel:
     """Falsy singleton returned by :meth:`AsymmetricMemory.probe` on loss."""
 

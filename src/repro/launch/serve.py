@@ -30,6 +30,7 @@ import numpy as np
 from ..compat import set_mesh
 from ..configs import ShapeConfig, get_config
 from ..coord import CoordinationService, LeaseMode, RecoverableClient
+from ..core import Overloaded
 from ..data import SyntheticLMDataset
 from ..models import Model, input_specs
 from .mesh import make_mesh
@@ -90,6 +91,8 @@ class BatchAdmission:
         # rebinding happens through recover().
         self._workers: Dict[str, RecoverableClient] = {}
         self._wlock = threading.Lock()
+        #: EXCLUSIVE admissions refused at the gate by the overload layer.
+        self.sheds = 0
 
     def _proc(self):
         # One coordination Process per server thread: the MCS queue keys its
@@ -123,29 +126,65 @@ class BatchAdmission:
             self._workers[worker] = client
         return reclaimed
 
+    def _admission_gate(self, key: str) -> None:
+        """Brownout shedding: refuse an EXCLUSIVE admission fast when the
+        overload layer already knows the slot's home is in trouble (open
+        circuit breaker, or a retry budget too dry to fund even one retry
+        round).  Read-lane admissions (:meth:`admit_read`) never come
+        through here — shared-mode reads keep flowing while exclusive
+        admits shed, which is the brownout contract.  A no-op when the
+        service carries no :class:`~repro.coord.OverloadPolicy`."""
+        ctl = self.svc.table.overload
+        if ctl is None:
+            return
+        home = self.svc.home_of(key)
+        if ctl.breaker_open(home):
+            self.sheds += 1
+            raise Overloaded(
+                f"admission shed: breaker open for host {home}",
+                reason="breaker", host=home)
+        b = ctl.budget(home)
+        if b.tokens < b.retry_cost:
+            self.sheds += 1
+            raise Overloaded(
+                f"admission shed: retry budget dry for host {home}",
+                reason="budget", host=home)
+
     def admit(self, timeout: Optional[float] = None,
-              worker: Optional[str] = None):
+              worker: Optional[str] = None,
+              deadline: Optional[float] = None):
         """Take an EXCLUSIVE lease on any free write slot (round-robin scan,
         then block).
 
         The deadline and backoff run on the coordination service's injected
         clock/sleep pair, so an admission gate over a sim-backed (or
         fake-clock) table times out in that table's time base instead of
-        wall time.
+        wall time.  ``deadline`` is the absolute form (the earlier of the
+        two wins); under overload control, admissions shed fast at the gate
+        instead of scanning a slot list they cannot win (see
+        :meth:`_admission_gate`).
 
         With a ``worker`` name the admission is ledgered (see
         :meth:`recover`); anonymous admissions take the bare path.
         """
         clock, sleep = self.svc.table.clock, self.svc.table.sleep
-        deadline = None if timeout is None else clock() + timeout
+        if timeout is not None:
+            tdl = clock() + timeout
+            deadline = tdl if deadline is None else min(deadline, tdl)
         rc = self._worker(worker) if worker is not None else None
         while True:
             for s in range(self.num_slots):
                 key = f"serve/slot{s}"
-                if rc is not None:
-                    lease = rc.try_acquire(key, self.ttl)
-                else:
-                    lease = self.svc.try_acquire(self._proc(), key, self.ttl)
+                self._admission_gate(key)
+                try:
+                    if rc is not None:
+                        lease = rc.try_acquire(key, self.ttl)
+                    else:
+                        lease = self.svc.try_acquire(self._proc(), key,
+                                                     self.ttl)
+                except Overloaded:
+                    self.sheds += 1
+                    raise
                 if lease is not None:
                     return lease
             if deadline is not None and clock() > deadline:
@@ -166,6 +205,10 @@ class BatchAdmission:
         if self.read_slots <= 0:
             raise ValueError("admit_read() needs read_slots > 0")
         clock, sleep = self.svc.table.clock, self.svc.table.sleep
+        # Deliberately NOT gated by _admission_gate: the brownout contract
+        # is that shared-mode reads keep flowing while exclusive admits
+        # shed (a reader join is one CAS, zero RDMA on the serving host —
+        # refusing it buys nothing).
         deadline = None if timeout is None else clock() + timeout
         p = self._proc()
         while True:
@@ -249,6 +292,14 @@ class BatchAdmission:
             "workers": len(self._workers),
             "local_rdma_ops": totals[0].rdma_ops,
             "local_ops": totals[0].local_ops,
+            # Overload-protection telemetry (PR 9): admission-level sheds
+            # plus the table-side shed/hedge/deadline counters; the
+            # breaker/budget report appears only when a policy is armed.
+            "sheds": self.sheds,
+            "table_sheds": sum(r["sheds"] for r in rows),
+            "hedges": sum(r["hedges"] for r in rows),
+            "deadline_exceeded": sum(r["deadline_exceeded"] for r in rows),
+            "overload": self.svc.overload_report(),
         }
 
 

@@ -51,9 +51,10 @@ timeout charge, then :data:`~repro.core.memory.TIMEOUT`.
 
 from __future__ import annotations
 
+import bisect
 import random
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core import AsymmetricMemory
 from repro.core.memory import TIMEOUT, RemoteTimeout
@@ -100,6 +101,10 @@ class FabricFaults:
                  retry_cap: float = 400e-6,
                  flaps: Tuple[Tuple[int, float, float], ...] = (),
                  partitions: Tuple[Tuple[frozenset, float, float], ...] = (),
+                 congest_capacity: Optional[int] = None,
+                 congest_delay: float = 12e-6,
+                 congest_window: float = 200e-6,
+                 congest_cap: float = 800e-6,
                  injector=None):
         if op_timeout <= 0:
             raise ValueError("op_timeout must be positive")
@@ -116,9 +121,20 @@ class FabricFaults:
         self.flaps = tuple(flaps)
         self.partitions = tuple(
             (frozenset(g), float(s), float(e)) for g, s, e in partitions)
+        # Congestion model (off unless congest_capacity is set): each host
+        # serves up to ``congest_capacity`` postings per ``congest_window``
+        # for free; every posting beyond that queues ``congest_delay``
+        # virtual seconds per excess op (capped at ``congest_cap``) — the
+        # convex service-time curve that makes retry storms metastable.
+        self.congest_capacity = (None if congest_capacity is None
+                                 else int(congest_capacity))
+        self.congest_delay = float(congest_delay)
+        self.congest_window = float(congest_window)
+        self.congest_cap = float(congest_cap)
         self.injector = injector
         self.dead: Dict[int, float] = {}  # host -> unreachable-from time
-        self.stats = {"drops": 0, "dups": 0, "delays": 0, "probe_losses": 0}
+        self.stats = {"drops": 0, "dups": 0, "delays": 0, "probe_losses": 0,
+                      "congested": 0}
         self._rng = random.Random(0x0FAB51C * (seed + 1))
 
     # ------------------------------------------------------------- schedule
@@ -202,6 +218,40 @@ class SimFabricMemory(AsymmetricMemory):
         self.latency = latency
         self.faults = faults
         self._advance = engine.clock.advance
+        # Per-host recent-posting times for the congestion model (sorted;
+        # sim steps are atomic so no locking).  Only populated when the
+        # fault plan prices congestion.
+        self._load: Dict[int, List[float]] = {}
+
+    # ----------------------------------------------------------- congestion
+    def _congest(self, p, node: int) -> None:
+        """Charge queueing delay for one delivered posting to ``node``.
+
+        The host's observed load is the count of postings that reached it in
+        the trailing ``congest_window``; every posting past
+        ``congest_capacity`` queues ``congest_delay`` per excess op (capped).
+        Purely a function of the event history, so two same-seed runs charge
+        identical delays.  An armed ``fabric.congest`` injector point forces
+        one congestion quantum onto a specific posting regardless of load.
+        """
+        f = self.faults
+        if f is None or (f.congest_capacity is None and f.injector is None):
+            return
+        excess = 0
+        if f.congest_capacity is not None:
+            now = self.engine.clock.now
+            q = self._load.setdefault(node, [])
+            cutoff = now - f.congest_window
+            drop = bisect.bisect_left(q, cutoff)
+            if drop:
+                del q[:drop]
+            bisect.insort(q, now)
+            excess = len(q) - f.congest_capacity
+        if f._point("fabric.congest", p.pid):
+            excess = max(excess, 1)
+        if excess > 0:
+            self._advance(min(excess * f.congest_delay, f.congest_cap))
+            f.stats["congested"] += 1
 
     # ------------------------------------------------------------ fault gate
     def _remote_gate(self, p, node: int) -> bool:
@@ -255,6 +305,7 @@ class SimFabricMemory(AsymmetricMemory):
     # --------------------------------------------------------- remote charges
     def rread(self, p, reg):
         dup = self._remote_gate(p, reg.node)
+        self._congest(p, reg.node)
         self._advance(self.latency.doorbell + self.latency.wr)
         v = super().rread(p, reg)
         if dup:  # the retransmitted read executes again; same value, in-step
@@ -263,6 +314,7 @@ class SimFabricMemory(AsymmetricMemory):
 
     def rwrite(self, p, reg, value):
         dup = self._remote_gate(p, reg.node)
+        self._congest(p, reg.node)
         self._advance(self.latency.doorbell + self.latency.wr)
         super().rwrite(p, reg, value)
         if dup:  # duplicated write re-applies the same value: idempotent
@@ -272,6 +324,7 @@ class SimFabricMemory(AsymmetricMemory):
 
     def rcas(self, p, reg, expected, swap):
         dup = self._remote_gate(p, reg.node)
+        self._congest(p, reg.node)
         self._advance(self.latency.doorbell + self.latency.wr)
         v = super().rcas(p, reg, expected, swap)
         if dup:
@@ -288,6 +341,7 @@ class SimFabricMemory(AsymmetricMemory):
         if not wrs:  # an empty posting rings no doorbell (and costs nothing)
             return super().post_batch(p, wrs)
         dup = self._remote_gate(p, wrs[0][1].node)
+        self._congest(p, wrs[0][1].node)
         self._advance(self.latency.doorbell + self.latency.wr * len(wrs))
         out = super().post_batch(p, wrs)
         if dup:  # the WR list redelivers whole: reads/writes idempotent,
@@ -323,6 +377,9 @@ class SimFabricMemory(AsymmetricMemory):
                 p.counts.timeouts += 1
                 f.stats["probe_losses"] += 1
                 return TIMEOUT
-        # Delivered first try: bypass the retry gate (a probe never reposts).
+        # Delivered first try: bypass the retry gate (a probe never reposts)
+        # — but a congested host queues probes like any other posting, which
+        # is exactly the latency signal the hedging threshold tracks.
+        self._congest(p, reg.node)
         self._advance(self.latency.doorbell + self.latency.wr)
         return super().rread(p, reg)

@@ -73,6 +73,22 @@ Workloads (mirroring, then extending, the threaded bench):
   run asserts **zero grants landed on the minority side inside the
   window**, and that the guard actually blocked takeovers
   (``takeover_refusals``) rather than the window just being quiet.
+* ``overload_storm`` — the overload workload: an **open-loop** paced
+  arrival stream (mean interarrival ``STORM_INTERARRIVAL / offered_load``
+  per client) over a zipfian keyspace, against a fabric whose per-host
+  congestion model (``congest_capacity`` postings per window) makes excess
+  load *cost latency*.  Every transaction carries an absolute deadline
+  (``deadline_budget`` past its arrival) through the table's **blocking**
+  ``acquire``: backoff sleeps are clamped to the remaining budget, a passed
+  deadline raises the typed :class:`~repro.core.DeadlineExceeded`, and —
+  with ``shedding=True`` — a deadline-infeasible retry is **shed**
+  (:class:`~repro.core.Overloaded`) before it burns another posting.
+  Three of four clients are EXCLUSIVE writers at priority 0 (sheddable);
+  the fourth is a SHARED reader at priority 1 — the brownout contract the
+  run records: reader goodput keeps flowing while writer load sheds.
+  **Goodput** is the grants that landed inside their deadline; the bench
+  sweeps ``offered_load`` 1x→10x and gates goodput retention, the non-shed
+  acquire p99, and the shedding-ON vs shedding-OFF collapse.
 """
 
 from __future__ import annotations
@@ -84,21 +100,27 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 from repro.coord import (DEAD, ClientCrash, FaultInjector, HostMembership,
-                         InflationPolicy, LedgerStore, RecoverableClient,
-                         ShardedLockTable, SuspicionPolicy)
+                         InflationPolicy, LedgerStore, OverloadPolicy,
+                         RecoverableClient, ShardedLockTable, SuspicionPolicy)
 from repro.coord.table import EXCLUSIVE, LOCAL, REMOTE, SHARED, LeaseMode
-from repro.core import RemoteTimeout
+from repro.core import DeadlineExceeded, Overloaded, RemoteTimeout
 
 from .engine import SimEngine
 from .fabric import FabricFaults, FabricLatency, SimFabricMemory
 
-__all__ = ["SIM_WORKLOADS", "KEYS_PER_HOST", "SimResult", "jain",
-           "keys_by_home", "run_lock_table_sim"]
+__all__ = ["SIM_WORKLOADS", "KEYS_PER_HOST", "STORM_INTERARRIVAL",
+           "SimResult", "jain", "keys_by_home", "run_lock_table_sim"]
 
 SIM_WORKLOADS = ("home", "uniform", "zipfian", "failover", "read_heavy",
-                 "reader_flood", "crash_restart", "home_death", "partition")
+                 "reader_flood", "crash_restart", "home_death", "partition",
+                 "overload_storm")
 
 KEYS_PER_HOST = 8   # keyspace density; shared with the threaded bench
+# overload_storm base (1x) mean interarrival.  A remote EXCLUSIVE
+# transaction costs ~134us of virtual time end-to-end (4 acquire doorbells
+# + release), so 450us paces 1x at ~30% per-client utilization — loaded
+# enough to measure, far enough from saturation that queueing is benign.
+STORM_INTERARRIVAL = 450e-6
 HOLD = 10e-6        # virtual seconds a lease is held
 THINK = 5e-6        # virtual think time between transactions
 BACKOFF = 20e-6     # initial reject backoff (doubles, capped)
@@ -139,7 +161,9 @@ class _RunState:
                  "recovery_events", "hot_latencies", "hot_rcas",
                  "remote_timeouts", "crash_times", "detect_latencies",
                  "takeover_latencies", "failover_events",
-                 "minority_grants", "minority", "window")
+                 "minority_grants", "minority", "window",
+                 "offered", "goodput", "goodput_shared", "late_grants",
+                 "shed_ops", "deadline_misses", "storm_latencies")
 
     def __init__(self, nclients: int, target: int):
         self.per_client = [0] * nclients
@@ -172,6 +196,17 @@ class _RunState:
         # from first attempt to grant — the quantity inflation bounds.
         self.hot_latencies: List[float] = []
         self.hot_rcas: List[int] = []
+        # Overload accounting (overload_storm workload).  ``offered`` is
+        # arrivals, ``goodput`` the grants that landed inside their
+        # deadline; sheds / deadline misses are the *client-observed*
+        # refusals (the table keeps its own per-shard tallies).
+        self.offered = 0
+        self.goodput = 0
+        self.goodput_shared = 0
+        self.late_grants = 0        # granted, but past the caller deadline
+        self.shed_ops = 0
+        self.deadline_misses = 0
+        self.storm_latencies: List[float] = []  # every grant's acquire time
 
     def done(self) -> bool:
         return self.total >= self.target
@@ -371,6 +406,84 @@ def _flood_writer(table, p, rng, st, idx, key, ttl):
         st.granted(idx, lease)
         yield HOLD
         table.release(p, lease)
+
+
+def _storm_client(table, p, rng, pick, st, idx, ttl, budget, interarrival,
+                  reader, shedding, run_until):
+    """The overload_storm client: open-loop paced arrivals with deadlines.
+
+    Unlike every closed-loop client above, this one does NOT wait for the
+    previous transaction before generating the next arrival tick — offered
+    load is set by ``interarrival``, not by service capacity, which is what
+    makes overload *possible*.  Each transaction runs the table's blocking
+    ``acquire`` with an absolute deadline ``budget`` past its arrival;
+    writers at priority 0 are sheddable, readers ride at priority 1 in
+    SHARED mode (the brownout half: reads keep flowing while writes shed).
+    A shed (:class:`Overloaded`), a burned deadline
+    (:class:`DeadlineExceeded`) or an exhausted fabric retry budget
+    (:class:`RemoteTimeout`) each fail fast into a counter and the client
+    simply waits for its next arrival — no retry amplification beyond what
+    the acquire loop itself decided was feasible.
+    """
+    clock = table.clock
+    # A contended word frees by expiry, and the acquire loop's backoff
+    # DOUBLES from ``poll`` — a coarse poll overshoots the expiry instant
+    # by whole multiples of the TTL.  ttl/16 keeps the whole doubling
+    # ladder (p, 2p, 4p, ...) inside roughly one quantum.
+    poll = ttl / 16
+    hold = min(HOLD, ttl / 8)
+    mode = SHARED if reader else EXCLUSIVE
+    priority = 1 if (reader or not shedding) else 0
+    next_at = clock() + interarrival * (0.5 + rng.random())
+    while True:
+        now = clock()
+        if next_at > now:
+            yield next_at - now
+        t_sched = next_at
+        next_at = t_sched + interarrival * (0.5 + rng.random())
+        if t_sched >= run_until:
+            return
+        st.offered += 1
+        deadline = t_sched + budget
+        if shedding and clock() >= deadline:
+            # Admission shed: the arrival expired in this client's own
+            # backlog, so attempting it cannot possibly help — drop it for
+            # free and catch up to arrivals that can still be served.  The
+            # OFF control leg is exactly this line withheld: a doomed
+            # arrival still burns a (congested) posting before its
+            # DeadlineExceeded, which is how a backlog snowballs into the
+            # goodput collapse the sweep measures.
+            st.shed_ops += 1
+            continue
+        try:
+            lease = table.acquire(p, pick(rng), ttl, poll=poll, mode=mode,
+                                  deadline=deadline, priority=priority)
+        except Overloaded:
+            st.shed_ops += 1
+            continue
+        except RemoteTimeout:
+            st.remote_timeouts += 1
+            continue
+        except DeadlineExceeded:
+            st.deadline_misses += 1
+            continue
+        lat = clock() - t_sched
+        st.storm_latencies.append(lat)
+        st.granted(idx, lease)
+        if lat <= budget:
+            st.goodput += 1
+            if reader:
+                st.goodput_shared += 1
+        else:
+            # Granted, but only after the caller's deadline had already
+            # passed (the last pre-deadline poll can land late by one
+            # congested attempt) — useless to the caller, not goodput.
+            st.late_grants += 1
+        yield hold
+        try:
+            table.release(p, lease)
+        except RemoteTimeout:
+            pass
 
 
 def _failover_client(table, p, rng, pick, st, idx, ttl, crash_prob):
@@ -748,6 +861,23 @@ class SimResult:
     hot_remote_acquires: int
     hot_rcas_mean: float
     hot_rcas_max: int
+    sheds: int
+    hedges: int
+    deadline_exceeded: int
+    op_timeouts: int
+    fabric_retries: int
+    breaker_trips: int
+    breaker_refusals: int
+    budget_refusals: int
+    offered_load: float
+    storm_offered: int
+    storm_goodput: int
+    storm_goodput_shared: int
+    storm_shed: int
+    storm_deadline_misses: int
+    storm_late_grants: int
+    storm_acquire_p50: float
+    storm_acquire_p99: float
     cost: Dict[str, Dict[str, int]]
     mode_cost: Dict[str, Dict[str, int]]
     events: int
@@ -790,6 +920,14 @@ def run_lock_table_sim(
     partition_frac: float = 0.25,
     partition_at: Optional[float] = None,
     partition_for: Optional[float] = None,
+    offered_load: float = 1.0,
+    deadline_budget: Optional[float] = None,
+    storm_interarrival: float = STORM_INTERARRIVAL,
+    overload: Optional[OverloadPolicy] = None,
+    shedding: bool = True,
+    congest_capacity: Optional[int] = None,
+    congest_delay: float = 12e-6,
+    drop_prob: float = 0.0,
     max_events: Optional[int] = None,
 ) -> SimResult:
     """Run one workload to ``total_ops`` granted leases; fully deterministic.
@@ -811,8 +949,15 @@ def run_lock_table_sim(
         # instead of a hardcoded constant, so the recovery sweeps can scale
         # lease lifetime without forking the workload.
         short = ("failover", "reader_flood", "crash_restart",
-                 "home_death", "partition")
+                 "home_death", "partition", "overload_storm")
         ttl = failover_ttl if workload in short else 1.0
+        if workload == "overload_storm":
+            # The storm's TTL is its *contention quantum*: inside one
+            # atomic blocking acquire a contended word can only free by
+            # expiry (the holder's release step cannot interleave), so
+            # the TTL prices each contended retry round, not lease
+            # safety.  Keep it well under the deadline budget.
+            ttl = failover_ttl / 5
     # Membership TTL: long enough that one monitor sweep (num_hosts-1
     # charged probes) fits well inside a sweep period — the detector's
     # cadence must not be slower than its own probe loop.
@@ -836,14 +981,30 @@ def run_lock_table_sim(
         window = (t0, t1)
         faults = FabricFaults(seed=seed, injector=fault,
                               partitions=((minority, t0, t1),))
-    elif workload == "home_death" or fault is not None:
-        faults = FabricFaults(seed=seed, injector=fault)
+    elif workload == "overload_storm":
+        # The storm *requires* a fault plan: congestion is what makes
+        # overload cost latency.  One remote acquire+release lands ~11
+        # postings on the key's home, so at the base interarrival each
+        # host sees ~20 postings per 200us window per 4 clients; 12 per
+        # client leaves 1x at ~40% of capacity and 10x several times over.
+        if congest_capacity is None:
+            congest_capacity = 12 * clients_per_host
+        faults = FabricFaults(seed=seed, injector=fault,
+                              drop_prob=drop_prob,
+                              congest_capacity=congest_capacity,
+                              congest_delay=congest_delay)
+    elif (workload == "home_death" or fault is not None
+          or congest_capacity is not None or drop_prob > 0.0):
+        faults = FabricFaults(seed=seed, injector=fault,
+                              drop_prob=drop_prob,
+                              congest_capacity=congest_capacity,
+                              congest_delay=congest_delay)
     mem = SimFabricMemory(num_hosts, engine, latency or FabricLatency(),
                           faults=faults)
     table = ShardedLockTable(
         mem, num_shards=num_shards or 2 * num_hosts,
         clock=engine.clock, sleep=engine.sleep_inline, name=f"sim{seed}",
-        fault=fault, inflation=inflation, seed=seed,
+        fault=fault, inflation=inflation, seed=seed, overload=overload,
     )
 
     universe = [f"k/{i}" for i in range(num_hosts * keys_per_host)]
@@ -884,6 +1045,12 @@ def run_lock_table_sim(
         majority_keys = [k for k in universe
                          if table.home_of(k) not in minority]
         pick_for = lambda h: lambda rng: rng.choice(majority_keys)  # noqa: E731
+    elif workload == "overload_storm":
+        # Uniform over the universe: at 1x each key is nearly idle and
+        # each host well under its posting capacity; at 10x the SAME
+        # keyspace is contended and the SAME hosts congested — overload
+        # emerges from load alone, not from a skew knob.
+        pick_for = lambda h: lambda rng: rng.choice(universe)  # noqa: E731
     else:  # failover / crash_restart: everyone storms a small hot set
         # The hot-set size is a workload parameter (``hot_keys``), not a
         # baked-in constant — the recovery sweep narrows it to sharpen
@@ -900,6 +1067,18 @@ def run_lock_table_sim(
     if restart_delay is None:
         restart_delay = ttl / 4
     tasks_by_host: Dict[int, List] = {h: [] for h in range(num_hosts)}
+
+    # Storm pacing: the *base* (1x) interarrival sets the measurement
+    # window (so every offered-load point observes the same virtual-time
+    # span), and the actual per-client interarrival divides by the load —
+    # 10x offered load is 10x the arrivals into the SAME window.
+    storm_until = 0.0
+    storm_ia = storm_interarrival
+    if workload == "overload_storm":
+        if deadline_budget is None:
+            deadline_budget = 10 * ttl
+        storm_ia = storm_interarrival / max(offered_load, 1e-9)
+        storm_until = total_ops * storm_interarrival / max(nclients, 1)
 
     memberships: List[HostMembership] = []
     run_until = 0.0
@@ -958,6 +1137,13 @@ def run_lock_table_sim(
             # acquire-latency tail and per-acquire rCAS the gates bound.
             task = _sticky_hot_client(table, p, rng, pick_for(host), st,
                                       idx, ttl, (universe[0],))
+        elif workload == "overload_storm":
+            # Every 4th client is the SHARED reader at priority 1 — the
+            # brownout witness.  Writers shed at priority 0 (or never,
+            # in the shedding-OFF control leg).
+            task = _storm_client(table, p, rng, pick_for(host), st, idx,
+                                 ttl, deadline_budget, storm_ia,
+                                 idx % 4 == 3, shedding, storm_until)
         else:
             task = _acquire_release_client(table, p, rng, pick_for(host), st,
                                            idx, ttl)
@@ -998,6 +1184,12 @@ def run_lock_table_sim(
     elif workload == "partition":
         t_end = window[1] + 2 * member_ttl
         stop = lambda: st.done() and engine.clock.now > t_end  # noqa: E731
+    elif workload == "overload_storm":
+        # Open loop: the run ends when the window does (clients retire at
+        # their first arrival past it), never on an ops target.  The
+        # clock bound is a backstop for stragglers draining their last
+        # transaction.
+        stop = lambda: engine.clock.now > storm_until + 8 * ttl  # noqa: E731
     else:
         stop = st.done
     engine.run(stop=stop,
@@ -1107,6 +1299,7 @@ def run_lock_table_sim(
                 f"{max(writer_waits):.6f}s vs ttl {ttl}"
             )
 
+    orep = table.overload.report() if table.overload is not None else {}
     vsec = engine.clock.now
     return SimResult(
         workload=workload,
@@ -1192,6 +1385,23 @@ def run_lock_table_sim(
         hot_rcas_mean=(sum(st.hot_rcas) / len(st.hot_rcas)
                        if st.hot_rcas else 0.0),
         hot_rcas_max=max(st.hot_rcas) if st.hot_rcas else 0,
+        sheds=sum(r["sheds"] for r in rows),
+        hedges=sum(r["hedges"] for r in rows),
+        deadline_exceeded=sum(r["deadline_exceeded"] for r in rows),
+        op_timeouts=sum(r["timeouts"] for r in rows),
+        fabric_retries=sum(r["fabric_retries"] for r in rows),
+        breaker_trips=orep.get("breaker_trips", 0),
+        breaker_refusals=orep.get("breaker_refusals", 0),
+        budget_refusals=orep.get("budget_refusals", 0),
+        offered_load=offered_load,
+        storm_offered=st.offered,
+        storm_goodput=st.goodput,
+        storm_goodput_shared=st.goodput_shared,
+        storm_shed=st.shed_ops,
+        storm_deadline_misses=st.deadline_misses,
+        storm_late_grants=st.late_grants,
+        storm_acquire_p50=_pct(st.storm_latencies, 0.50),
+        storm_acquire_p99=_pct(st.storm_latencies, 0.99),
         cost={"local": vars(totals[LOCAL]).copy(),
               "remote": vars(totals[REMOTE]).copy()},
         mode_cost={

@@ -1,0 +1,490 @@
+"""Overload-safe client stack: deadline propagation, retry budgets, circuit
+breakers, hedged probes, graceful shedding — and their composition rules
+(breaker evidence is SUSPECT, never DEAD; brownout keeps shared reads
+flowing; a mid-batch RemoteTimeout rolls the whole batch back).
+
+Everything here is deterministic: fake or virtual clocks, seeded RNGs, and
+the sim engine's atomic steps.  The CI ``overload-smoke`` job re-runs the
+storm legs at scale; these tests pin each mechanism in isolation.
+"""
+
+import json
+import random
+
+import pytest
+
+from repro.core import (TIMEOUT, AsymmetricMemory, DeadlineExceeded,
+                        Overloaded, RemoteTimeout)
+from repro.coord import (ALIVE, DEAD, SUSPECT, CircuitBreaker,
+                         CoordinationService, FaultInjector, LatencyTracker,
+                         LeaseMode, LedgerStore, OverloadControl,
+                         OverloadPolicy, RecoverableClient, RetryBudget,
+                         ShardedLockTable, SuspicionEstimator,
+                         SuspicionPolicy)
+from repro.launch.serve import BatchAdmission
+from repro.sim import SimEngine, run_lock_table_sim
+from repro.sim.fabric import FabricFaults, FabricLatency, SimFabricMemory
+
+TTL = 5.0
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def make_table(num_hosts=1, num_shards=4, clock=None, sleep=None, **kw):
+    mem = AsymmetricMemory(num_hosts)
+    table = ShardedLockTable(mem, num_shards=num_shards, clock=clock,
+                             sleep=sleep, **kw)
+    return mem, table
+
+
+def sim_stack(num_hosts=2, num_shards=2, seed=0, overload=None, **fault_kw):
+    engine = SimEngine(seed)
+    faults = FabricFaults(seed=seed, **fault_kw)
+    mem = SimFabricMemory(num_hosts, engine, FabricLatency(), faults=faults)
+    table = ShardedLockTable(mem, num_shards=num_shards, clock=engine.clock,
+                             sleep=engine.sleep_inline, seed=seed,
+                             overload=overload)
+    return engine, faults, mem, table
+
+
+# ------------------------------------------------------- deadline propagation
+class TestDeadlinePropagation:
+    def test_expired_deadline_fails_fast_on_every_op(self):
+        clock = FakeClock(10.0)
+        mem, table = make_table(clock=clock)
+        p = mem.spawn(0)
+        lease = table.try_acquire(p, "k", TTL)
+        assert lease is not None
+        for op in (
+            lambda: table.acquire(p, "other", TTL, deadline=9.0),
+            lambda: table.acquire_batch(p, ["a", "b"], TTL, deadline=9.0),
+            lambda: table.renew(p, lease, deadline=9.0),
+            lambda: table.release(p, lease, deadline=9.0),
+            lambda: table.reclaim(p, lease, deadline=9.0),
+        ):
+            before = p.counts.as_tuple()
+            with pytest.raises(DeadlineExceeded):
+                op()
+            # Fail fast means ZERO ops — nothing was posted anywhere.
+            assert p.counts.as_tuple() == before
+        # The typed refusal is a TimeoutError subclass: legacy handlers
+        # (batch rollback, callers with blanket patience handling) work.
+        assert issubclass(DeadlineExceeded, TimeoutError)
+        assert sum(row["deadline_exceeded"] for row in table.telemetry()) >= 5
+
+    def test_backoff_sleeps_clamp_to_remaining_budget(self):
+        clock = FakeClock()
+        sleeps = []
+
+        def sleep(dt):
+            sleeps.append(dt)
+            clock.advance(dt)
+
+        mem, table = make_table(clock=clock, sleep=sleep)
+        holder = mem.spawn(0)
+        assert table.try_acquire(holder, "hot", 1000.0) is not None
+        p = mem.spawn(0)
+        with pytest.raises(DeadlineExceeded):
+            table.acquire(p, "hot", 1000.0, poll=2.0, deadline=5.0)
+        # Unclamped, the doubling ladder (jittered 1..3, 2..6, ...) would
+        # overshoot 5.0 by whole poll intervals.  The clamp lands the clock
+        # exactly on the deadline instead of past it.
+        assert sleeps, "the blocked acquire never backed off"
+        assert clock.t == pytest.approx(5.0)
+        assert all(dt >= 0.0 for dt in sleeps)
+
+    def test_legacy_timeout_path_keeps_plain_timeout_error(self):
+        clock = FakeClock()
+        mem, table = make_table(clock=clock, sleep=clock.advance)
+        holder = mem.spawn(0)
+        assert table.try_acquire(holder, "hot", 1000.0) is not None
+        p = mem.spawn(0)
+        with pytest.raises(TimeoutError) as exc:
+            table.acquire(p, "hot", 1000.0, poll=0.5, timeout=3.0)
+        assert not isinstance(exc.value, DeadlineExceeded)
+
+
+# ------------------------------------------------- retry budgets and breakers
+class TestRetryBudget:
+    def test_spend_refill_bounds(self):
+        b = RetryBudget(OverloadPolicy(budget_capacity=2.0,
+                                       budget_refill=0.5))
+        assert b.spend(1.0) and b.spend(1.0)
+        assert not b.spend(1.0)          # dry: refused, tokens unchanged
+        assert b.tokens == 0.0
+        for _ in range(10):
+            b.refill()
+        assert b.tokens == 2.0           # capped at capacity
+
+    def test_control_raises_typed_budget_refusal(self):
+        ctl = OverloadControl(OverloadPolicy(budget_capacity=1.0))
+        ctl.spend_retry(3)
+        with pytest.raises(Overloaded) as exc:
+            ctl.spend_retry(3)
+        assert exc.value.reason == "budget" and exc.value.host == 3
+        assert ctl.report()["budget_refusals"] == 1
+
+
+class TestCircuitBreaker:
+    POLICY = OverloadPolicy(breaker_min_samples=4, breaker_threshold=0.5,
+                            breaker_cooldown=1.0, breaker_max_cooldown=4.0)
+
+    def test_trips_refuses_and_recovers_through_half_open(self):
+        br = CircuitBreaker(self.POLICY, random.Random(0))
+        for _ in range(4):
+            br.record(False, now=0.0)
+        assert br.state == "open" and br.trips == 1
+        assert not br.allow(0.0)          # refusing, zero fabric ops
+        # After the (jittered, <= 1.5x) cooldown: exactly ONE trial probe.
+        t = br.retry_at
+        assert 0.75 <= t <= 1.5
+        assert br.allow(t) and br.state == "half_open"
+        assert not br.allow(t)            # second caller still refused
+        br.record(True, now=t)
+        assert br.state == "closed"       # trial won: closed, window reset
+        assert br.allow(t)
+
+    def test_failed_trial_reopens_with_longer_cooldown(self):
+        br = CircuitBreaker(self.POLICY, random.Random(0))
+        for _ in range(4):
+            br.record(False, now=0.0)
+        first_wait = br.retry_at
+        assert br.allow(first_wait)
+        br.record(False, now=first_wait)  # trial lost
+        assert br.state == "open" and br.trips == 2
+        # Exponential cooldown: the second OPEN waits ~2x the first.
+        assert br.retry_at - first_wait > first_wait * 1.2
+
+    def test_control_is_seed_deterministic(self):
+        def trace(seed):
+            ctl = OverloadControl(self.POLICY, seed=seed)
+            out = []
+            for host in (0, 1):
+                for _ in range(4):
+                    ctl.on_outcome(host, False, 0.0)
+                out.append(round(ctl.breaker(host).retry_at, 12))
+                try:
+                    ctl.admit_remote(host, 0.0)
+                except Overloaded as e:
+                    out.append(e.reason)
+            out.append(json.dumps(ctl.report(), sort_keys=True))
+            return out
+
+        assert trace(5) == trace(5)
+        assert trace(5) != trace(6)
+
+    def test_open_breaker_is_suspect_evidence_never_dead(self):
+        # The membership composition rule: an open breaker means "slow or
+        # unreachable FROM HERE" — it may suspect a host, but only missed
+        # heartbeats are allowed to kill it.
+        est = SuspicionEstimator(SuspicionPolicy(ttl=1.0))
+        assert est.suspect(7, now=0.0) == SUSPECT
+        for i in range(200):              # breaker stays open a long time
+            est.suspect(7, now=0.1 * i)
+        assert est._entry(7).verdict == SUSPECT
+        assert all(new != DEAD for _t, _h, _old, new in est.transitions)
+        for i in range(3):                # heartbeats return: full recovery
+            est.beat(7, now=30.0 + i)
+        assert est._entry(7).verdict == ALIVE
+
+
+# -------------------------------------------------------------- hedged probes
+class TestHedgedProbes:
+    def test_latency_tracker_cold_then_quantile(self):
+        tr = LatencyTracker(OverloadPolicy(hedge_min_samples=4,
+                                           hedge_window=8))
+        assert tr.threshold() == float("inf")
+        for dt in (1.0, 2.0, 3.0, 4.0):
+            tr.record(dt)
+        assert tr.threshold() == 4.0
+        for dt in range(100):             # ring stays bounded
+            tr.record(float(dt))
+        assert len(tr.samples) == 8
+
+    def test_hedges_ride_the_retry_budget(self):
+        ctl = OverloadControl(OverloadPolicy(budget_capacity=2.0,
+                                             hedge_cost=1.0))
+        assert ctl.allow_hedge(0) and ctl.allow_hedge(0)
+        assert not ctl.allow_hedge(0)     # dry bucket: no speculative post
+        assert ctl.report()["hedges"] == 2
+
+    def test_probe_hedges_once_past_p99_and_wins(self):
+        policy = OverloadPolicy(hedge_min_samples=4)
+        # Host 1's link flaps across the first probe only: the first
+        # posting is eaten (op timeout), but by then the link is back.
+        engine, faults, mem, table = sim_stack(
+            overload=policy, flaps=((1, 0.0, 50e-6),))
+        ctl = table.overload
+        p = mem.spawn(0)
+        reg = mem.alloc(1, "w", 42)
+        shard = table.shards[1]
+        for _ in range(4):                # warm the p99 tracker
+            ctl.observe_latency(1, 1e-6)
+        # The flap eats the first posting -> op timeout >> p99 -> the probe
+        # re-posts once, and the hedge (second posting) answers.
+        assert table._probe(p, reg, shard) == 42
+        assert shard.hedges == 1 and ctl.report()["hedges"] == 1
+        assert faults.stats["probe_losses"] == 1
+
+    def test_probe_does_not_hedge_when_budget_is_dry(self):
+        policy = OverloadPolicy(hedge_min_samples=4)
+        engine, faults, mem, table = sim_stack(
+            overload=policy, flaps=((1, 0.0, 50e-6),))
+        ctl = table.overload
+        p = mem.spawn(0)
+        reg = mem.alloc(1, "w", 42)
+        shard = table.shards[1]
+        for _ in range(4):
+            ctl.observe_latency(1, 1e-6)
+        ctl.budget(1).tokens = 0.0        # congested host: bucket is dry
+        assert table._probe(p, reg, shard) is TIMEOUT
+        assert shard.hedges == 0 and ctl.report()["hedges"] == 0
+
+
+# ------------------------------------------------------------ congested hosts
+class TestCongestion:
+    def test_capacity_model_prices_bursts_deterministically(self):
+        def burst(seed):
+            engine, faults, mem, _ = sim_stack(
+                seed=seed, congest_capacity=2, congest_delay=50e-6)
+            p = mem.spawn(0)
+            reg = mem.alloc(1, "w", 0)
+            for i in range(12):
+                mem.rwrite(p, reg, i)
+            return engine.clock.now, dict(faults.stats)
+
+        t_cong, stats = burst(0)
+        assert stats["congested"] > 0
+        engine, faults, mem, _ = sim_stack(seed=0)
+        p = mem.spawn(0)
+        reg = mem.alloc(1, "w", 0)
+        for i in range(12):
+            mem.rwrite(p, reg, i)
+        assert t_cong > engine.clock.now  # congestion actually cost time
+        assert burst(0) == (t_cong, stats)  # and is byte-deterministic
+
+    def test_fabric_congest_point_forces_one_quantum(self):
+        fi = FaultInjector().at("fabric.congest", nth=2)
+        engine, faults, mem, _ = sim_stack(injector=fi)
+        p = mem.spawn(0)
+        reg = mem.alloc(1, "w", 0)
+        mem.rwrite(p, reg, 1)
+        mem.rwrite(p, reg, 2)             # exactly this posting queues
+        assert faults.stats["congested"] == 1
+        assert [f[0] for f in fi.fired] == ["fabric.congest"]
+
+
+# ------------------------------------------------------------- load shedding
+class TestFeasibilityShed:
+    def _burned_table(self):
+        """A table whose one shard has a warm time-to-completion EWMA
+        (4.0s), learned the honest way: a blocked acquire burned its whole
+        deadline budget against a held key."""
+        clock = FakeClock()
+        mem, table = make_table(num_shards=1, clock=clock,
+                                sleep=clock.advance)
+        holder = mem.spawn(0)
+        assert table.try_acquire(holder, "hot", 1000.0) is not None
+        p = mem.spawn(0)
+        with pytest.raises(DeadlineExceeded):
+            table.acquire(p, "hot", 1000.0, poll=0.5, deadline=4.0)
+        shard = table.shards[0]
+        assert shard.svc_time == pytest.approx(4.0)
+        return clock, table, shard, holder, p
+
+    def test_infeasible_deadline_sheds_before_posting(self):
+        clock, table, shard, _holder, p = self._burned_table()
+        before = p.counts.as_tuple()
+        with pytest.raises(Overloaded) as exc:
+            # remaining 5.0 < 1.5 * svc 4.0: statistically doomed.
+            table.acquire(p, "hot", 1000.0, deadline=clock() + 5.0)
+        assert exc.value.reason == "shed"
+        assert p.counts.as_tuple() == before    # zero ops: a local refusal
+        assert shard.sheds == 1
+
+    def test_positive_priority_is_never_shed(self):
+        clock, table, shard, _holder, p = self._burned_table()
+        with pytest.raises(DeadlineExceeded):
+            table.acquire(p, "hot", 1000.0, poll=0.5,
+                          deadline=clock() + 5.0, priority=1)
+        assert shard.sheds == 0                 # it burned, but wasn't shed
+
+    def test_legacy_timeout_callers_are_never_shed(self):
+        clock, table, shard, _holder, p = self._burned_table()
+        with pytest.raises(TimeoutError) as exc:
+            table.acquire(p, "hot", 1000.0, poll=0.5, timeout=5.0)
+        assert not isinstance(exc.value, (DeadlineExceeded, Overloaded))
+        assert shard.sheds == 0
+
+    def test_completion_ewma_recovers_on_fast_grants(self):
+        clock, table, shard, _holder, p = self._burned_table()
+        # Let the holder's lease expire; quick grants then pull the EWMA
+        # back down, so shedding relaxes when the overload drains.
+        clock.advance(2000.0)
+        svc0 = shard.svc_time
+        lease = table.acquire(p, "hot", 1000.0, deadline=clock() + 100.0)
+        assert lease is not None
+        assert shard.svc_time < svc0
+
+
+# ----------------------------------------------- admission brownout (serve)
+class TestBatchAdmissionBrownout:
+    def _adm(self):
+        svc = CoordinationService(num_hosts=1, num_shards=4,
+                                  overload=OverloadPolicy())
+        return BatchAdmission(num_slots=2, ttl=30.0, svc=svc,
+                              read_slots=2), svc.table.overload
+
+    def test_open_breaker_sheds_exclusive_but_reads_flow(self):
+        adm, ctl = self._adm()
+        for _ in range(8):
+            ctl.breaker(0).record(False, 0.0)
+        assert ctl.breaker_open(0)
+        with pytest.raises(Overloaded) as exc:
+            adm.admit(timeout=0.0)
+        assert exc.value.reason == "breaker"
+        assert adm.stats()["sheds"] == 1
+        # Brownout: the read lane is ungated — shared-mode reads keep
+        # flowing while exclusive admissions shed.
+        lease = adm.admit_read()
+        assert lease is not None and lease.mode == LeaseMode.SHARED
+        assert adm.complete(lease)
+
+    def test_dry_budget_sheds_at_admission(self):
+        adm, ctl = self._adm()
+        ctl.budget(0).tokens = 0.0
+        with pytest.raises(Overloaded) as exc:
+            adm.admit(timeout=0.0)
+        assert exc.value.reason == "budget"
+        assert adm.stats()["sheds"] == 1
+
+    def test_ungated_without_policy(self):
+        adm = BatchAdmission(num_slots=2, ttl=30.0, read_slots=1)
+        lease = adm.admit(timeout=0.0)
+        assert lease is not None
+        assert adm.complete(lease)
+        assert adm.stats()["sheds"] == 0
+
+
+# ----------------------------------------- mid-batch rollback under timeouts
+class TestBatchRollbackUnderRemoteTimeout:
+    def test_remote_timeout_mid_batch_leaves_no_orphan_grants(self):
+        engine, faults, mem, table = sim_stack(num_shards=2)
+        p = mem.spawn(0)
+        store = LedgerStore()
+        rc = RecoverableClient(table, p, store.ledger("victim"))
+        k_local = next(f"k{i}" for i in range(64)
+                       if table.shard_of(f"k{i}") == 0)
+        k_remote = next(f"k{i}" for i in range(64)
+                        if table.shard_of(f"k{i}") == 1)
+        faults.fail_host(1, 0.0)
+        # The local group grants, then the remote group's postings die at
+        # the fabric: the table must roll the held prefix back.
+        with pytest.raises(RemoteTimeout):
+            rc.acquire_batch([k_remote, k_local], ttl=10.0, timeout=5.0)
+        # No orphan grants: the local key is immediately grantable again
+        # (a leaked lease would block this until TTL expiry).
+        p2 = mem.spawn(0)
+        lease2 = table.try_acquire(p2, k_local, 10.0)
+        assert lease2 is not None
+        # Ledger-reclaimable: RemoteTimeout is NOT a TimeoutError, so the
+        # intents stay dangling — restart's orphan probe must resolve them
+        # against the (released) words without adopting anything.  The
+        # fabric heals first (a dead destination would eat the probe too).
+        faults.dead.clear()
+        restarted = mem.spawn(0)
+        reclaimed = rc.restart(restarted)
+        assert reclaimed == []
+        view = rc.ledger.replay()
+        assert k_local not in view.live and k_local not in view.intents
+        # The fresh grant was never disturbed by the probe (fencing held).
+        assert table.renew(p2, lease2) is not None
+
+    def test_batch_mid_crash_crossed_with_congestion_cell(self):
+        # The crash matrix's overload axis: a holder dies between two shard
+        # groups of a batch WHILE the fabric is congesting postings — the
+        # recovery path must hold under both at once.
+        fi = (FaultInjector()
+              .at("batch.mid", nth=5)
+              .at("fabric.congest", nth=31))
+        r = run_lock_table_sim(
+            "crash_restart", fault=fi, num_hosts=8, clients_per_host=4,
+            total_ops=3000, seed=5, failover_ttl=1e-3, crash_warmup=2e-3,
+            crash_spacing=1e-3 / 8, restart_delay=1e-3 / 8)
+        labels = {lab for lab, _pid, _n in fi.fired}
+        assert "batch.mid" in labels, "the batch crash cell never armed"
+        assert "fabric.congest" in labels, "the congestion cell never armed"
+        assert r.fabric["congested"] >= 1
+        assert r.token_regressions == 0
+        assert r.zombie_renews == 0
+        assert r.ops > 0 and r.crashes > 0
+
+
+# --------------------------------------------------------- storm workload
+class TestOverloadStormWorkload:
+    CFG = dict(num_hosts=8, clients_per_host=2, num_shards=16,
+               total_ops=1500, deadline_budget=600e-6)
+
+    def test_storm_legs_are_seed_deterministic(self):
+        def leg(shedding):
+            r = run_lock_table_sim(
+                "overload_storm", seed=3, offered_load=6.0,
+                shedding=shedding,
+                overload=OverloadPolicy() if shedding else None, **self.CFG)
+            return json.dumps(r.row(), sort_keys=True)
+
+        assert leg(True) == leg(True)
+        assert leg(False) == leg(False)
+
+    def test_shedding_leg_protects_goodput_and_brownout(self):
+        r = run_lock_table_sim("overload_storm", seed=3, offered_load=6.0,
+                               shedding=True, overload=OverloadPolicy(),
+                               **self.CFG)
+        assert r.storm_offered > r.ops // 2
+        assert r.storm_goodput > 0
+        assert r.storm_shed + r.sheds > 0, "overload never shed anything"
+        # Brownout: the SHARED reader class (priority 1) is never shed and
+        # keeps landing grants through the storm.
+        assert r.storm_goodput_shared > 0
+        assert r.token_regressions == 0 and r.zombie_renews == 0
+        assert r.storm_acquire_p99 <= 1.5 * self.CFG["deadline_budget"]
+
+    def test_control_leg_never_sheds(self):
+        r = run_lock_table_sim("overload_storm", seed=3, offered_load=6.0,
+                               shedding=False, overload=None, **self.CFG)
+        assert r.sheds == 0 and r.storm_shed == 0
+        assert r.hedges == 0 and r.breaker_trips == 0
+
+
+# -------------------------------------------------- telemetry (satellite b)
+class TestOverloadTelemetry:
+    def test_hot_keys_surface_op_timeouts_and_fabric_retries(self):
+        engine, faults, mem, table = sim_stack(num_shards=2)
+        p = mem.spawn(0)
+        key = next(f"k{i}" for i in range(64)
+                   if table.shard_of(f"k{i}") == 1)
+        faults.fail_host(1, 0.0)
+        with pytest.raises(RemoteTimeout):
+            table.try_acquire(p, key, 10.0)
+        rows = table.hot_keys()
+        row = next(r for r in rows if r[0] == key)
+        assert len(row) == 4
+        _key, _blocked, op_timeouts, fab_retries = row
+        assert op_timeouts >= 1 and fab_retries >= 1
+
+    def test_telemetry_carries_overload_counters(self):
+        clock = FakeClock()
+        mem, table = make_table(clock=clock, sleep=clock.advance)
+        for row in table.telemetry():
+            for k in ("sheds", "hedges", "deadline_exceeded", "timeouts",
+                      "fabric_retries"):
+                assert k in row

@@ -17,6 +17,7 @@ from .membership import (ALIVE, DEAD, SUSPECT, HostMembership,  # noqa: F401
                          SuspicionEstimator, SuspicionPolicy, member_key_for)
 from .overload import (CircuitBreaker, LatencyTracker,  # noqa: F401
                        OverloadControl, OverloadPolicy, RetryBudget)
+from .pipeline import AsyncClient, PipelineFuture  # noqa: F401
 from .service import Barrier, CoordinationService  # noqa: F401
 from .table import (Lease, LeaseMode, LockShard, ShardedLockTable,  # noqa: F401
                     forwarded_home, stable_key_hash)

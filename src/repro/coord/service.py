@@ -42,6 +42,7 @@ from .inflation import InflationPolicy
 from .ledger import LedgerStore, RecoverableClient
 from .membership import HostMembership, SuspicionPolicy
 from .overload import OverloadPolicy
+from .pipeline import AsyncClient
 from .table import Lease, LeaseMode, ShardedLockTable
 
 
@@ -223,6 +224,42 @@ class CoordinationService:
             self._lease_cache.pop((p.pid, lease.key, lease.mode), None)
             self._cache_put(p, downgraded)
         return downgraded
+
+    # --------------------------------------------------- optimistic read path
+    def read_optimistic(self, p: Process, key: str,
+                        deadline: Optional[float] = None):
+        """Lease-free seqlock read of ``key``'s published payload: 0 RDMA
+        for home readers, one doorbell (4 rREADs, 0 CAS) for remote
+        readers.  Returns ``(value, publish_token)``; falls back to a
+        transient shared lease after bounded instability."""
+        return self.table.read_optimistic(p, key, deadline=deadline)
+
+    def publish(self, p: Process, lease: Lease, value,
+                deadline: Optional[float] = None) -> bool:
+        """Fenced publish of ``value`` under a live EXCLUSIVE ``lease`` so
+        optimistic readers can observe it (witness-corrected first, so a
+        stale lease object still fences correctly)."""
+        return self.table.publish(p, self._freshest(p, lease, evict=False),
+                                  value, deadline=deadline)
+
+    def async_client(self, p: Process, flush_ops: int = 8,
+                     quantum: float = 100e-6) -> AsyncClient:
+        """A per-process futures pipeline over the table: enqueues remote
+        ops per destination host and flushes one ``post_batch`` posting per
+        scheduling quantum (PR 9 hedged probes from ``p`` ride its
+        flushes)."""
+        return AsyncClient(self.table, p, flush_ops=flush_ops,
+                           quantum=quantum)
+
+    def note_renewed(self, p: Process, lease: Lease,
+                     renewed: Optional[Lease]) -> None:
+        """Lease-cache maintenance for a renew performed *outside*
+        :meth:`renew` — e.g. one that rode an :class:`AsyncClient` flush.
+        Keeps later witness-checked releases on the fast path."""
+        if renewed is None:
+            self._lease_cache.pop((p.pid, lease.key, lease.mode), None)
+        else:
+            self._cache_put(p, renewed)
 
     # -------------------------------------------------------- crash recovery
     def reclaim(self, p: Process, lease: Lease,

@@ -21,9 +21,12 @@ Layered on the shard locks is a **lease table** (the long-lived exclusion):
   after ``ttl`` and the next grant carries a larger token, which downstream
   resources use to reject the crashed holder's stale writes.
 * ``acquire_batch(p, keys, ttl)`` takes multiple leases in the **global key
-  order** ``(shard_of(key), key)``.  All batched clients walk the same total
-  order, so no cycle of waiters can form — deadlock freedom without a
-  detector (see ``docs/lock-table.md``).
+  order** ``(shard_of(key) % num_hosts, shard_of(key), key)``.  All batched
+  clients walk the same total order, so no cycle of waiters can form —
+  deadlock freedom without a detector (see ``docs/lock-table.md``); the
+  static-home-major ordering additionally puts same-home shard groups next
+  to each other, so a batch chains their WR lists into one posting per
+  destination host.
 
 **Lease modes** (see the "Lease modes" section of ``docs/lock-table.md``):
 every lease is either :data:`LeaseMode.EXCLUSIVE` (one writer) or
@@ -105,6 +108,12 @@ _FAST_ATTEMPTS = 64
 # seeded jitter — the thundering-herd fix for threaded hot keys, routed
 # through the injected clock/RNG so the sim stays deterministic.
 _BACKOFF_CAP_POLLS = 32
+
+# Optimistic (seqlock) read attempts before falling back to a shared lease:
+# each attempt is one doorbell for a remote reader (zero for a home one),
+# so the cap bounds the read's worst-case fabric cost at a handful of
+# doorbells before it degrades to the still-cheap PR 4 shared join.
+_OPT_ATTEMPTS = 8
 
 # Feasibility-shed safety margin: an acquire is refused once its remaining
 # deadline budget drops below this multiple of the shard's observed
@@ -297,14 +306,24 @@ class _KeyState:
     aliasing a later inflation's).
     """
 
-    __slots__ = ("holder", "expires", "fence", "intent", "infl", "infl_epoch",
-                 "infl_ceiling")
+    __slots__ = ("holder", "expires", "fence", "intent", "payload", "infl",
+                 "infl_epoch", "infl_ceiling")
 
     def __init__(self, mem: AsymmetricMemory, node: int, name: str):
         self.holder = mem.alloc(node, f"{name}.holder", _NO_HOLDER)
         self.expires = mem.alloc(node, f"{name}.expires", (0, 0, _FREE_AT))
         self.fence = mem.alloc(node, f"{name}.fence", 0)
         self.intent = mem.alloc(node, f"{name}.intent", _FREE_AT)
+        # Optimistic-read payload: ``(publish_token, value)``, written only
+        # by ``publish`` (a fenced read+CAS by the live exclusive holder).
+        # The token records WHICH writer generation published the value, so
+        # a seqlock reader can cross-check the payload against the packed
+        # word (payload token > word token ⇒ the word read was stale or
+        # clobbered ⇒ retry).  An advisory cache, not protocol state: a
+        # takeover re-seeds it empty on the new home (the ledger records
+        # leases, not payloads) — readers then see "never published", which
+        # is honest, never stale.
+        self.payload = mem.alloc(node, f"{name}.payload", (0, None))
         self.infl: Optional[InflatedKeyQueue] = None
         self.infl_epoch = 0
         # Largest word token the current inflation epoch may allocate via
@@ -391,6 +410,12 @@ class LockShard:
         self.sheds = 0               # acquires refused as deadline-infeasible
         self.hedges = 0              # read-only probes that posted a hedge
         self.deadline_exceeded = 0   # ops refused/aborted on caller deadline
+        # Optimistic-read (seqlock) counters (PR 10).
+        self.opt_reads = 0           # untorn snapshots returned lease-free
+        self.opt_read_retries = 0    # unstable/contended attempts retried
+        self.opt_read_fallbacks = 0  # reads degraded to a shared lease
+        self.opt_read_fwd = 0        # tombstoned words chased to a new home
+        self.publishes = 0           # fenced payload publishes that landed
         # EWMA of observed blocking-acquire time-to-completion (grant or
         # burned deadline), the shedding feasibility signal (updated
         # outside _meta: float store is atomic enough for a heuristic;
@@ -475,6 +500,11 @@ class ShardedLockTable:
         # key's installed one belongs to a discarded epoch and is dropped.
         self._waits: Dict[int, Dict[str, List]] = {}
         self._waits_guard = threading.Lock()
+        # Registered async pipelines (PR 10): pid -> AsyncClient.  A hedged
+        # probe by a process that drives a pipeline rides that pipeline's
+        # next flush for the probed host instead of posting its own
+        # doorbell (see _probe/_hedged_read).  Host-side metadata only.
+        self._pipelines: Dict[int, object] = {}
 
     _SLOTS_SWEEP = 1024
 
@@ -609,7 +639,20 @@ class ShardedLockTable:
         ctl.observe_latency(host, dt)
         if (out is TIMEOUT and dt >= ctl.hedge_threshold(host)
                 and ctl.allow_hedge(host)):
-            out = self.mem.probe(p, reg)
+            # The hedge itself is admitted by the same retry budget as
+            # before; only its TRANSPORT changes when the caller drives an
+            # async pipeline — the re-post then rides the pipeline's flush
+            # for this host (sharing a doorbell with any queued work)
+            # instead of posting its own.  Idempotent read, so riding a
+            # mixed WR list is safe.
+            pl = self._pipelines.get(p.pid)
+            if pl is not None:
+                try:
+                    out = pl.ride_read(reg)
+                except RemoteTimeout:
+                    out = TIMEOUT
+            else:
+                out = self.mem.probe(p, reg)
             ctl.observe_latency(host, self.clock() - t0)
             if shard is not None:
                 with shard._meta:
@@ -638,7 +681,12 @@ class ShardedLockTable:
             if shard is not None:
                 with shard._meta:
                     shard.hedges += 1
-            val = self.mem.auto_read(p, reg)
+            # Same budget, cheaper transport: a pipeline-driving caller's
+            # hedge rides the pipeline flush for this host (idempotent
+            # read in a shared WR list) instead of a dedicated doorbell.
+            pl = self._pipelines.get(p.pid)
+            val = (pl.ride_read(reg) if pl is not None
+                   else self.mem.auto_read(p, reg))
         ctl.observe_latency(host, self.clock() - t0)
         return val
 
@@ -1077,6 +1125,245 @@ class ShardedLockTable:
             # about to wait outside the CS — the window where its death
             # abandons the barrier (which lapses on its own: it is a
             # deadline, not a lock).
+            self._crash_point("drain.mid", p)
+        return granted, blocked
+
+    def _unlock_run(self, p: Process, locked: List[ALock],
+                    writes: List[tuple]) -> None:
+        """Unlock a run's ALocks; all piggybacked writes ride the FIRST
+        unlock's doorbell — every group's critical section is still held
+        when that posting executes, so each write stays CS-protected by
+        its own shard's lock.  Nested finallys: a fabric failure in one
+        unlock never strands the rest."""
+        if not locked:
+            return
+        try:
+            locked[0].unlock(p, piggyback=writes or None)
+        finally:
+            self._unlock_run(p, locked[1:], [])
+
+    def _acquire_run(self, p: Process,
+                     groups: Sequence[Tuple[LockShard, Sequence[str]]],
+                     ttl: float) -> Tuple[List[Lease], bool]:
+        """EXCLUSIVE grant pass over a *run* of shard groups sharing one
+        home host — ``_acquire_group`` generalised so the cross-group WR
+        lists merge into one posting per destination (satellite: the
+        batch/shards16 3.55-doorbells/op fix).
+
+        The run's ALocks are taken in ascending shard order (the global
+        total order — every locker ascends, so no cycle of CS waiters can
+        form), each engagement piggybacking its own group's lease-register
+        reads; failed piggybacks re-read in ONE merged posting; the grant
+        CASes of *all* groups commit in ONE posting (WR lists execute in
+        order, preserving the key order inside the doorbell); the fence/
+        holder/intent writes all ride the first unlock while every CS is
+        still held.  Per-group doorbells drop from 3 (engage, commit,
+        unlock) to 2 + 1/k.  Verdict logic, inflation decisions, and the
+        stop-at-first-blocked discipline are exactly ``_acquire_group``'s,
+        applied over the run's flat key order.
+        """
+        first_shard = groups[0][0]
+        local = p.node == first_shard.home_host
+        snap = p.counts.as_tuple()
+        granted: List[Lease] = []
+        writes: List[tuple] = []
+        blocked = False
+        blocked_at: Optional[Tuple[LockShard, str]] = None
+        inflated_at: Optional[Tuple[LockShard, str, int]] = None
+        armed_drain = False
+        expirations: Dict[int, int] = {}
+        repairs: Dict[int, int] = {}
+        # Clock sampled before any lock, same zombie-window argument as
+        # _acquire_group (see there).
+        now = self.clock()
+        locked: List[ALock] = []
+        ctx: List[Tuple[LockShard, Sequence[str], List[_KeyState],
+                        Optional[list]]] = []
+        try:
+            try:
+                for shard, keys in groups:
+                    states = [self._key_state(shard, k) for k in keys]
+                    alock = shard.alock  # pin: takeover swaps it mid-CS
+                    if local:
+                        alock.lock(p)
+                        flat = None
+                    else:
+                        flat = alock.lock(p, piggyback_reads=[
+                            r for st in states
+                            for r in (st.expires, st.fence)
+                        ])
+                    locked.append(alock)
+                    ctx.append((shard, keys, states, flat))
+                # Re-read every group whose piggyback went unvalidated —
+                # ONE merged posting for the whole run (every register
+                # lives on the run's single home node).
+                need = [(gi, c[2]) for gi, c in enumerate(ctx)
+                        if c[3] is None]
+                reread: Dict[int, List[Tuple[tuple, int]]] = {}
+                if need:
+                    if local:
+                        for gi, states in need:
+                            reread[gi] = [
+                                (self.mem.read(p, st.expires),
+                                 self.mem.read(p, st.fence))
+                                for st in states]
+                    else:
+                        flatv = self.mem.post_batch(p, [
+                            wr for _gi, states in need for st in states
+                            for wr in (("read", st.expires),
+                                       ("read", st.fence))])
+                        off = 0
+                        for gi, states in need:
+                            reread[gi] = [
+                                (flatv[off + 2 * i], flatv[off + 2 * i + 1])
+                                for i in range(len(states))]
+                            off += 2 * len(states)
+                # Verdict pass over the run's flat key order; stops at the
+                # first blocked key (global-order discipline: nothing past
+                # it may be planned, in THIS group or any later one).
+                plan = []  # (shard, key, st, packed, token, clob, free, enc0)
+                for gi, (shard, keys, states, flat) in enumerate(ctx):
+                    if blocked:
+                        break
+                    if flat is not None:
+                        vals = [(flat[2 * i], flat[2 * i + 1])
+                                for i in range(len(states))]
+                    else:
+                        vals = reread[gi]
+                    for key, st, ((etok, readers, eexp), fence) in zip(
+                            keys, states, vals):
+                        free = eexp <= _FREE_AT
+                        clobbered = not _trusted(etok, fence, readers)
+                        if not free and not clobbered and now < eexp:
+                            blocked = True
+                            blocked_at = (shard, key)
+                            if _dec(readers) > 0:
+                                writes.append(("write", st.intent, eexp))
+                                armed_drain = True
+                            elif (self._estimator is not None
+                                    and not _infl(readers)):
+                                self._estimator.note(key, now)
+                                if (st.infl is None
+                                        and self._estimator.should_inflate(
+                                            key, now)):
+                                    st.infl_epoch += 1
+                                    st.infl = InflatedKeyQueue(
+                                        self.mem, shard.home_host,
+                                        self._init_budget,
+                                        f"{self.name}.s{shard.index}"
+                                        f".k{stable_key_hash(key):016x}"
+                                        f".iq{st.infl_epoch}")
+                                    if self.mem.auto_cas(
+                                        p, st.expires, (etok, readers, eexp),
+                                        (etok, _enc(0, True), eexp),
+                                    ) == (etok, readers, eexp):
+                                        self._estimator.mark_inflated(key, now)
+                                        inflated_at = (shard, key, etok)
+                                        st.infl_ceiling = etok
+                                    else:
+                                        st.infl = None
+                            break
+                        if st.infl is not None and not st.infl.empty(p):
+                            blocked = True
+                            blocked_at = (shard, key)
+                            break
+                        token = fence + 1  # CS-only allocator
+                        plan.append((shard, key, st, (etok, readers, eexp),
+                                     token, clobbered, free,
+                                     _enc(0, st.infl is not None)))
+                # Commit pass: ONE posting of every group's grant CASes
+                # (same CAS-against-read discipline as _acquire_group; WR
+                # entries execute in list order, so grants land in the
+                # global key order even inside the merged doorbell).
+                if plan:
+                    if local:
+                        won = [
+                            self.mem.cas(p, st.expires, packed,
+                                         (token, enc0, now + ttl)) == packed
+                            for (_sh, _k, st, packed, token, _c, _f, enc0)
+                            in plan
+                        ]
+                    else:
+                        obs = self.mem.post_batch(p, [
+                            ("cas", st.expires, packed,
+                             (token, enc0, now + ttl))
+                            for (_sh, _k, st, packed, token, _c, _f, enc0)
+                            in plan
+                        ])
+                        won = [o == packed
+                               for o, (_sh, _k, _s, packed, *_r)
+                               in zip(obs, plan)]
+                    cut = won.index(False) if False in won else len(plan)
+                    rollback = [
+                        ("cas", st.expires, (token, enc0, now + ttl), packed)
+                        for i, (_sh, _k, st, packed, token, _c, _f, enc0)
+                        in enumerate(plan)
+                        if i > cut and won[i]
+                    ]
+                    if rollback:
+                        if local:
+                            for _op, reg, exp_v, new_v in rollback:
+                                self.mem.cas(p, reg, exp_v, new_v)
+                        else:
+                            self.mem.post_batch(p, rollback)
+                    if cut < len(plan):
+                        blocked = True
+                        blocked_at = (plan[cut][0], plan[cut][1])
+                    for (shard, key, st, packed, token, clobbered, free,
+                         enc0) in plan[:cut]:
+                        if clobbered:
+                            repairs[shard.index] = \
+                                repairs.get(shard.index, 0) + 1
+                        elif not free:
+                            expirations[shard.index] = \
+                                expirations.get(shard.index, 0) + 1
+                        granted.append(
+                            Lease(key, shard.index, p.pid, token, now + ttl,
+                                  ttl, LeaseMode.EXCLUSIVE, _infl(enc0))
+                        )
+                        fence_val = token
+                        if _infl(enc0):
+                            st.infl_ceiling = fence_val = \
+                                token + _INFL_RESERVE
+                        writes += [
+                            ("write", st.fence, fence_val),
+                            ("write", st.holder, p.pid),
+                            ("write", st.intent, _FREE_AT),
+                        ]
+            finally:
+                self._unlock_run(p, locked, writes)
+        finally:
+            # Merged-posting accounting lands on the run's first shard
+            # (the per-class split is identical — one home, one class).
+            self._account(first_shard, p, snap, LeaseMode.EXCLUSIVE)
+        ngrant: Dict[int, int] = {}
+        for g in granted:
+            ngrant[g.shard] = ngrant.get(g.shard, 0) + 1
+        for shard, _keys in groups:
+            si = shard.index
+            if not (si in ngrant or si in expirations or si in repairs
+                    or (blocked_at is not None
+                        and blocked_at[0].index == si)
+                    or (inflated_at is not None
+                        and inflated_at[0].index == si)):
+                continue
+            with shard._meta:
+                shard.grants += ngrant.get(si, 0)
+                shard.grants_by_mode[LeaseMode.EXCLUSIVE] += ngrant.get(si, 0)
+                shard.expirations += expirations.get(si, 0)
+                shard.repairs += repairs.get(si, 0)
+                if inflated_at is not None and inflated_at[0].index == si:
+                    shard.inflations += 1
+                if blocked_at is not None and blocked_at[0].index == si:
+                    shard.rejects += 1
+                    shard.rejects_by_mode[LeaseMode.EXCLUSIVE] += 1
+                    shard.key_retries[blocked_at[1]] = \
+                        shard.key_retries.get(blocked_at[1], 0) + 1
+        if inflated_at is not None:
+            self._log_infl_event(now, "inflate", inflated_at[1],
+                                 inflated_at[2], "hot")
+            self._crash_point("inflate.mid", p)
+        if armed_drain:
             self._crash_point("drain.mid", p)
         return granted, blocked
 
@@ -1976,6 +2263,242 @@ class ShardedLockTable:
                 self._inflated_handoff(p, shard, st, lease.key, lease)
         return downgraded
 
+    # -------------------------------------------- optimistic (seqlock) reads
+    def _opt_read_wrs(self, st: _KeyState) -> List[tuple]:
+        """The seqlock read set, in WR-list execution order: packed word,
+        payload, packed word again, intent barrier.  One posting — so one
+        doorbell and **zero** CAS — for a remote reader; the async pipeline
+        chains several of these into a single posting per host."""
+        return [("read", st.expires), ("read", st.payload),
+                ("read", st.expires), ("read", st.intent)]
+
+    def _opt_read_verdict(self, now: float, w1: tuple, payload: tuple,
+                          w2: tuple, barrier: float) -> Tuple[str, tuple]:
+        """Classify one seqlock read set.
+
+        Returns ``("ok", (value, publish_token))``, ``("forward", ())`` for
+        a takeover tombstone (chase the forwarding pointer, never serve the
+        stale payload), or ``("retry", reason)``.
+
+        Validity argument (the torn/stale-read proof obligation):
+
+        * ``w1 == w2`` — the word did not move across the payload read, so
+          no writer *generation change* raced the snapshot.  WR-list
+          entries are not mutually atomic (``post_batch`` schedules between
+          them), which is exactly why the re-read is required.
+        * the word is not a live EXCLUSIVE hold — a live writer may be
+          mid-``publish``, so the payload cannot be trusted even under a
+          stable word.
+        * no writer-intent barrier is armed and the word is not in
+          inflated (queued) mode: both states mean a writer is imminent or
+          queued, so optimistic reads step aside exactly like shared joins
+          do (refuse/retry, per the drain discipline).
+        * ``payload_token <= word_token`` — publishes are fenced monotone
+          in the writer token, so a payload token *above* the word token
+          proves the word read was stale (e.g. a zombie's clobbered
+          mirror): retry.  Under that fence, the payload IS the newest
+          published value — generations that never published leave it
+          untouched, which is fresh, not stale.
+        """
+        etok, readers, eexp = w1
+        if w1 != w2:
+            return ("retry", "unstable")
+        if etok == _TOMB_TOKEN:
+            return ("forward", ())
+        if now < barrier:
+            return ("retry", "intent")
+        if _infl(readers):
+            return ("retry", "inflated")
+        if _FREE_AT < eexp and now < eexp and _dec(readers) == 0:
+            return ("retry", "writer")
+        ptok, value = payload
+        if ptok > etok:
+            return ("retry", "stale-word")
+        return ("ok", (value, ptok))
+
+    def read_optimistic(self, p: Process, key: str,
+                        poll: float = 0.0005,
+                        ttl: float = 1.0,
+                        deadline: Optional[float] = None
+                        ) -> Optional[Tuple[object, int]]:
+        """Lease-free untorn snapshot of ``key``'s published payload.
+
+        The seqlock read at the endpoint of the paper's cost hierarchy:
+        read the packed word, read the payload, re-read the word — a
+        stable ``(token, readers, expires)`` word with no intent barrier
+        armed and no live writer proves an untorn snapshot, with **zero**
+        coordination writes.  A home reader touches memory directly (0
+        simulated RDMA ops); a remote reader posts the whole read set as
+        one WR list: **one doorbell, zero CAS** per attempt.
+
+        *Transient* instability (a torn word, a stale-word fence miss)
+        retries in place on the table's seeded exponential backoff up to
+        ``_OPT_ATTEMPTS`` times.  *Blocked* verdicts — a live writer, an
+        armed intent barrier, an inflated (queued) word — cannot clear
+        without writer progress, so the read does NOT spin on them: it
+        degrades once to the bounded shared-lease fallback (join, read,
+        leave — the PR 4 cost shape), and if even that single-CAS join is
+        refused it returns ``None``, the same non-blocking retry contract
+        as :meth:`try_acquire`.  Waiting out a holder belongs at the
+        caller (who can yield), never inside the table.  A takeover
+        tombstone is chased through the forwarding pointer to the key's
+        new home; the stale payload is never returned.
+
+        Returns ``(value, publish_token)`` — ``(None, 0)`` when nothing
+        was ever published — or ``None`` when a writer holds the key
+        *right now* (back off and call again).  The token lets callers
+        order snapshots and reject stale reads downstream, same
+        discipline as lease fencing.
+        """
+        shard = self.shards[self.shard_of(key)]
+        self._deadline_gate("read_optimistic", key, shard, deadline)
+        delay = poll
+        for _ in range(_OPT_ATTEMPTS):
+            # Re-resolve placement every attempt: a tombstone chase (or a
+            # takeover committing mid-loop) swaps the shard's home and key
+            # registers, and the stale _KeyState must not be re-read.
+            shard = self.shards[self.shard_of(key)]
+            st = self._key_state(shard, key)
+            snap = p.counts.as_tuple()
+            verdict, out = "retry", ("fabric",)
+            try:
+                now = self.clock()
+                if p.node == shard.home_host:
+                    w1 = self.mem.read(p, st.expires)
+                    payload = self.mem.read(p, st.payload)
+                    w2 = self.mem.read(p, st.expires)
+                    barrier = self.mem.read(p, st.intent)
+                else:
+                    w1, payload, w2, barrier = self.mem.post_batch(
+                        p, self._opt_read_wrs(st))
+                verdict, out = self._opt_read_verdict(
+                    now, w1, payload, w2, barrier)
+                if verdict == "forward":
+                    # Tombstoned word: decode the forwarding pointer from
+                    # the deposed holder register, then retry against the
+                    # re-homed registers (the placement re-resolve above
+                    # picks them up once the takeover has committed).
+                    fwd = forwarded_home(self.mem.auto_read(p, st.holder))
+                    out = (fwd,)
+            finally:
+                self._account(shard, p, snap, LeaseMode.SHARED)
+            if verdict == "ok":
+                with shard._meta:
+                    shard.opt_reads += 1
+                return out
+            with shard._meta:
+                if verdict == "forward":
+                    shard.opt_read_fwd += 1
+                else:
+                    shard.opt_read_retries += 1
+            if verdict == "forward":
+                continue  # re-resolve immediately: no backoff needed
+            now = self.clock()
+            if deadline is not None and now >= deadline:
+                with shard._meta:
+                    shard.deadline_exceeded += 1
+                raise DeadlineExceeded(
+                    f"read_optimistic of {key!r}: deadline passed")
+            if out in ("writer", "intent", "inflated"):
+                # Blocked on writer progress: spinning here can only end
+                # by expiring the holder's lease (poisonous under the
+                # sim's atomic blocking semantics, wasteful under
+                # threads).  Degrade now; the caller owns the backoff.
+                if out != "inflated":
+                    # A shared join refuses on the exact same live-writer
+                    # / intent check — don't pay a doomed CAS for it.
+                    return None
+                break  # inflated: a shared join may legally ride the queue
+            ctl = self.overload
+            if ctl is not None and p.node != shard.home_host:
+                ctl.spend_retry(shard.home_host)
+            slp = delay * (0.5 + self._rng.random())
+            if deadline is not None:
+                slp = min(slp, max(0.0, deadline - now))
+            self.sleep(slp)
+            delay = min(delay * 2.0, poll * _BACKOFF_CAP_POLLS)
+        with shard._meta:
+            shard.opt_read_fallbacks += 1
+        return self._opt_read_fallback(p, key, ttl)
+
+    def _opt_read_fallback(self, p: Process, key: str, ttl: float
+                           ) -> Optional[Tuple[object, int]]:
+        """Bounded degradation: read the payload under a shared lease.
+
+        The cohort excludes writers for the lease's lifetime, so a single
+        payload register read is untorn by construction; the join/leave
+        pair is the PR 4 shared fast path (one CAS each, zero RDMA for a
+        home reader).  ONE non-blocking join attempt: if the single-CAS
+        shared join is itself refused (live writer, armed intent,
+        inflation drain) the whole read returns ``None`` — retry is the
+        caller's, with the caller's own backoff.  The table never waits
+        out another process's hold on the read path.
+        """
+        lease = self.try_acquire(p, key, ttl, mode=LeaseMode.SHARED)
+        if lease is None:
+            return None
+        shard = self.shards[lease.shard]
+        st = self._key_state(shard, lease.key)
+        snap = p.counts.as_tuple()
+        try:
+            ptok, value = self.mem.auto_read(p, st.payload)
+        finally:
+            self._account(shard, p, snap, LeaseMode.SHARED)
+        self.release(p, lease)
+        return (value, ptok)
+
+    def publish(self, p: Process, lease: Lease, value: object,
+                deadline: Optional[float] = None) -> bool:
+        """Publish ``key``'s optimistic-read payload under the holder's
+        fencing token.
+
+        Only a live EXCLUSIVE holder may publish: the payload register is
+        read then CASed to ``(lease.token, value)``, and the CAS is
+        **fenced** — a payload already carrying a larger token means a
+        newer generation published first (this holder is a zombie), so the
+        write is refused rather than regressing the payload.  Tokens are
+        monotone across publishes, which is the invariant the seqlock
+        readers' staleness check stands on.
+
+        Zero simulated RDMA ops for a home holder (one local read + CAS);
+        two doorbells for a remote one.  Returns ``False`` when fenced out
+        or expired — like ``renew``, the caller must re-acquire.
+        """
+        if lease.mode != LeaseMode.EXCLUSIVE:
+            raise ValueError("publish() takes an EXCLUSIVE lease")
+        shard = self.shards[lease.shard]
+        self._deadline_gate("publish", lease.key, shard,
+                            None if deadline is None
+                            else min(deadline, lease.expires_at))
+        st = self._key_state(shard, lease.key)
+        snap = p.counts.as_tuple()
+        done = False
+        try:
+            if self.clock() >= lease.expires_at:
+                return False
+            cur = self.mem.auto_read(p, st.payload)
+            for _ in range(_FAST_ATTEMPTS):
+                if cur[0] > lease.token:
+                    return False  # fenced: a newer generation published
+                obs = self.mem.auto_cas(p, st.payload, cur,
+                                        (lease.token, value))
+                if obs == cur:
+                    done = True
+                    return True
+                cur = obs
+                self.mem.yield_point()  # lost to another publish: retry
+            return False
+        finally:
+            self._account(shard, p, snap, LeaseMode.EXCLUSIVE)
+            if done:
+                with shard._meta:
+                    shard.publishes += 1
+
+    def attach_pipeline(self, p: Process, client) -> None:
+        """Register ``p``'s :class:`~repro.coord.AsyncClient` so hedged
+        probes issued by ``p`` ride its flushes (see ``_probe``)."""
+        self._pipelines[p.pid] = client
+
     # ------------------------------------------------------ crash recovery
     def reclaim(self, p: Process, lease: Lease,
                 ttl: Optional[float] = None,
@@ -2510,8 +3033,21 @@ class ShardedLockTable:
 
     # --------------------------------------------------------------- batches
     def batch_order(self, keys: Iterable[str]) -> List[str]:
-        """The deadlock-avoidance total order: ``(shard_of(key), key)``."""
-        return sorted(set(keys), key=lambda k: (self.shard_of(k), k))
+        """The deadlock-avoidance total order:
+        ``(shard_of(key) % num_hosts, shard_of(key), key)``.
+
+        Primary-by-**static-home** (the shard's placement-time host,
+        ``shard % num_hosts`` — a pure function of the key, identical in
+        every process, never moved by a takeover), so shard groups homed
+        on the same fabric peer are *adjacent* and ``acquire_batch`` can
+        chain their WR lists into one posting per destination host.  Any
+        total order all clients share preserves deadlock freedom; this one
+        additionally makes the doorbell merge order-compliant.
+        """
+        nh = self.num_hosts
+        return sorted(
+            set(keys),
+            key=lambda k: (self.shard_of(k) % nh, self.shard_of(k), k))
 
     def acquire_batch(self, p: Process, keys: Sequence[str], ttl: float,
                       timeout: Optional[float] = None,
@@ -2558,26 +3094,78 @@ class ShardedLockTable:
         try:
             i, n = 0, len(ordered)
             while i < n:
-                shard = self.shards[self.shard_of(ordered[i])]
+                # One *run*: the maximal span of consecutive shard groups
+                # sharing a (runtime) home host.  The static-home-major
+                # order makes same-home groups adjacent, so an EXCLUSIVE
+                # run transacts them together — the cross-shard-group WR
+                # lists chain into one posting per destination host
+                # instead of one commit doorbell per group.  SHARED mode
+                # keeps per-group processing (CS-free joins have nothing
+                # to merge).
+                home = self.shards[self.shard_of(ordered[i])].home_host
                 j = i + 1
-                while j < n and self.shard_of(ordered[j]) == shard.index:
-                    j += 1
-                group = ordered[i:j]
+                if mode == LeaseMode.EXCLUSIVE:
+                    while (j < n and self.shards[
+                            self.shard_of(ordered[j])].home_host == home):
+                        j += 1
+                else:
+                    sidx = self.shard_of(ordered[i])
+                    while j < n and self.shard_of(ordered[j]) == sidx:
+                        j += 1
+                run_keys = ordered[i:j]
                 start = 0
                 delay = poll
-                while start < len(group):
-                    epoch0 = shard.epoch
-                    granted, blocked = self._acquire_group(
-                        p, shard, group[start:], ttl, mode
-                    )
-                    granted = [g for g in granted
-                               if self._epoch_fence(p, shard, epoch0, g)
-                               is not None]
-                    held.extend(granted)
-                    start += len(granted)
-                    if granted:
+                while start < len(run_keys):
+                    rem = run_keys[start:]
+                    groups: List[Tuple[LockShard, List[str]]] = []
+                    a = 0
+                    while a < len(rem):
+                        sidx = self.shard_of(rem[a])
+                        b = a + 1
+                        while b < len(rem) and self.shard_of(rem[b]) == sidx:
+                            b += 1
+                        groups.append((self.shards[sidx], rem[a:b]))
+                        a = b
+                    epochs = {sh.index: sh.epoch for sh, _ in groups}
+                    if mode == LeaseMode.SHARED or len(groups) == 1:
+                        granted, blocked = self._acquire_group(
+                            p, groups[0][0], groups[0][1], ttl, mode)
+                    else:
+                        granted, blocked = self._acquire_run(p, groups, ttl)
+                    # Epoch fencing, run-aware: grants land as a prefix of
+                    # ``rem``, but the fence discards per *shard* — a
+                    # surviving grant sitting past a discarded one would
+                    # break the held-prefix invariant, so release it and
+                    # resume the retry loop at the first discard.
+                    resume: Optional[int] = None
+                    survivors: List[Tuple[int, Lease]] = []
+                    for gi, g in enumerate(granted):
+                        fenced = self._epoch_fence(
+                            p, self.shards[g.shard], epochs[g.shard], g)
+                        if fenced is None:
+                            if resume is None:
+                                resume = gi
+                        else:
+                            survivors.append((gi, fenced))
+                    if resume is None:
+                        held.extend(g for _gi, g in survivors)
+                        start += len(granted)
+                        progressed = bool(granted)
+                    else:
+                        for gi, g in survivors:
+                            if gi < resume:
+                                held.append(g)
+                            else:
+                                try:
+                                    self.release(p, g)
+                                except RemoteTimeout:
+                                    pass
+                        start += resume
+                        progressed = resume > 0
+                    if progressed:
                         delay = poll  # progress: reset the backoff ladder
-                    if blocked:
+                    if blocked and start < len(run_keys):
+                        shard = self.shards[self.shard_of(run_keys[start])]
                         now = self.clock()
                         # >= not >: see acquire — the clamp can land the
                         # clock exactly on the deadline.
@@ -2586,11 +3174,11 @@ class ShardedLockTable:
                                 shard.deadline_exceeded += 1
                             if explicit:
                                 raise DeadlineExceeded(
-                                    f"batch lease on {group[start]!r}: "
+                                    f"batch lease on {run_keys[start]!r}: "
                                     f"deadline passed")
                             raise TimeoutError(
-                                f"batch lease on {group[start]!r} not granted "
-                                f"in {timeout}s"
+                                f"batch lease on {run_keys[start]!r} not "
+                                f"granted in {timeout}s"
                             )
                         # Same seeded-jitter exponential backoff as
                         # ``acquire`` (see there for the rationale), clamped
@@ -2602,7 +3190,7 @@ class ShardedLockTable:
                         delay = min(delay * 2.0, poll * _BACKOFF_CAP_POLLS)
                 i = j
                 if i < n:
-                    # Between two shard groups: a prefix of the batch is
+                    # Between two host runs: a prefix of the batch is
                     # held; death here abandons it under a dead pid (the
                     # recoverable client's dangling intents drive the
                     # orphan probe on restart).
@@ -2635,10 +3223,74 @@ class ShardedLockTable:
         for lease in leases:
             by_shard.setdefault(lease.shard, []).append(lease)
         released = 0
+        # Cross-shard-group coalescing (the release half of the batch
+        # doorbell fix): exclusive witness CASes carry no ordering
+        # constraint, so every shard group homed on the same REMOTE host
+        # posts its fast-path CASes in ONE doorbell for the whole cluster.
+        by_home: Dict[int, List[int]] = {}
         for sidx in sorted(by_shard):
-            group = by_shard[sidx]
+            by_home.setdefault(self.shards[sidx].home_host, []).append(sidx)
+        for home in sorted(by_home):
+            sidxs = by_home[home]
+            if p.node != home and len(sidxs) > 1:
+                released += self._release_cluster(p, sidxs, by_shard)
+            else:
+                for sidx in sidxs:
+                    released += self._release_group(
+                        p, self.shards[sidx], by_shard[sidx])
+        return released
+
+    def _release_cluster(self, p: Process, sidxs: Sequence[int],
+                         by_shard: Dict[int, List[Lease]]) -> int:
+        """Release several shard groups homed on one remote host: one
+        merged witness-CAS posting for every group's EXCLUSIVE fast path,
+        then the usual per-shard slow/shared settlement for the rest."""
+        excl: List[Tuple[LockShard, Lease, _KeyState]] = []
+        for sidx in sidxs:
             shard = self.shards[sidx]
-            released += self._release_group(p, shard, group)
+            for lease in by_shard[sidx]:
+                if lease.mode == LeaseMode.EXCLUSIVE:
+                    excl.append((shard, lease,
+                                 self._key_state(shard, lease.key)))
+        released = 0
+        slow: Dict[int, List[Lease]] = {}
+        handoffs: List[Tuple[LockShard, _KeyState, Lease]] = []
+        if excl:
+            snap = p.counts.as_tuple()
+            try:
+                observed = self.mem.post_batch(p, [
+                    ("cas", st.expires, lease.witness(),
+                     (lease.token, _enc(0, lease.inflated), _FREE_AT))
+                    for _sh, lease, st in excl
+                ])
+            finally:
+                # Merged posting: accounted to the cluster's first shard
+                # (same host, same class — totals stay exact).
+                self._account(excl[0][0], p, snap, LeaseMode.EXCLUSIVE)
+            nfast: Dict[int, int] = {}
+            for (shard, lease, st), obs in zip(excl, observed):
+                if obs == lease.witness():
+                    nfast[shard.index] = nfast.get(shard.index, 0) + 1
+                    if lease.inflated:
+                        handoffs.append((shard, st, lease))
+                else:
+                    slow.setdefault(shard.index, []).append(lease)
+            for sidx, cnt in nfast.items():
+                with self.shards[sidx]._meta:
+                    self.shards[sidx].fast_releases += cnt
+                released += cnt
+            for shard, st, lease in handoffs:
+                self._inflated_handoff(p, shard, st, lease.key, lease)
+            for sidx in sidxs:
+                if sidx in slow:
+                    released += self._release_group_slow(
+                        p, self.shards[sidx], slow[sidx])
+        for sidx in sidxs:
+            shrd = [l for l in by_shard[sidx]
+                    if l.mode == LeaseMode.SHARED]
+            if shrd:
+                released += self._release_group_shared(
+                    p, self.shards[sidx], shrd)
         return released
 
     def _release_group(self, p: Process, shard: LockShard,
@@ -2889,6 +3541,12 @@ class ShardedLockTable:
                     "sheds": shard.sheds,
                     "hedges": shard.hedges,
                     "deadline_exceeded": shard.deadline_exceeded,
+                    # Optimistic-read (seqlock) counters (PR 10).
+                    "opt_reads": shard.opt_reads,
+                    "opt_read_retries": shard.opt_read_retries,
+                    "opt_read_fallbacks": shard.opt_read_fallbacks,
+                    "opt_read_fwd": shard.opt_read_fwd,
+                    "publishes": shard.publishes,
                     "timeouts": (shard.stats[LOCAL].timeouts
                                  + shard.stats[REMOTE].timeouts),
                     "fabric_retries": (shard.stats[LOCAL].retries

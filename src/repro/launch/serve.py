@@ -91,6 +91,11 @@ class BatchAdmission:
         # rebinding happens through recover().
         self._workers: Dict[str, RecoverableClient] = {}
         self._wlock = threading.Lock()
+        # One async pipeline per server thread (PR 10): anonymous
+        # keepalives ride it, and the table's hedged probes from that
+        # thread share its flush postings.  Kept in a list too, so
+        # stats() can aggregate across threads.
+        self._pipes = []
         #: EXCLUSIVE admissions refused at the gate by the overload layer.
         self.sheds = 0
 
@@ -102,6 +107,18 @@ class BatchAdmission:
         if p is None:
             p = self._tls.p = self.svc.host_process(0)
         return p
+
+    def _pipe(self):
+        # This thread's AsyncClient over the admission table.  On the
+        # default single-host table every op is home-class and resolves
+        # inline (identical semantics, zero RDMA); over a multi-host
+        # service, remote keepalives coalesce into one posting per flush.
+        pl = getattr(self._tls, "pipe", None)
+        if pl is None:
+            pl = self._tls.pipe = self.svc.async_client(self._proc())
+            with self._wlock:
+                self._pipes.append(pl)
+        return pl
 
     def _worker(self, worker: str) -> RecoverableClient:
         with self._wlock:
@@ -255,7 +272,13 @@ class BatchAdmission:
         if worker is not None:
             renewed = self._worker(worker).renew(lease)
         else:
-            renewed = self.svc.renew(self._proc(), lease)
+            # Anonymous keepalives ride the per-thread async pipeline
+            # (PR 10): home renewals resolve inline on the same zero-RDMA
+            # fast path; remote ones ride the next flush as one
+            # witness-CAS WR sharing a doorbell with queued work.
+            pl = self._pipe()
+            renewed = pl.sync(pl.renew(lease))
+            self.svc.note_renewed(self._proc(), lease, renewed)
         if renewed is None:
             raise RuntimeError(
                 f"admission lease on {lease.key} lost (token {lease.token}); "
@@ -300,6 +323,13 @@ class BatchAdmission:
             "hedges": sum(r["hedges"] for r in rows),
             "deadline_exceeded": sum(r["deadline_exceeded"] for r in rows),
             "overload": self.svc.overload_report(),
+            # PR 10 pipeline telemetry, aggregated across server threads.
+            "pipeline_flushes": sum(pl.stats["flushes"]
+                                    for pl in self._pipes),
+            "pipeline_flushed_ops": sum(pl.stats["flushed_ops"]
+                                        for pl in self._pipes),
+            "pipeline_hedge_rides": sum(pl.stats["hedge_rides"]
+                                        for pl in self._pipes),
         }
 
 

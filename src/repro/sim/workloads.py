@@ -99,9 +99,10 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
-from repro.coord import (DEAD, ClientCrash, FaultInjector, HostMembership,
-                         InflationPolicy, LedgerStore, OverloadPolicy,
-                         RecoverableClient, ShardedLockTable, SuspicionPolicy)
+from repro.coord import (DEAD, AsyncClient, ClientCrash, FaultInjector,
+                         HostMembership, InflationPolicy, LedgerStore,
+                         OverloadPolicy, RecoverableClient, ShardedLockTable,
+                         SuspicionPolicy)
 from repro.coord.table import EXCLUSIVE, LOCAL, REMOTE, SHARED, LeaseMode
 from repro.core import DeadlineExceeded, Overloaded, RemoteTimeout
 
@@ -113,7 +114,7 @@ __all__ = ["SIM_WORKLOADS", "KEYS_PER_HOST", "STORM_INTERARRIVAL",
 
 SIM_WORKLOADS = ("home", "uniform", "zipfian", "failover", "read_heavy",
                  "reader_flood", "crash_restart", "home_death", "partition",
-                 "overload_storm")
+                 "overload_storm", "pipelined_read")
 
 KEYS_PER_HOST = 8   # keyspace density; shared with the threaded bench
 # overload_storm base (1x) mean interarrival.  A remote EXCLUSIVE
@@ -155,7 +156,7 @@ class _RunState:
     """
 
     __slots__ = ("per_client", "total", "target", "last_token",
-                 "token_regressions", "zombie_renews",
+                 "token_regressions", "zombie_renews", "reads",
                  "grants_by_mode", "writer_waits",
                  "crashes", "reclaims", "recovery_latencies",
                  "recovery_events", "hot_latencies", "hot_rcas",
@@ -172,6 +173,11 @@ class _RunState:
         self.last_token: Dict[str, int] = {}
         self.token_regressions = 0
         self.zombie_renews = 0
+        # Lease-free optimistic reads completed (PR 10).  They count
+        # toward the ops target and fairness like grants do — each is one
+        # client-visible operation — but carry no lease, so they must not
+        # feed the per-key token-monotonicity check.
+        self.reads = 0
         self.grants_by_mode = {SHARED: 0, EXCLUSIVE: 0}
         self.writer_waits: List[float] = []
         # Crash-recovery accounting (crash_restart workload).
@@ -221,6 +227,12 @@ class _RunState:
             self.token_regressions += 1
         else:
             self.last_token[lease.key] = lease.token
+
+    def read_done(self, idx: int) -> None:
+        """One optimistic read completed (lease-free: no token to check)."""
+        self.per_client[idx] += 1
+        self.total += 1
+        self.reads += 1
 
     def recovered(self, idx: int, latency: float) -> None:
         """One lease recovered after a restart (reclaimed, or re-acquired
@@ -368,6 +380,118 @@ def _mode_mix_client(table, p, rng, pick, st, idx, ttl, write_frac,
         st.granted(idx, lease)
         yield hold
         table.release(p, lease)
+        yield THINK
+
+
+def _opt_mix_client(table, p, rng, pick, st, idx, ttl, write_frac, hold):
+    """The read_heavy client on the optimistic read path (PR 10).
+
+    Same seeded R/W mix as :func:`_mode_mix_client`, but readers go
+    lease-free through ``read_optimistic`` (0 RDMA at home, one doorbell
+    remote, never blocking a writer) and writers publish the payload
+    ``(token, key)`` their readers verify — a returned snapshot whose
+    token or key disagrees is a torn/stale read and fails the run.
+    """
+    backoff = BACKOFF
+    while not st.done():
+        key = pick(rng)
+        if rng.random() < write_frac:
+            lease = table.try_acquire(p, key, ttl)
+            if lease is None:
+                yield backoff * (0.5 + rng.random())
+                backoff = min(backoff * 2, BACKOFF_CAP)
+                continue
+            backoff = BACKOFF
+            st.granted(idx, lease)
+            table.publish(p, lease, (lease.token, key))
+            yield hold
+            table.release(p, lease)
+        else:
+            # poll=BACKOFF: the retry backoff must be on the same scale as
+            # the writers' hold time, or a reader that catches a live
+            # writer oversleeps the whole grant window.  None means a
+            # live writer holds the key right now: back off HERE (the
+            # client may yield; the table may not) and re-issue.
+            got = table.read_optimistic(p, key, poll=BACKOFF)
+            while got is None:
+                yield backoff * (0.5 + rng.random())
+                backoff = min(backoff * 2, BACKOFF_CAP)
+                got = table.read_optimistic(p, key, poll=BACKOFF)
+            backoff = BACKOFF
+            val, tok = got
+            if val is not None and (val[0] != tok or val[1] != key):
+                raise AssertionError(
+                    f"read_heavy/optimistic: torn or stale payload "
+                    f"{val!r} (token {tok}) for key {key!r}")
+            st.read_done(idx)
+            yield hold  # the scan runs on the snapshot, outside any lease
+        yield THINK
+
+
+def _pipelined_read_client(table, pl, rng, st, idx, ttl, per_host, host,
+                           num_hosts, writer, burst):
+    """The pipelined_read client: bursty remote reads through an
+    :class:`~repro.coord.AsyncClient`.
+
+    Readers aim each burst at ONE remote host — ``burst`` keys homed
+    there enqueue as futures and flush as a single mixed posting, so the
+    whole burst costs one doorbell (the aggregate doorbells-per-op < 1
+    gate).  One client per host is the writer: it mutates its OWN host's
+    keys (home class, zero RDMA) and publishes ``(token, key)`` so the
+    readers' torn-read check has live writes to race against; its
+    releases ride the pipeline too.
+    """
+    p = pl.p
+    if writer:
+        keys = per_host[host]
+        backoff = BACKOFF
+        while not st.done():
+            key = rng.choice(keys)
+            lease = table.try_acquire(p, key, ttl)
+            if lease is None:
+                yield backoff * (0.5 + rng.random())
+                backoff = min(backoff * 2, BACKOFF_CAP)
+                continue
+            backoff = BACKOFF
+            st.granted(idx, lease)
+            table.publish(p, lease, (lease.token, key))
+            yield HOLD
+            pl.sync(pl.release(lease))
+            yield THINK
+        return
+    others = [h for h in range(num_hosts) if h != host] or [host]
+    while not st.done():
+        target = rng.choice(others)
+        keys = [rng.choice(per_host[target]) for _ in range(burst)]
+        futs = [[k, pl.read_optimistic(k)] for k in keys]
+        pl.flush()
+        while futs:
+            still = []
+            for ent in futs:
+                key, fut = ent
+                if not fut.done():
+                    still.append(ent)
+                    continue
+                got = fut.result()
+                if got is None:
+                    # A live writer held the key at flush time: re-issue
+                    # the read; it rides the next flush posting.
+                    ent[1] = pl.read_optimistic(key)
+                    still.append(ent)
+                    continue
+                val, tok = got
+                if val is not None and (val[0] != tok or val[1] != key):
+                    raise AssertionError(
+                        f"pipelined_read: torn or stale payload {val!r} "
+                        f"(token {tok}) for key {key!r}")
+                st.read_done(idx)
+            futs = still
+            if futs:
+                # Unstable snapshots re-enqueued a retry (or a re-issue
+                # is queued): give the writer a beat, then flush the
+                # retry posting.
+                yield BACKOFF * (0.5 + rng.random())
+                pl.flush()
         yield THINK
 
 
@@ -878,6 +1002,16 @@ class SimResult:
     storm_late_grants: int
     storm_acquire_p50: float
     storm_acquire_p99: float
+    opt_reads: int
+    opt_read_retries: int
+    opt_read_fallbacks: int
+    opt_read_fwd: int
+    publishes: int
+    reads: int
+    pipeline_flushes: int
+    pipeline_flushed_ops: int
+    pipeline_hedge_rides: int
+    doorbells_per_op: float
     cost: Dict[str, Dict[str, int]]
     mode_cost: Dict[str, Dict[str, int]]
     events: int
@@ -906,6 +1040,8 @@ def run_lock_table_sim(
     write_frac: float = 0.05,
     home_frac: float = 0.8,
     shared_reads: bool = True,
+    read_path: str = "lease",
+    pipeline_flush_ops: int = 8,
     hold: float = HOLD,
     hot_keys: Optional[int] = None,
     failover_ttl: float = 300e-6,
@@ -942,6 +1078,8 @@ def run_lock_table_sim(
     """
     if workload not in SIM_WORKLOADS:
         raise ValueError(f"unknown sim workload {workload!r}")
+    if read_path not in ("lease", "optimistic"):
+        raise ValueError(f"unknown read_path {read_path!r}")
     wall0 = time.perf_counter()
     engine = SimEngine(seed)
     if ttl is None:
@@ -1032,6 +1170,12 @@ def run_lock_table_sim(
                 return hz(rng) if rng.random() < home_frac else global_zipf(rng)
 
             return pick
+    elif workload == "pipelined_read":
+        # Burst targets: each reader aims a whole burst at one remote
+        # host's keys, so the AsyncClient can coalesce it into a single
+        # posting; the per-host writer mutates its own (home-class) keys.
+        per_host = keys_by_home(table, num_hosts, keys_per_host)
+        pick_for = None  # clients draw from per_host directly
     elif workload == "reader_flood":
         pick_for = None  # flood clients share one literal key
     elif workload == "home_death":
@@ -1060,6 +1204,7 @@ def run_lock_table_sim(
 
     nclients = num_hosts * clients_per_host
     st = _RunState(nclients, total_ops)
+    pipes: List[AsyncClient] = []
     st.minority = minority
     st.window = window
     flood_key = universe[0]
@@ -1125,8 +1270,19 @@ def run_lock_table_sim(
             task = _failover_client(table, p, rng, pick_for(host), st, idx,
                                     ttl, crash_prob)
         elif workload == "read_heavy":
-            task = _mode_mix_client(table, p, rng, pick_for(host), st, idx,
-                                    ttl, write_frac, shared_reads, hold)
+            if read_path == "optimistic":
+                task = _opt_mix_client(table, p, rng, pick_for(host), st,
+                                       idx, ttl, write_frac, hold)
+            else:
+                task = _mode_mix_client(table, p, rng, pick_for(host), st,
+                                        idx, ttl, write_frac, shared_reads,
+                                        hold)
+        elif workload == "pipelined_read":
+            pl = AsyncClient(table, p, flush_ops=pipeline_flush_ops)
+            pipes.append(pl)
+            task = _pipelined_read_client(
+                table, pl, rng, st, idx, ttl, per_host, host, num_hosts,
+                idx % clients_per_host == 0, pipeline_flush_ops)
         elif workload == "reader_flood":
             if idx == 0:
                 task = _flood_writer(table, p, rng, st, idx, flood_key, ttl)
@@ -1299,6 +1455,22 @@ def run_lock_table_sim(
                 f"{max(writer_waits):.6f}s vs ttl {ttl}"
             )
 
+    doorbells = (totals[LOCAL].remote_doorbell
+                 + totals[REMOTE].remote_doorbell)
+    doorbells_per_op = doorbells / max(st.total, 1)
+    opt_reads = sum(r["opt_reads"] for r in rows)
+    if workload == "pipelined_read":
+        if not opt_reads:
+            raise AssertionError(
+                "pipelined_read: no optimistic read ever completed")
+        # flush_ops=1 posts every op the moment it is enqueued — that is
+        # the bench's unbatched control leg, exempt from the coalescing
+        # bound it exists to contrast against.
+        if pipeline_flush_ops > 1 and doorbells_per_op >= 1.0:
+            raise AssertionError(
+                f"pipelined_read: {doorbells_per_op:.2f} doorbells/op — "
+                "the pipeline failed to coalesce below one per operation")
+
     orep = table.overload.report() if table.overload is not None else {}
     vsec = engine.clock.now
     return SimResult(
@@ -1402,6 +1574,16 @@ def run_lock_table_sim(
         storm_late_grants=st.late_grants,
         storm_acquire_p50=_pct(st.storm_latencies, 0.50),
         storm_acquire_p99=_pct(st.storm_latencies, 0.99),
+        opt_reads=opt_reads,
+        opt_read_retries=sum(r["opt_read_retries"] for r in rows),
+        opt_read_fallbacks=sum(r["opt_read_fallbacks"] for r in rows),
+        opt_read_fwd=sum(r["opt_read_fwd"] for r in rows),
+        publishes=sum(r["publishes"] for r in rows),
+        reads=st.reads,
+        pipeline_flushes=sum(pl.stats["flushes"] for pl in pipes),
+        pipeline_flushed_ops=sum(pl.stats["flushed_ops"] for pl in pipes),
+        pipeline_hedge_rides=sum(pl.stats["hedge_rides"] for pl in pipes),
+        doorbells_per_op=doorbells_per_op,
         cost={"local": vars(totals[LOCAL]).copy(),
               "remote": vars(totals[REMOTE]).copy()},
         mode_cost={
